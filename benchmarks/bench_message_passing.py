@@ -1,0 +1,115 @@
+"""Paper Fig 13 (MPI / ParRes kernels) — collective microbenchmarks.
+
+Runs the ParRes-analogue kernels on an 8-device host mesh in a subprocess
+(so the main process keeps 1 device):
+
+  p2p      ring exchange via collective-permute (paper: p2p kernel)
+  nstream  axpy over sharded arrays + barrier  (paper: nstream)
+  reduce   all-reduce: flat vs hierarchical vs ring vs compressed
+  stencil  halo exchange via ppermute          (paper: stencil)
+
+Reports wall time per op and the slow-link byte counts of each schedule
+(the quantity Faabric's VM-leader schedule minimises, Fig 9).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_PROG = """
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import collectives as C
+
+mesh = jax.make_mesh((2, 4), ("pod", "data"),
+                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+out = {}
+
+def timeit(f, *args, reps=20):
+    r = jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        r = jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps
+
+n = 1 << 20
+vec = jnp.arange(8 * n, dtype=jnp.float32).reshape(8, n)
+
+# --- p2p ring (collective-permute) ---
+def p2p(x):
+    def body(v):
+        perm = [(i, (i + 1) % 4) for i in range(4)]
+        return jax.lax.ppermute(v, "data", perm)
+    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P(("pod","data")),
+                                 out_specs=P(("pod","data")),
+                                 check_vma=False))(x)
+out["p2p_ring_us"] = timeit(p2p, vec) * 1e6
+
+# --- nstream: axpy + allreduce barrier ---
+def nstream(x):
+    def body(v):
+        v = v * 2.0 + 1.0
+        s = jax.lax.psum(jnp.sum(v), ("pod", "data"))
+        return v + 0.0 * s
+    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P(("pod","data")),
+                                 out_specs=P(("pod","data")),
+                                 check_vma=False))(x)
+out["nstream_us"] = timeit(nstream, vec) * 1e6
+
+# --- reduce: flat vs hierarchical vs ring vs compressed ---
+tree = {"g": vec}
+for mode, frac in (("flat", None), ("hierarchical", None), ("ring", None),
+                   ("compressed", 0.05)):
+    f = jax.jit(C.build_tree_allreduce(mesh, mode=mode, compress_frac=frac))
+    resid = C.init_residual_buffer(mesh, {"g": vec[0]}) \
+        if mode == "compressed" else None
+    t = timeit(lambda v: f({"g": v}, resid)[0]["g"], vec)
+    out[f"allreduce_{mode}_us"] = t * 1e6
+
+# slow-link bytes per schedule (per chip, analytical; Fig 9's quantity)
+bytes_full = n * 4
+out["slowlink_bytes_flat"] = bytes_full          # whole vector crosses
+out["slowlink_bytes_hierarchical"] = bytes_full // 4   # 1/n_fast shard
+out["slowlink_bytes_compressed"] = int(bytes_full // 4 * 0.05 * 2)
+
+# --- stencil: halo exchange ---
+def stencil(x):
+    def body(v):
+        perm_f = [(i, (i + 1) % 4) for i in range(4)]
+        perm_b = [((i + 1) % 4, i) for i in range(4)]
+        left = jax.lax.ppermute(v[:, -128:], "data", perm_f)
+        right = jax.lax.ppermute(v[:, :128], "data", perm_b)
+        mid = v.at[:, :128].add(left).at[:, -128:].add(right)
+        return mid * 0.25
+    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P(("pod","data"), None),
+                                 out_specs=P(("pod","data"), None),
+                                 check_vma=False))(x)
+grid = jnp.ones((8, 4096), jnp.float32)
+out["stencil_us"] = timeit(stencil, grid) * 1e6
+
+print(json.dumps(out))
+"""
+
+
+def run(report):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC
+    res = subprocess.run([sys.executable, "-c", textwrap.dedent(_PROG)],
+                         capture_output=True, text=True, env=env,
+                         timeout=1200)
+    assert res.returncode == 0, res.stderr[-3000:]
+    data = json.loads(res.stdout.strip().splitlines()[-1])
+    for k, v in data.items():
+        unit = "us" if k.endswith("_us") else "bytes/chip"
+        report(k, round(v, 1), unit, "Fig13/Fig9")
+    hier = data["allreduce_hierarchical_us"]
+    flat = data["allreduce_flat_us"]
+    report("hierarchical_vs_flat_speedup", round(flat / hier, 2), "x",
+           "Fig9 two-level schedule")

@@ -1,0 +1,35 @@
+"""Paper Fig 11: cluster-size scaling — 50/100/200/400-job traces on
+16/32/64/128 hosts; makespan + execution-time distribution + the
+centralised-scheduler degradation at 128 hosts.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import simulator as S
+
+
+def run(report):
+    for hosts, njobs in ((16, 50), (32, 100), (64, 200), (128, 400)):
+        jobs = S.generate_trace(njobs, "mpi-compute", seed=hosts)
+        res = S.run_baselines(jobs, hosts=hosts)
+        fa = res["faabric"]
+        report(f"makespan/{hosts}h/faabric", round(fa.makespan, 1), "s",
+               "Fig11a")
+        best_base = min(v.makespan for k, v in res.items() if k != "faabric")
+        worst_base = max(v.makespan for k, v in res.items()
+                         if k != "faabric")
+        report(f"makespan/{hosts}h/best_baseline", round(best_base, 1), "s",
+               "Fig11a")
+        report(f"makespan/{hosts}h/worst_baseline", round(worst_base, 1),
+               "s", "Fig11a")
+        et = np.array(fa.exec_times)
+        report(f"exec/{hosts}h/p25", round(float(np.percentile(et, 25)), 1),
+               "s", "Fig11b")
+        report(f"exec/{hosts}h/p50", round(float(np.percentile(et, 50)), 1),
+               "s", "Fig11b")
+        report(f"exec/{hosts}h/p75", round(float(np.percentile(et, 75)), 1),
+               "s", "Fig11b")
+        report(f"sched_latency/{hosts}h",
+               round(S.SCHED_LATENCY_PER_HOST * hosts * njobs, 1),
+               "s total", "Fig11a centralised-scheduler cost")

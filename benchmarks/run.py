@@ -1,0 +1,54 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``bench,name,value,unit,paper_ref`` CSV lines; ``--only`` selects
+one benchmark; results also land in results/bench.csv.
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import importlib
+import os
+import sys
+import time
+
+BENCHES = [
+    "bench_makespan",         # Fig 10
+    "bench_scaling",          # Fig 11
+    "bench_shared_memory",    # Fig 12
+    "bench_message_passing",  # Fig 13 / Fig 9
+    "bench_migration",        # Fig 14
+]
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results", "bench.csv")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=BENCHES)
+    args = ap.parse_args()
+    rows = []
+    current = ""
+
+    def report(name, value, unit="", note=""):
+        rows.append((current, name, value, unit, note))
+        print(f"{current},{name},{value},{unit},{note}")
+
+    print("bench,name,value,unit,paper_ref")
+    for mod_name in ([args.only] if args.only else BENCHES):
+        current = mod_name
+        mod = importlib.import_module(f"benchmarks.{mod_name}")
+        t0 = time.time()
+        mod.run(report)
+        rows.append((mod_name, "bench_wall", round(time.time() - t0, 1),
+                     "s", ""))
+    os.makedirs(os.path.dirname(os.path.abspath(OUT)), exist_ok=True)
+    with open(OUT, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(["bench", "name", "value", "unit", "paper_ref"])
+        w.writerows(rows)
+    print(f"# wrote {len(rows)} rows to {os.path.abspath(OUT)}")
+
+
+if __name__ == "__main__":
+    main()

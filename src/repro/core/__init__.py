@@ -1,0 +1,3 @@
+"""Faabric-on-TPU core: Granules, snapshots, diff-sync, hierarchical
+collectives, chip-granular scheduling, migration, elasticity, and the
+trace simulator (the paper's primary contribution, adapted per DESIGN.md)."""

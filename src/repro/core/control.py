@@ -1,0 +1,96 @@
+"""Control points (paper §3.2) for the training/serving runtime.
+
+Faabric interrupts applications at syscalls/API calls; a JAX training job's
+natural interruption point is the **step boundary** — the gradient
+all-reduce already synchronises the gang, so it is a barrier control point
+with no in-flight messages (paper §5.2's precondition for migration).
+
+``ControlPointRunner`` is consulted by the runtime loop at every step
+boundary and may emit actions:
+
+    checkpoint   periodic / incremental snapshot
+    migrate      consolidate a fragmented gang (locality)
+    rescale      grow/shrink the data-parallel world (elasticity)
+    recover      gang-restart from the last snapshot after a failure
+
+Straggler mitigation: an EWMA of step times flags steps slower than
+``straggler_factor`` x the moving average; persistent stragglers trigger a
+migrate action (the paper's locality argument applied to slow hosts).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class Action:
+    kind: str                      # checkpoint | migrate | rescale | recover
+    payload: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+class EwmaStragglerDetector:
+    """Flags steps slower than factor x EWMA; K consecutive flags fire."""
+
+    def __init__(self, alpha: float = 0.2, factor: float = 2.0,
+                 patience: int = 3):
+        self.alpha = alpha
+        self.factor = factor
+        self.patience = patience
+        self.ewma: Optional[float] = None
+        self.strikes = 0
+
+    def observe(self, step_time: float) -> bool:
+        if self.ewma is None:
+            self.ewma = step_time
+            return False
+        slow = step_time > self.factor * self.ewma
+        # slow steps do not pollute the baseline estimate
+        if not slow:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * step_time
+            self.strikes = 0
+            return False
+        self.strikes += 1
+        if self.strikes >= self.patience:
+            self.strikes = 0
+            return True
+        return False
+
+
+class ControlPointRunner:
+    """Evaluates triggers at step-boundary control points."""
+
+    def __init__(self, checkpoint_every: int = 100,
+                 straggler: Optional[EwmaStragglerDetector] = None,
+                 failure_probe: Optional[Callable[[], bool]] = None,
+                 elastic_probe: Optional[Callable[[int], Optional[int]]] = None):
+        self.checkpoint_every = checkpoint_every
+        self.straggler = straggler or EwmaStragglerDetector()
+        self.failure_probe = failure_probe
+        self.elastic_probe = elastic_probe
+        self.history: List[Action] = []
+
+    def on_step(self, step: int, step_time: float,
+                world_size: int) -> List[Action]:
+        actions: List[Action] = []
+        if self.failure_probe is not None and self.failure_probe():
+            actions.append(Action("recover", {"step": step}))
+            self._log(actions)
+            return actions          # recovery preempts everything else
+        if self.checkpoint_every and step > 0 \
+                and step % self.checkpoint_every == 0:
+            actions.append(Action("checkpoint", {"step": step}))
+        if self.straggler.observe(step_time):
+            actions.append(Action("migrate", {"reason": "straggler",
+                                              "step": step}))
+        if self.elastic_probe is not None:
+            new_world = self.elastic_probe(world_size)
+            if new_world is not None and new_world != world_size:
+                actions.append(Action("rescale", {"from": world_size,
+                                                  "to": new_world,
+                                                  "step": step}))
+        self._log(actions)
+        return actions
+
+    def _log(self, actions: List[Action]) -> None:
+        self.history.extend(actions)

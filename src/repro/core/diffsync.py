@@ -1,0 +1,176 @@
+"""Byte-wise-diff synchronisation of shared state (paper §4, Table 3).
+
+Faabric tracks writes to shared pages with ``mprotect`` and ships byte-wise
+diffs with *merge operations* back to the main snapshot.  On TPU there is no
+page-fault hook inside an XLA program, so the TPU-native adaptation is
+explicit **chunk-wise diffing**: every state leaf is viewed as a sequence of
+fixed-size chunks (the page analogue); dirty chunks are found by comparing
+against the parent snapshot, and only dirty chunks travel.
+
+Two representations are provided:
+
+* **sparse** (host-side; checkpointing, migration, cross-pod delta sync):
+  per-leaf ``(chunk_idx, payload)`` arrays with dynamic length — exactly the
+  paper's (offset, bytes) diff list;
+* **dense-mask** (jit-side; in-graph reductions): (mask, delta) with static
+  shapes, consumed by the ``kernels.diff_merge`` Pallas kernel.
+
+Merge operations follow Table 3 exactly:
+    sum        A1 = A0 + (B1 - B0)
+    subtract   A1 = A0 - (B0 - B1)
+    multiply   A1 = A0 * (B1 / B0)
+    divide     A1 = A0 / (B0 / B1)
+    overwrite  A1 = B1
+where A0 = main-snapshot value, B0 = child's snapshot-at-fork value,
+B1 = child's value after execution, A1 = merged main value.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+CHUNK = 1024  # elements per chunk (the "page" size of the diff protocol)
+
+MERGE_OPS = ("sum", "subtract", "multiply", "divide", "overwrite")
+
+
+def _as_f64(a):
+    return np.asarray(a, dtype=np.float64)
+
+
+def merge_scalarwise(a0, b0, b1, op: str):
+    """Apply one Table-3 merge op elementwise (host/numpy)."""
+    if op == "overwrite":
+        return np.asarray(b1, dtype=np.asarray(a0).dtype)
+    a0d, b0d, b1d = _as_f64(a0), _as_f64(b0), _as_f64(b1)
+    if op == "sum":
+        out = a0d + (b1d - b0d)
+    elif op == "subtract":
+        out = a0d - (b0d - b1d)
+    elif op == "multiply":
+        with np.errstate(divide="ignore", invalid="ignore"):
+            out = np.where(b0d == 0, a0d, a0d * (b1d / b0d))
+    elif op == "divide":
+        with np.errstate(divide="ignore", invalid="ignore"):
+            out = np.where(b1d == 0, a0d, a0d / (b0d / b1d))
+    else:
+        raise ValueError(op)
+    return out.astype(np.asarray(a0).dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sparse (host-side) diff lists — the migration/checkpoint wire format
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class LeafDiff:
+    """Diff of one state leaf: dirty chunk indices + their new contents."""
+    idx: np.ndarray        # (k,) int32 dirty chunk indices
+    new: np.ndarray        # (k, CHUNK) values after execution (B1)
+    old: np.ndarray        # (k, CHUNK) values at fork (B0); merge ops need it
+    shape: Tuple[int, ...]
+    dtype: Any
+    op: str = "overwrite"
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.idx.nbytes + self.new.nbytes
+                   + (0 if self.op == "overwrite" else self.old.nbytes))
+
+
+def _chunk_view(a: np.ndarray) -> np.ndarray:
+    flat = np.ravel(a)
+    pad = (-flat.size) % CHUNK
+    if pad:
+        flat = np.pad(flat, (0, pad))
+    return flat.reshape(-1, CHUNK)
+
+
+def diff_leaf(old: np.ndarray, new: np.ndarray, op: str = "overwrite"
+              ) -> LeafDiff:
+    """Chunk-wise compare ``new`` against the fork snapshot ``old``."""
+    assert old.shape == new.shape and old.dtype == new.dtype
+    oc, nc = _chunk_view(old), _chunk_view(new)
+    dirty = np.any(oc != nc, axis=1)
+    idx = np.nonzero(dirty)[0].astype(np.int32)
+    return LeafDiff(idx=idx, new=nc[idx].copy(), old=oc[idx].copy(),
+                    shape=old.shape, dtype=old.dtype, op=op)
+
+
+def apply_leaf(main: np.ndarray, d: LeafDiff) -> np.ndarray:
+    """Merge a LeafDiff into the main copy (A0 -> A1, Table 3)."""
+    mc = _chunk_view(main).copy()
+    mc[d.idx] = merge_scalarwise(mc[d.idx], d.old, d.new, d.op)
+    return mc.reshape(-1)[: main.size].reshape(main.shape).astype(main.dtype)
+
+
+def diff_tree(old_tree, new_tree, op: str = "overwrite") -> Dict[str, Any]:
+    """Diff two state pytrees -> {path: LeafDiff} for dirty leaves only."""
+    flat_old = jax.tree_util.tree_flatten_with_path(old_tree)[0]
+    flat_new = jax.tree_util.tree_leaves(new_tree)
+    diffs = {}
+    for (path, o), n in zip(flat_old, flat_new):
+        d = diff_leaf(np.asarray(o), np.asarray(n), op=op)
+        if d.idx.size:
+            diffs[jax.tree_util.keystr(path)] = d
+    return diffs
+
+
+def apply_tree(main_tree, diffs: Dict[str, Any]):
+    """Merge a diff dict into the main pytree; returns the merged tree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(main_tree)
+    out = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        if key in diffs:
+            out.append(apply_leaf(np.asarray(leaf), diffs[key]))
+        else:
+            out.append(np.asarray(leaf))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def diff_nbytes(diffs: Dict[str, Any]) -> int:
+    return sum(d.nbytes for d in diffs.values())
+
+
+# ---------------------------------------------------------------------------
+# Dense-mask (jit-side) diffs — consumed by kernels/diff_merge
+# ---------------------------------------------------------------------------
+def dense_diff(old, new):
+    """jit-able chunk diff: returns (dirty_mask (nchunks,), delta) where
+    delta = new - old (the merge-op payload for op=sum)."""
+    flat_o = jnp.ravel(old)
+    pad = (-flat_o.size) % CHUNK
+    fo = jnp.pad(flat_o, (0, pad)).reshape(-1, CHUNK)
+    fn = jnp.pad(jnp.ravel(new), (0, pad)).reshape(-1, CHUNK)
+    mask = jnp.any(fo != fn, axis=1)
+    return mask, (fn - fo)
+
+
+def dense_merge(main, mask, payload, op: str = "sum"):
+    """Merge a dense-mask diff into ``main`` (jit-able path).
+
+    payload semantics: for op in {sum, subtract}: payload = B1 - B0;
+    for overwrite: payload = B1; multiply/divide: payload = B1 / B0.
+    """
+    flat = jnp.ravel(main)
+    pad = (-flat.size) % CHUNK
+    fm = jnp.pad(flat, (0, pad)).reshape(-1, CHUNK).astype(jnp.float32)
+    p = payload.astype(jnp.float32)
+    if op == "sum":
+        merged = fm + p
+    elif op == "subtract":
+        merged = fm - (-p)  # A1 = A0 - (B0 - B1) = A0 + (B1 - B0)
+    elif op == "multiply":
+        merged = fm * p
+    elif op == "divide":
+        merged = fm / jnp.where(p == 0, 1.0, p)
+    elif op == "overwrite":
+        merged = p
+    else:
+        raise ValueError(op)
+    out = jnp.where(mask[:, None], merged, fm)
+    return out.reshape(-1)[: flat.size].reshape(main.shape).astype(main.dtype)

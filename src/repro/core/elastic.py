@@ -1,0 +1,70 @@
+"""Elastic scaling of the data-parallel world at control points.
+
+Faabric adds/removes Granules when an application's parallelism changes; a
+training job's analogue is growing/shrinking its data-parallel gang while
+keeping the *global* batch size and the loss trajectory unchanged:
+
+* params/optimizer state are placement-independent (replicated or
+  re-factorised over the new mesh) — a snapshot restore onto new shardings;
+* the deterministic data pipeline is keyed by (seed, step), so per-device
+  batch slices re-partition cleanly at any step boundary;
+* growth uses the scheduler to carve a larger sub-mesh; shrink releases
+  chips back to the shared pool (the provider-utilisation story of §2.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import migration
+
+
+def make_dp_mesh(devices: Sequence[Any]) -> Mesh:
+    """1-D data-parallel mesh over an explicit device list (a gang)."""
+    return Mesh(np.asarray(devices), ("data",))
+
+
+def replicated_shardings(state, mesh: Mesh):
+    s = NamedSharding(mesh, P())
+    return jax.tree.map(lambda _: s, state)
+
+
+def batch_shardings(batch, mesh: Mesh):
+    s = NamedSharding(mesh, P("data"))
+    return jax.tree.map(lambda _: s, batch)
+
+
+def reshard_gang(state, new_devices: Sequence[Any]):
+    """Re-factorise a DP gang onto a new device set (grow or shrink).
+
+    Returns (new_state, new_mesh).  State is replicated across the DP gang,
+    so this is a pure placement change — bit-exact by construction.
+    """
+    mesh = make_dp_mesh(new_devices)
+    new_state = migration.migrate_live(state, replicated_shardings(state,
+                                                                   mesh))
+    return new_state, mesh
+
+
+@dataclasses.dataclass
+class ElasticPolicy:
+    """Decides the DP world size from the free-chip signal.
+
+    ``target_free``: leave this many chips for other tenants (the paper's
+    shared-cluster economics); world size snaps to powers of two so the
+    global batch divides evenly.
+    """
+    min_world: int = 1
+    max_world: int = 64
+    target_free: int = 0
+
+    def decide(self, world: int, free_chips: int) -> Optional[int]:
+        budget = world + free_chips - self.target_free
+        new = self.min_world
+        while new * 2 <= min(budget, self.max_world):
+            new *= 2
+        return None if new == world else new

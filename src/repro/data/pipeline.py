@@ -1,0 +1,72 @@
+"""Deterministic, checkpointable synthetic token pipeline.
+
+Every batch is a pure function of ``(seed, step)`` — no iterator state
+beyond the step counter.  This is what makes Faabric-style migration,
+elastic resize and gang restart *bit-exact*: any Granule placed anywhere
+can regenerate exactly the batch slice it owes for step ``s``.
+
+The synthetic distribution is a Zipf-like unigram mix with short-range
+repetition structure so cross-entropy actually decreases during the
+end-to-end examples (a pure-uniform stream would pin the loss at log V).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    vocab: int = 32000
+    seq_len: int = 128
+    global_batch: int = 8
+    zipf_a: float = 1.2
+    repeat_p: float = 0.3          # P[token t copies token t-k]
+    repeat_k: int = 8
+
+
+def _unigram_logits(cfg: DataConfig):
+    ranks = jnp.arange(1, cfg.vocab + 1, dtype=jnp.float32)
+    return -cfg.zipf_a * jnp.log(ranks)
+
+
+def make_batch(cfg: DataConfig, step: int,
+               extras: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Global batch for ``step``; identical for any world layout."""
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    kz, kr, kc = jax.random.split(key, 3)
+    b, s = cfg.global_batch, cfg.seq_len
+    base = jax.random.categorical(
+        kz, _unigram_logits(cfg), shape=(b, s + 1))
+    # overlay copy-structure: with prob repeat_p, token t = token t-k
+    rep = jax.random.bernoulli(kr, cfg.repeat_p, (b, s + 1))
+    shifted = jnp.roll(base, cfg.repeat_k, axis=1)
+    toks = jnp.where(rep, shifted, base).astype(jnp.int32)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    for name, spec in (extras or {}).items():
+        kc, sub = jax.random.split(kc)
+        batch[name] = jax.random.normal(sub, spec.shape, spec.dtype)
+    return batch
+
+
+def shard_slice(batch, rank: int, world: int):
+    """The per-Granule slice of a global batch (rank-addressed, stable
+    across migration: slices depend only on (rank, world))."""
+    def one(x):
+        per = x.shape[0] // world
+        return x[rank * per:(rank + 1) * per]
+    return jax.tree.map(one, batch)
+
+
+@dataclasses.dataclass
+class Cursor:
+    """The *only* pipeline state — goes into every snapshot/checkpoint."""
+    step: int = 0
+
+    def advance(self) -> "Cursor":
+        return Cursor(self.step + 1)

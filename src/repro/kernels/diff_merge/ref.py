@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the diff_merge kernel (Table 3 semantics)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def diff_merge_ref(a0, b0, b1, *, op: str = "sum"):
+    a0f = a0.astype(jnp.float32)
+    b0f = b0.astype(jnp.float32)
+    b1f = b1.astype(jnp.float32)
+    if op == "sum":
+        merged = a0f + (b1f - b0f)
+    elif op == "subtract":
+        merged = a0f - (b0f - b1f)
+    elif op == "multiply":
+        merged = a0f * jnp.where(b0f == 0, 1.0, b1f / b0f)
+    elif op == "divide":
+        merged = a0f / jnp.where(b1f == 0, 1.0,
+                                 jnp.where(b0f == 0, 1.0, b0f / b1f))
+    elif op == "overwrite":
+        merged = b1f
+    else:
+        raise ValueError(op)
+    dirty = jnp.any(b0f != b1f, axis=1, keepdims=True)
+    a1 = jnp.where(dirty, merged, a0f).astype(a0.dtype)
+    return a1, dirty

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the Mamba2 SSD kernel: exact sequential recurrence.
+
+    s_t = exp(dt_t a) s_{t-1} + dt_t x_t B_t^T
+    y_t = C_t . s_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, a, b, c):
+    """x: (B,H,L,P); dt: (B,H,L,1); a: (H,1,1); b,c: (B,L,N)."""
+    bs, h, l, p = x.shape
+    n = b.shape[-1]
+    xf = jnp.moveaxis(x.astype(jnp.float32), 2, 0)        # (L,B,H,P)
+    dtf = jnp.moveaxis(dt.astype(jnp.float32), 2, 0)      # (L,B,H,1)
+    bf = jnp.moveaxis(b.astype(jnp.float32), 1, 0)        # (L,B,N)
+    cf = jnp.moveaxis(c.astype(jnp.float32), 1, 0)
+    af = a[:, 0, 0]                                       # (H,)
+
+    def step(s, inp):
+        xt, dtt, bt, ct = inp                             # (B,H,P),(B,H,1)...
+        da = jnp.exp(dtt[..., 0] * af)                    # (B,H)
+        s = s * da[..., None, None] + jnp.einsum(
+            "bhp,bn,bh->bhpn", xt, bt, dtt[..., 0])
+        y = jnp.einsum("bn,bhpn->bhp", ct, s)
+        return s, y
+
+    s0 = jnp.zeros((bs, h, p, n), jnp.float32)
+    s_fin, ys = jax.lax.scan(step, s0, (xf, dtf, bf, cf))
+    return jnp.moveaxis(ys, 0, 2).astype(x.dtype), s_fin

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the mLSTM kernel: exact per-token recurrence.
+
+    m_t = max(logf_t + m_{t-1}, logi_t)
+    C_t = exp(logf_t + m_{t-1} - m_t) C_{t-1} + exp(logi_t - m_t) v_t k_t^T
+    n_t = ... (same gates on k)
+    h_t = (C_t q_t) / max(|n_t . q_t|, exp(-m_t))      (q scaled by hd^-0.5)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_ref(q, k, v, logi, logf):
+    """q,k,v: (B,H,L,hd); logi/logf: (B,H,L,1)."""
+    bs, h, l, hd = q.shape
+    scale = hd ** -0.5
+    qs = jnp.moveaxis(q.astype(jnp.float32), 2, 0)
+    ks = jnp.moveaxis(k.astype(jnp.float32), 2, 0)
+    vs = jnp.moveaxis(v.astype(jnp.float32), 2, 0)
+    lis = jnp.moveaxis(logi.astype(jnp.float32), 2, 0)[..., 0]
+    lfs = jnp.moveaxis(logf.astype(jnp.float32), 2, 0)[..., 0]
+
+    def step(carry, inp):
+        c, n, m = carry
+        qt, kt, vt, li, lf = inp
+        m_new = jnp.maximum(lf + m, li)
+        fi = jnp.exp(lf + m - m_new)[..., None, None]
+        ii = jnp.exp(li - m_new)[..., None, None]
+        c = fi * c + ii * vt[..., :, None] * kt[..., None, :]
+        n = fi[..., 0] * n + ii[..., 0] * kt
+        num = jnp.einsum("bhde,bhe->bhd", c, qt) * scale
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhe,bhe->bh", n, qt)) * scale,
+                          jnp.exp(-m_new))
+        return (c, n, m_new), num / den[..., None]
+
+    c0 = jnp.zeros((bs, h, hd, hd), jnp.float32)
+    n0 = jnp.zeros((bs, h, hd), jnp.float32)
+    m0 = jnp.full((bs, h), -1e30, jnp.float32)
+    (c, n, m), hs = jax.lax.scan(step, (c0, n0, m0),
+                                 (qs, ks, vs, lis, lfs))
+    return (jnp.moveaxis(hs, 0, 2).astype(q.dtype),
+            (c, n[:, :, None, :], m[:, :, None, None]))

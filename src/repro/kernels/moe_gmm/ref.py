@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused expert-FFN kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def expert_ffn_ref(x, w1, w2, w3, *, act: str = "silu"):
+    """x: (E, M, d); w1/w3: (E, d, ff); w2: (E, ff, d)."""
+    xf = x.astype(jnp.float32)
+    h = jnp.einsum("emd,edf->emf", xf, w1.astype(jnp.float32))
+    if act == "silu":
+        up = jnp.einsum("emd,edf->emf", xf, w3.astype(jnp.float32))
+        h = jax.nn.silu(h) * up
+    else:
+        h = jax.nn.gelu(h)
+    y = jnp.einsum("emf,efd->emd", h, w2.astype(jnp.float32))
+    return y.astype(x.dtype)

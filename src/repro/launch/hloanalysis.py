@@ -1,0 +1,157 @@
+"""HLO-text analysis for the roofline: HBM-byte estimation and per-kind
+collective byte counts from the SPMD-partitioned (per-device) module.
+
+``cost_analysis()['bytes accessed']`` on the CPU backend counts every
+un-fused elementwise op — traffic a TPU compile would fuse away — inflating
+the memory term ~20x.  ``analyze`` instead models **perfect fusion**: all
+fusable ops (elementwise chains, broadcasts, converts, CPU micro-fusions)
+are coalesced into clusters via union-find, and HBM traffic is counted only
+on edges that cross a cluster boundary or touch a genuinely
+memory-resident op (dot/conv/reduce-window/scatter/collective/parameter).
+Slices/gathers read only their result region.  This approximates TPU
+HloCostAnalysis-with-fusion semantics; it is an estimate, and is documented
+as such in EXPERIMENTS.md §Roofline.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+# ops that are NEVER fused away on TPU: their operands/results hit HBM
+MATERIAL = {
+    "dot", "convolution", "reduce-window", "scatter",
+    "dynamic-update-slice", "sort", "rng", "custom-call", "while",
+    "conditional", "parameter", "all-gather", "all-reduce",
+    "reduce-scatter", "all-to-all", "collective-permute", "cholesky",
+    "triangular-solve", "fft",
+}
+# consumers that read only their result-sized region of the operand
+REGION_READERS = {"slice", "dynamic-slice", "gather", "get-tuple-element"}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE = re.compile(r"(\w+)\[([\d,]*)\](?:\{[\d,]*\})?")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w.\-]+|[\w.\-]+)\s*=\s*"
+    r"((?:\([^=]*?\))|(?:\w+\[[\d,]*\](?:\{[\d,]*\})?))\s+"
+    r"([\w\-]+)\((.*)", )
+_OPERAND = re.compile(r"%[\w.\-]+|\b[\w\-]+\.\d+\b")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(text):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = DTYPE_BYTES[dt]
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _operands(rest: str) -> List[str]:
+    depth, buf = 1, ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        buf += ch
+    # strip literal braces (constants) to avoid matching numbers
+    buf = re.sub(r"\{[^}]*\}", "", buf)
+    return [o.lstrip("%") for o in _OPERAND.findall(buf)]
+
+
+class _UF:
+    def __init__(self):
+        self.p: Dict[str, str] = {}
+
+    def find(self, x: str) -> str:
+        p = self.p
+        while p.setdefault(x, x) != x:
+            p[x] = p[p[x]]
+            x = p[x]
+        return x
+
+    def union(self, a: str, b: str) -> None:
+        self.p[self.find(a)] = self.find(b)
+
+
+def analyze(hlo: str) -> Dict[str, int]:
+    """One pass over the HLO text; returns byte tallies."""
+    nodes: Dict[str, Tuple[str, int, List[str]]] = {}
+    order: List[str] = []
+    in_entry = False
+    for line in hlo.splitlines():
+        # only the ENTRY computation: fusion bodies are counted at their
+        # call sites, reducer/body computations are implementation detail
+        if line.startswith("ENTRY "):
+            in_entry = True
+            continue
+        if line and not line[0].isspace():
+            in_entry = False
+            continue
+        if not in_entry:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, shapes, opcode, rest = m.groups()
+        name = name.lstrip("%")
+        nodes[name] = (opcode, _shape_bytes(shapes), _operands(rest))
+        order.append(name)
+
+    fusable = lambda op: op not in MATERIAL and op not in REGION_READERS
+    uf = _UF()
+    for name in order:
+        opcode, rb, ops = nodes[name]
+        if not fusable(opcode):
+            continue
+        for o in ops:
+            if o in nodes and fusable(nodes[o][0]):
+                uf.union(name, o)
+
+    out = {k: 0 for k in COLLECTIVES}
+    hbm = 0
+    consumed_cross: set = set()       # tensors materialized for a consumer
+    read_edges: set = set()           # (tensor, consumer_cluster)
+    for name in order:
+        opcode, rb, ops = nodes[name]
+        if opcode in COLLECTIVES:
+            out[opcode] += rb
+        if opcode in REGION_READERS:
+            hbm += 2 * rb             # read region + write result
+            consumed_cross.update(o for o in ops if o in nodes)
+            continue
+        if opcode in ("while", "conditional", "parameter", "constant"):
+            continue
+        my_cluster = uf.find(name) if fusable(opcode) else name
+        for o in ops:
+            if o not in nodes:
+                continue
+            o_op, o_rb, _ = nodes[o]
+            o_cluster = uf.find(o) if fusable(o_op) else o
+            if o_cluster == my_cluster:
+                continue              # fused edge: free
+            consumed_cross.add(o)
+            if (o, my_cluster) not in read_edges:
+                read_edges.add((o, my_cluster))
+                hbm += o_rb           # cluster reads the tensor once
+    # writes: every tensor read across a cluster boundary was materialized
+    for o in consumed_cross:
+        hbm += nodes[o][1]
+    out["collective_bytes"] = sum(out[k] for k in COLLECTIVES)
+    out["hbm_bytes"] = hbm
+    return out

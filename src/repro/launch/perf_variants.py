@@ -1,0 +1,75 @@
+import os
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+"""§Perf hillclimb driver: compile config variants of the three chosen
+cells and record the roofline-term deltas (results/perf_iterations.json).
+
+Variants per cell:
+  baseline      paper-faithful reference path (f32 TP reductions)
+  bf16_reduce   row-parallel partial sums in bf16 (iteration #7)
+"""
+import json
+import time
+
+import jax
+
+from repro.configs.base import SHAPES
+from repro.launch import dryrun as dr
+from repro.launch import hloanalysis
+
+CELLS = [
+    ("llama3.2-1b", "train_4k"),
+    ("granite-moe-1b-a400m", "train_4k"),
+    ("xlstm-1.3b", "train_4k"),
+]
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                   "results", "perf_iterations.json")
+
+
+def measure(arch: str, shape_name: str, **overrides):
+    """Difference-method analysis measurement with config overrides."""
+    shape = SHAPES[shape_name]
+    mesh = dr.make_production_mesh()
+    cfg = dr.dryrun_config(arch, deploy=False).with_(**overrides)
+    period_len = len(cfg.period())
+    n_per = cfg.n_periods()
+    ms = []
+    for k in (1, 2):
+        cfg_k = cfg.with_(n_layers=period_len * k)
+        compiled, _, _ = dr._compile(cfg_k, shape, mesh)
+        cost = compiled.cost_analysis()
+        ana = hloanalysis.analyze(compiled.as_text())
+        ms.append((float(cost.get("flops", 0.0)), ana))
+        del compiled
+    extrap = lambda a, b: max(0.0, a + (n_per - 1) * (b - a))
+    flops = extrap(ms[0][0], ms[1][0])
+    coll = {k: extrap(ms[0][1][k], ms[1][1][k]) for k in ms[1][1]}
+    rl = dr.roofline({"flops": flops}, coll, cfg, shape, mesh.devices.size)
+    return rl
+
+
+def main():
+    results = {}
+    for arch, shape in CELLS:
+        for name, overrides in (("baseline", {}),
+                                ("bf16_tp_reduce", {"bf16_tp_reduce": True})):
+            t0 = time.time()
+            rl = measure(arch, shape, **overrides)
+            key = f"{arch}/{shape}/{name}"
+            results[key] = {
+                "terms_s": rl["terms_s"],
+                "bottleneck": rl["bottleneck"],
+                "roofline_fraction": rl["roofline_fraction"],
+                "collective_bytes": rl["per_device"]["collective_bytes"],
+                "measure_s": round(time.time() - t0, 1),
+            }
+            print(key, json.dumps(results[key]))
+    os.makedirs(os.path.dirname(os.path.abspath(OUT)), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

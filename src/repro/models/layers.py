@@ -1,0 +1,172 @@
+"""Shared neural-net layers: norms, RoPE, MLPs, initialisers.
+
+Pure-JAX (no flax): params are nested dicts of jnp arrays; every function is
+``f(params, x, ...) -> y``.  All matmuls accumulate in f32 via
+``preferred_element_type`` so bf16 params train stably.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    """Truncated-normal fan-in init (matches common LM init)."""
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def rms_norm(w, x, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(params, x, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["w"].astype(jnp.float32)
+            + params["b"].astype(jnp.float32)).astype(x.dtype)
+
+
+def matmul(x, w):
+    """bf16 matmul with f32 accumulation (MXU-native on TPU)."""
+    return jax.lax.dot_general(
+        x, w, (((x.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def matmul_rp(x, w, cfg=None):
+    """Row-parallel matmul (contraction dim TP-sharded -> partial sums are
+    all-reduced).  With ``cfg.bf16_tp_reduce`` the partial sums stay bf16,
+    halving the TP all-reduce bytes (each shard still accumulates f32
+    inside the MXU); otherwise identical to ``matmul``."""
+    if cfg is not None and cfg.bf16_tp_reduce and x.dtype == jnp.bfloat16:
+        return jax.lax.dot_general(
+            x, w, (((x.ndim - 1,), (0,)), ((), ())))
+    return matmul(x, w)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    angles = angles[..., None, :]                       # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def init_mlp(key, d_model, d_ff, act, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w1": dense_init(k1, (d_model, d_ff), dtype),
+         "w2": dense_init(k2, (d_ff, d_model), dtype)}
+    if act == "silu":  # SwiGLU: gate + up
+        p["w3"] = dense_init(k3, (d_model, d_ff), dtype)
+    return p
+
+
+def mlp(params, x, act: str, cfg=None):
+    h = matmul(x, params["w1"])
+    if act == "silu":
+        h = jax.nn.silu(h) * matmul(x, params["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    return matmul_rp(h, params["w2"], cfg)
+
+
+def softmax_xent(logits, labels, vocab: int):
+    """Mean next-token cross-entropy in f32; labels==-1 masked out."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    losses = lse - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(losses * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+XENT_CHUNK = 512  # sequence chunk of the fused unembed+loss
+
+
+def fused_unembed_xent(x, head, labels, chunk: int = XENT_CHUNK):
+    """Cross-entropy fused with the unembedding matmul, chunked over the
+    *sequence* axis with rematerialisation.
+
+    Never materialises the (B, S, V) logits tensor: each checkpointed chunk
+    computes (B, chunk, V) logits, reduces them to per-token losses, and the
+    backward pass recomputes that chunk's logits on the fly.  Sequence is
+    unsharded (batch carries DP; vocab carries TP), so chunk slicing is
+    local on every device.  This is the standard large-vocab memory
+    optimisation (the (B,S,V) f32 buffer dominates HBM otherwise).
+    """
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+
+    @jax.checkpoint
+    def piece(xc, lc):
+        logits = jax.lax.dot_general(
+            xc, head, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        return jnp.sum((lse - gold) * mask), jnp.sum(mask)
+
+    total = jnp.zeros((), jnp.float32)
+    count = jnp.zeros((), jnp.float32)
+    for s0 in range(0, s, chunk):
+        t, c = piece(x[:, s0:s0 + chunk], labels[:, s0:s0 + chunk])
+        total += t
+        count += c
+    return total / jnp.maximum(count, 1.0)
+
+
+def fused_unembed_xent_scan(x, head, labels, chunk: int = XENT_CHUNK):
+    """Deploy-mode twin of fused_unembed_xent: lax.scan over seq chunks."""
+    b, s, d = x.shape
+    chunk = min(chunk, s)
+    nc = s // chunk
+    xs = jnp.moveaxis(x.reshape(b, nc, chunk, d), 1, 0)
+    ls = jnp.moveaxis(labels.reshape(b, nc, chunk), 1, 0)
+
+    @jax.checkpoint
+    def piece(xc, lc):
+        logits = jax.lax.dot_general(
+            xc, head, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1)[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        return jnp.sum((lse - gold) * mask), jnp.sum(mask)
+
+    def body(carry, inp):
+        t, c = piece(*inp)
+        return (carry[0] + t, carry[1] + c), None
+
+    (total, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xs, ls))
+    return total / jnp.maximum(count, 1.0)

@@ -1,0 +1,268 @@
+"""Unified model API: ``build(cfg)`` returns init / loss / train_step /
+prefill_step / serve_step plus shape specs for every assigned input shape.
+
+This is the single entry point used by the launcher, the dry-run, the
+runtime loops, the benchmarks and the tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.models import transformer as tf
+from repro.models.layers import (fused_unembed_xent, fused_unembed_xent_scan,
+                                 softmax_xent)
+from repro.optim import adamw
+
+# zamba2's shared attention block uses this sliding window for the
+# long_500k shape (sub-quadratic adaptation, DESIGN.md §4).
+LONG_CONTEXT_WINDOW = 4096
+
+
+# ---------------------------------------------------------------------------
+# Parameter counting (exact: derived from init shapes via eval_shape)
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=64)
+def _param_shapes(cfg: ArchConfig):
+    return jax.eval_shape(lambda k: tf.init_params(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def count_params(cfg: ArchConfig, active_only: bool = False) -> int:
+    shapes = _param_shapes(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    total = 0
+    for path, leaf in flat:
+        n = leaf.size
+        if active_only and cfg.n_experts:
+            keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+            if "moe" in keys and any(k in ("w1", "w2", "w3") for k in keys):
+                n = n * cfg.top_k // cfg.n_experts
+        total += n
+    return int(total)
+
+
+# ---------------------------------------------------------------------------
+# Batch context plumbing
+# ---------------------------------------------------------------------------
+def _ctx_from_batch(cfg, batch, **extra):
+    ctx = dict(extra)
+    if cfg.family == "audio":
+        ctx["frames"] = batch["frames"]
+    if cfg.family == "vlm":
+        ctx["img"] = batch["img"]
+    return ctx
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+def init_train_state(key, cfg: ArchConfig, opt_cfg: adamw.AdamWConfig):
+    params = tf.init_params(key, cfg)
+    return {"params": params, "opt": adamw.init(params)}
+
+
+def make_loss_fn(cfg: ArchConfig) -> Callable:
+    xent_fn = (fused_unembed_xent_scan if cfg.deploy
+               else fused_unembed_xent)
+
+    def loss_fn(params, batch):
+        ctx = _ctx_from_batch(cfg, batch, return_hidden=True)
+        hidden, aux, _ = tf.forward(params, batch["tokens"], cfg, ctx)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        xent = xent_fn(hidden, head, batch["labels"])
+        loss = xent + aux
+        return loss, {"loss": loss, "xent": xent, "aux_loss": aux}
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                    grad_accum: int = 1, grad_pspecs=None,
+                    batch_pspecs=None) -> Callable:
+    """(state, batch) -> (state, metrics).
+
+    ``grad_accum`` splits the global batch into that many microbatches,
+    accumulating grads in f32 (unrolled loop: exact HLO FLOP accounting).
+    ``grad_pspecs``: optional PartitionSpec tree pinning the accumulator's
+    sharding to the params' (the scan carry otherwise risks replication).
+    ``batch_pspecs``: PartitionSpec tree of the incoming batch; pins the
+    microbatch stack to (None, *batch_spec) — otherwise GSPMD may split the
+    data axis across the accumulation dimension.
+    """
+    loss_fn = make_loss_fn(cfg)
+    gfn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def _constrain(grads):
+        if grad_pspecs is None:
+            return grads
+        return jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s), grads,
+            grad_pspecs)
+
+    def accum_unrolled(params, batch):
+        b = batch["tokens"].shape[0]
+        mb = b // grad_accum
+        grads = metrics = None
+        for i in range(grad_accum):
+            sl = jax.tree.map(lambda x: x[i * mb:(i + 1) * mb], batch)
+            (_, m), g = gfn(params, sl)
+            g = jax.tree.map(lambda a: a.astype(jnp.float32), g)
+            grads = g if grads is None else jax.tree.map(jnp.add, grads, g)
+            metrics = m if metrics is None else jax.tree.map(
+                jnp.add, metrics, m)
+        return grads, metrics
+
+    def accum_scan(params, batch):
+        # deploy mode: microbatch loop as lax.scan (buffer reuse)
+        def split(x):
+            b = x.shape[0]
+            return x.reshape(grad_accum, b // grad_accum, *x.shape[1:])
+        mbs = jax.tree.map(split, batch)
+        if batch_pspecs is not None:
+            from jax.sharding import PartitionSpec as P
+            mbs = jax.tree.map(
+                lambda x, spec: jax.lax.with_sharding_constraint(
+                    x, P(None, *tuple(spec))),
+                mbs, batch_pspecs)
+        zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+
+        def body(carry, mb):
+            grads, metrics = carry
+            (_, m), g = gfn(params, mb)
+            grads = jax.tree.map(
+                lambda a, b_: a + b_.astype(jnp.float32), grads, g)
+            grads = _constrain(grads)
+            metrics = jax.tree.map(jnp.add, metrics, m)
+            return (grads, metrics), None
+
+        zero_m = {"loss": 0.0, "xent": 0.0, "aux_loss": 0.0}
+        zero_m = jax.tree.map(lambda x: jnp.zeros((), jnp.float32), zero_m)
+        (grads, metrics), _ = jax.lax.scan(body, (zero_g, zero_m), mbs)
+        return grads, metrics
+
+    def train_step(state, batch):
+        params = state["params"]
+        if grad_accum == 1:
+            (_, metrics), grads = gfn(params, batch)
+        else:
+            accum = accum_scan if cfg.deploy else accum_unrolled
+            grads, metrics = accum(params, batch)
+            grads = jax.tree.map(lambda a: a / grad_accum, grads)
+            metrics = jax.tree.map(lambda a: a / grad_accum, metrics)
+        new_params, new_opt, om = adamw.apply(grads, state["opt"], params,
+                                              opt_cfg)
+        return {"params": new_params, "opt": new_opt}, {**metrics, **om}
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Inference
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ArchConfig, window: int = 0) -> Callable:
+    """(params, batch) -> (last_logits (B,1,V), decode states).
+
+    Unembeds ONLY the last position — the (B, S, V) logits tensor of a 32k
+    prefill would otherwise dominate HBM (§Perf)."""
+    def prefill_step(params, batch):
+        ctx = _ctx_from_batch(cfg, batch, collect_state=True, window=window,
+                              return_hidden=True)
+        hidden, _, states = tf.forward(params, batch["tokens"], cfg, ctx)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        logits = jax.lax.dot_general(
+            hidden[:, -1:], head, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return logits, states
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig, window: int = 0) -> Callable:
+    """(params, states, tokens (B,1), positions (B,1)) ->
+    (logits (B,1,V), new states)."""
+    def serve_step(params, states, tokens, positions):
+        return tf.decode_step(params, tokens, states, positions, cfg,
+                              {"window": window})
+    return serve_step
+
+
+def decode_window(cfg: ArchConfig, shape: ShapeConfig) -> int:
+    """Sliding window used by attention blocks for this (arch, shape)."""
+    if shape.name == "long_500k" and cfg.family == "hybrid":
+        return LONG_CONTEXT_WINDOW
+    return cfg.window if shape.name == "long_500k" else 0
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct input specs for every (arch x shape) cell
+# ---------------------------------------------------------------------------
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig,
+                with_labels: bool = True) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    specs = {"tokens": sds((b, s), jnp.int32)}
+    if with_labels:
+        specs["labels"] = sds((b, s), jnp.int32)
+    if cfg.family == "audio":
+        specs["frames"] = sds((b, cfg.enc_seq, cfg.d_model), cfg.param_dtype())
+    if cfg.family == "vlm":
+        specs["img"] = sds((b, cfg.n_img_tokens, cfg.d_model),
+                           cfg.param_dtype())
+    return specs
+
+
+def train_state_specs(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig):
+    return jax.eval_shape(
+        lambda k: init_train_state(k, cfg, opt_cfg),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def param_specs(cfg: ArchConfig):
+    return _param_shapes(cfg)
+
+
+def decode_state_specs(cfg: ArchConfig, shape: ShapeConfig):
+    window = decode_window(cfg, shape)
+    return jax.eval_shape(
+        lambda: tf.init_decode_state(cfg, shape.global_batch, shape.seq_len,
+                                     cfg.param_dtype(), window=window))
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig):
+    b = shape.global_batch
+    sds = jax.ShapeDtypeStruct
+    return {"tokens": sds((b, 1), jnp.int32),
+            "positions": sds((b, 1), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# build(): one object carrying everything the launcher needs
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ArchConfig
+    init_params: Callable
+    init_train_state: Callable
+    loss_fn: Callable
+    make_train_step: Callable
+    make_prefill_step: Callable
+    make_serve_step: Callable
+
+
+def build(cfg: ArchConfig) -> ModelAPI:
+    return ModelAPI(
+        cfg=cfg,
+        init_params=functools.partial(tf.init_params, cfg=cfg),
+        init_train_state=functools.partial(init_train_state, cfg=cfg),
+        loss_fn=make_loss_fn(cfg),
+        make_train_step=functools.partial(make_train_step, cfg),
+        make_prefill_step=functools.partial(make_prefill_step, cfg),
+        make_serve_step=functools.partial(make_serve_step, cfg),
+    )

@@ -1,0 +1,249 @@
+"""Parameter/batch/state PartitionSpecs for the production meshes.
+
+Rules are path-based and divisibility-aware: a dim is sharded over the
+``model`` axis only when the logical structure allows it (e.g. KV-head
+projections replicate when n_kv_heads < TP, as in MaxText); everything else
+falls back to replication rather than relying on GSPMD to guess.
+
+FSDP (ZeRO-3 style): when ``cfg.fsdp`` is set, the largest remaining
+unsharded dim of every large param is additionally sharded over the
+``data`` axis (within-pod only — cross-pod parameter gathering would ride
+the slow DCI links, so pods keep full replicas; this is the sharding-level
+expression of the paper's locality principle).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+def dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _keys_of(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        k = getattr(p, "key", None)
+        if k is None:
+            k = getattr(p, "name", None)
+        if k is None and hasattr(p, "idx"):
+            k = str(p.idx)
+        out.append(str(k))
+    return tuple(out)
+
+
+def _logical_rule(keys: Tuple[str, ...], shape: Tuple[int, ...],
+                  cfg: ArchConfig, tp: int) -> Tuple[Optional[str], ...]:
+    """PartitionSpec entries for the *logical* (unstacked) param."""
+    name = keys[-1]
+    parent = keys[-2] if len(keys) >= 2 else ""
+    div = lambda n: n % tp == 0
+    rep = (None,) * len(shape)
+
+    if name == "embed":
+        if div(cfg.vocab):
+            return ("model", None)
+        return (None, "model") if div(cfg.d_model) else rep
+    if name == "lm_head":
+        if div(cfg.vocab):
+            return (None, "model")
+        return ("model", None) if div(cfg.d_model) else rep
+
+    # attention: shard the head dim when it divides TP; otherwise shard
+    # the FLAT (H*hd) dim when that divides — the weights and optimizer
+    # state stay distributed and GSPMD reshards the (small) activations at
+    # the head reshape (llama3b 24H, whisper 12H, GQA kv<16).
+    if name in ("wq",) and parent in ("attn", "xattn"):
+        return (None, "model") if (div(cfg.n_heads)
+                                   or div(shape[-1])) else rep
+    if name in ("wk", "wv") and parent in ("attn", "xattn"):
+        return (None, "model") if (div(cfg.n_kv_heads)
+                                   or div(shape[-1])) else rep
+    if name == "wo" and parent in ("attn", "xattn"):
+        return ("model", None) if (div(cfg.n_heads)
+                                   or div(shape[0])) else rep
+
+    # dense mlp
+    if parent == "mlp" and name in ("w1", "w3"):
+        return (None, "model") if div(shape[-1]) else rep
+    if parent == "mlp" and name == "w2":
+        return ("model", None) if div(shape[0]) else rep
+
+    # MoE (expert parallelism over the model axis)
+    if parent == "moe" and name in ("w1", "w2", "w3"):
+        return ("model", None, None) if div(cfg.n_experts) else rep
+    if parent == "moe" and name == "router":
+        return rep
+
+    # Mamba2
+    if parent == "mamba":
+        d_inner = cfg.ssm_expand * cfg.d_model
+        h = d_inner // cfg.ssm_headdim
+        if name in ("in_z", "in_x"):
+            return (None, "model") if div(d_inner) else rep
+        if name == "in_dt":
+            return (None, "model") if div(h) else rep
+        if name == "conv_x":
+            return (None, "model") if div(d_inner) else rep
+        if name in ("dt_bias", "a_log", "d_skip"):
+            return ("model",) if div(h) else rep
+        if name == "norm_w":
+            return ("model",) if div(d_inner) else rep
+        if name == "out_proj":
+            return ("model", None) if div(d_inner) else rep
+        return rep                      # in_b/in_c/conv_b/conv_c
+
+    # mLSTM
+    if parent == "mlstm":
+        du = int(cfg.xlstm_proj_factor * cfg.d_model)
+        hd = du // cfg.n_heads
+        if name in ("up_x", "up_z", "conv_w"):
+            return (None, "model") if div(du) else rep
+        if name in ("wq", "wk"):
+            # shard on hd_k: score matrices psum (B,q,q,H — small) instead
+            # of gathering (B,S,H,hd) activations per chunk (§Perf #9)
+            return (None, None, "model") if div(hd) else rep
+        if name == "wv":
+            return (None, None, "model") if div(hd) else rep
+        if name in ("skip", "norm_w"):
+            return ("model",) if div(du) else rep
+        if name == "down":
+            return ("model", None) if div(du) else rep
+        return rep                      # wq/wk/wi/wf/bi/bf
+
+    # sLSTM: scanned recurrence, small — replicate
+    return rep
+
+
+def _with_fsdp(spec: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+               dp: int, min_size: int = 2 ** 16) -> Tuple[Optional[str], ...]:
+    """Shard the largest unsharded dim over 'data' if divisible."""
+    if int(np.prod(shape)) < min_size or "data" in spec:
+        return spec
+    best, best_dim = None, 0
+    for i, (s, d) in enumerate(zip(spec, shape)):
+        if s is None and d % dp == 0 and d > best_dim:
+            best, best_dim = i, d
+    if best is None:
+        return spec
+    out = list(spec)
+    out[best] = "data"
+    return tuple(out)
+
+
+def param_pspecs(cfg: ArchConfig, param_shapes, mesh: Mesh):
+    """Pytree of PartitionSpec matching the params structure."""
+    tp = mesh.shape.get("model", 1)
+    dp = mesh.shape.get("data", 1)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(param_shapes)
+    specs = []
+    for path, leaf in flat:
+        keys = _keys_of(path)
+        stacked = keys[0] in ("blocks", "encoder")
+        shape = tuple(leaf.shape)
+        logical = shape[1:] if stacked else shape
+        spec = _logical_rule(keys, logical, cfg, tp)
+        if cfg.fsdp and dp > 1:
+            full = ((None,) + spec) if stacked else spec
+            full_shape = shape
+            spec = _with_fsdp(full, full_shape, dp)
+            specs.append(P(*spec))
+            continue
+        if stacked:
+            spec = (None,) + spec
+        specs.append(P(*spec))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def state_pspecs(cfg: ArchConfig, state_shapes, mesh: Mesh):
+    """Train-state specs.
+
+    Optimizer moments additionally shard over ``data`` (ZeRO-1): unlike
+    FSDP'd *weights* they are touched once per step at the update, so
+    there is no per-layer gather for XLA to hoist; the update itself runs
+    sharded and new params all-gather once.  This is what keeps the
+    9B-class train cells inside 16 GB without blanket FSDP."""
+    pspecs = param_pspecs(cfg, state_shapes["params"], mesh)
+    dp = mesh.shape.get("data", 1)
+    flat_p, treedef = jax.tree_util.tree_flatten(pspecs)
+    flat_s = jax.tree_util.tree_leaves(state_shapes["params"])
+    opt_specs = []
+    for spec, leaf in zip(flat_p, flat_s):
+        full = tuple(spec) + (None,) * (len(leaf.shape) - len(tuple(spec)))
+        opt_specs.append(P(*_with_fsdp(full, tuple(leaf.shape), dp))
+                         if dp > 1 else spec)
+    ospecs = jax.tree_util.tree_unflatten(treedef, opt_specs)
+    return {"params": pspecs,
+            "opt": {"m": ospecs, "v": ospecs, "step": P()}}
+
+
+def _dp_if_divisible(mesh: Mesh, batch: int):
+    dpx = dp_axes(mesh)
+    n = int(np.prod([mesh.shape[a] for a in dpx])) if dpx else 1
+    return dpx if (n > 1 and batch % n == 0) else ()
+
+
+def batch_pspecs(cfg: ArchConfig, batch_shapes, mesh: Mesh):
+    out = {}
+    for k, v in batch_shapes.items():
+        dpx = _dp_if_divisible(mesh, v.shape[0])
+        out[k] = P(dpx, *([None] * (len(v.shape) - 1)))
+    return out
+
+
+def decode_state_pspecs(cfg: ArchConfig, state_shapes, mesh: Mesh):
+    """Specs for stacked decode states (leading dim = n_periods).
+
+    KV caches shard batch over dp and kv-heads over model when divisible;
+    with kv < TP the cache *sequence* dim shards over model instead
+    (flash-decoding style: XLA distributes the softmax over key shards).
+    SSM/xLSTM states shard their head/value dims over model.
+    """
+    tp = mesh.shape.get("model", 1)
+    d_inner = cfg.ssm_expand * cfg.d_model if cfg.ssm_state else 0
+    ssm_h = d_inner // cfg.ssm_headdim if cfg.ssm_state else 0
+    du = int(cfg.xlstm_proj_factor * cfg.d_model)
+    mhd = du // cfg.n_heads
+
+    def leaf_spec(path, leaf):
+        keys = _keys_of(path)
+        name = keys[-1]
+        nd = len(leaf.shape)
+        dpx = _dp_if_divisible(mesh, leaf.shape[1])
+        if name in ("k", "v", "xk", "xv"):       # (P,B,S,kv,hd)
+            if cfg.n_kv_heads % tp == 0:
+                return P(None, dpx, None, "model", None)
+            if leaf.shape[2] % tp == 0:          # shard cache sequence
+                return P(None, dpx, "model", None, None)
+            return P(None, dpx, None, None, None)
+        if name == "ssm":                        # (P,B,H,Pd,N)
+            h_ax = "model" if ssm_h and ssm_h % tp == 0 else None
+            return P(None, dpx, h_ax, None, None)
+        if name == "conv_x":                     # (P,B,K,d_inner)
+            ax = "model" if d_inner and d_inner % tp == 0 else None
+            return P(None, dpx, None, ax)
+        if name in ("conv_b", "conv_c"):
+            return P(None, dpx, None, None)
+        if name == "c" and nd == 5:              # (P,B,H,hdv,hdk)
+            ax = "model" if mhd % tp == 0 else None
+            return P(None, dpx, None, ax, None)
+        if name == "conv" and nd == 4:           # (P,B,K,du)
+            ax = "model" if du % tp == 0 else None
+            return P(None, dpx, None, ax)
+        # n (P,B,H,hdk), m (P,B,H), slstm states (P,B,d)
+        return P(None, dpx, *([None] * (nd - 2)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state_shapes)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaf_spec(p, l) for p, l in flat])
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,90 @@
+"""AdamW over parameter pytrees, with cosine LR schedule and global-norm
+clipping.  Optimizer state (m, v) is kept in f32 regardless of param dtype;
+the update is applied in f32 and cast back.
+
+Pure-pytree (no optax dependency): ``init(params) -> state``;
+``apply(grads, state, params, step) -> (new_params, new_state)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+
+
+def cosine_lr(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads, max_norm):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def init(params) -> Dict[str, Any]:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def apply(grads, state, params, cfg: AdamWConfig) -> Tuple[Any, Dict[str, Any]]:
+    step = state["step"] + 1
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    lr = cosine_lr(cfg, step)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - cfg.b1 ** t
+    bc2 = 1 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        step_ = mh / (jnp.sqrt(vh) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        # decoupled weight decay on matrices only (ndim >= 2)
+        if p.ndim >= 2:
+            step_ = step_ + cfg.weight_decay * p32
+        return (p32 - lr * step_).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}, {
+        "grad_norm": gnorm, "lr": lr}

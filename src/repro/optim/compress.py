@@ -1,0 +1,64 @@
+"""Gradient/delta compression with error feedback (beyond-paper extension of
+Faabric's merge-operation diffs, DESIGN.md §5).
+
+The paper synchronises shared state by shipping *byte-wise diffs* with merge
+operations.  For cross-pod gradient sync we generalise the diff to a sparse
+top-k *delta*: only the k largest-magnitude chunks of each gradient leaf are
+transmitted (merge op = ``sum``); the residual is kept locally and added to
+the next step's gradient (error feedback), which preserves convergence.
+
+``compress`` returns (values, indices) per leaf — the analogue of the
+paper's (offset, bytes) diff list — plus the new error-feedback residual.
+``decompress`` scatters back to a dense tensor for the merge.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _topk_leaf(g, frac: float):
+    flat = g.reshape(-1)
+    k = max(1, int(flat.shape[0] * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    sel = flat[idx]
+    resid = flat.at[idx].set(0.0).reshape(g.shape)
+    return (sel, idx.astype(jnp.int32)), resid
+
+
+def compress(grads, residual, frac: float = 0.05):
+    """grads (+carried residual) -> (sparse diff pytree, new residual)."""
+    if residual is not None:
+        grads = jax.tree.map(lambda g, r: g.astype(jnp.float32) + r,
+                             grads, residual)
+    else:
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    flat, treedef = jax.tree.flatten(grads)
+    out = [_topk_leaf(g, frac) for g in flat]
+    sparse = jax.tree.unflatten(treedef, [o[0] for o in out])
+    resid = jax.tree.unflatten(treedef, [o[1] for o in out])
+    return sparse, resid
+
+
+def decompress(sparse, shapes_like):
+    """Scatter sparse (vals, idx) diffs back to dense leaves of the given
+    shapes (the paper's merge-apply with op=sum onto a zero base)."""
+    def one(sp, like):
+        vals, idx = sp
+        flat = jnp.zeros((like.size,), jnp.float32).at[idx].add(vals)
+        return flat.reshape(like.shape)
+    return jax.tree.map(one, sparse, shapes_like,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def init_residual(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compression_ratio(sparse, dense_like) -> float:
+    sent = sum(v.size + i.size for v, i in jax.tree.leaves(
+        sparse, is_leaf=lambda x: isinstance(x, tuple)))
+    total = sum(l.size for l in jax.tree.leaves(dense_like))
+    return sent / max(total, 1)

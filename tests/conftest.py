@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run on the default 1-device CPU backend; multi-device distribution
+# tests spawn subprocesses that set XLA_FLAGS themselves (see test_dist_*).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,105 @@
+"""Property-based tests (hypothesis) for the byte-wise diff protocol —
+Table 3 merge-op algebra and diff/apply invariants (paper §4)."""
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import diffsync as D
+
+arrays = st.integers(1, 4000).flatmap(
+    lambda n: st.builds(
+        lambda seed: np.random.default_rng(seed).normal(
+            size=n).astype(np.float32) + 2.0,
+        st.integers(0, 2 ** 16)))
+
+
+@given(arrays, st.integers(0, 2 ** 16))
+@settings(max_examples=40, deadline=None)
+def test_sum_merge_is_grad_accumulation(a0, seed):
+    """A1 = A0 + (B1 - B0): merging N children == summing their deltas."""
+    rng = np.random.default_rng(seed)
+    b0 = a0.copy()
+    deltas = [np.zeros_like(a0) for _ in range(3)]
+    for d in deltas:
+        idx = rng.integers(0, a0.size, size=max(1, a0.size // 7))
+        d[idx] = rng.normal(size=idx.size).astype(np.float32)
+    main = a0.copy()
+    for d in deltas:
+        main = D.apply_leaf(main, D.diff_leaf(b0, b0 + d, op="sum"))
+    np.testing.assert_allclose(main, a0 + sum(deltas), atol=1e-5)
+
+
+@given(arrays)
+@settings(max_examples=40, deadline=None)
+def test_overwrite_roundtrip(a0):
+    """diff(old, new) applied to old reproduces new exactly."""
+    rng = np.random.default_rng(1)
+    new = a0.copy()
+    idx = rng.integers(0, a0.size, size=max(1, a0.size // 5))
+    new[idx] += 1.0
+    d = D.diff_leaf(a0, new, op="overwrite")
+    np.testing.assert_array_equal(D.apply_leaf(a0, d), new)
+
+
+@given(arrays)
+@settings(max_examples=40, deadline=None)
+def test_clean_state_empty_diff(a0):
+    d = D.diff_leaf(a0, a0.copy())
+    assert d.idx.size == 0
+    np.testing.assert_array_equal(D.apply_leaf(a0, d), a0)
+
+
+@given(arrays, st.sampled_from(["sum", "subtract"]))
+@settings(max_examples=40, deadline=None)
+def test_sum_subtract_inverse(a0, op):
+    """subtract(A0, B0, B1) == sum(A0, B1, B0): Table 3 algebra."""
+    rng = np.random.default_rng(2)
+    b0 = a0.copy()
+    b1 = b0 + rng.normal(size=a0.shape).astype(np.float32)
+    via_sub = D.apply_leaf(a0, D.diff_leaf(b0, b1, op="subtract"))
+    via_sum = D.apply_leaf(a0, D.diff_leaf(b1, b0, op="sum"))
+    np.testing.assert_allclose(via_sub + via_sum, 2 * a0, atol=1e-4)
+
+
+@given(st.integers(0, 2 ** 16))
+@settings(max_examples=30, deadline=None)
+def test_multiply_merge(seed):
+    rng = np.random.default_rng(seed)
+    a0 = rng.uniform(1, 2, 2048).astype(np.float32)
+    b0 = rng.uniform(1, 2, 2048).astype(np.float32)
+    scale = rng.uniform(0.5, 2.0)
+    b1 = (b0 * scale).astype(np.float32)
+    merged = D.apply_leaf(a0, D.diff_leaf(b0, b1, op="multiply"))
+    np.testing.assert_allclose(merged, a0 * scale, rtol=1e-4)
+
+
+@given(st.integers(0, 2 ** 16))
+@settings(max_examples=20, deadline=None)
+def test_tree_diff_only_ships_dirty_bytes(seed):
+    rng = np.random.default_rng(seed)
+    tree = {"a": rng.normal(size=(64, 64)).astype(np.float32),
+            "b": rng.normal(size=(10,)).astype(np.float32)}
+    new = {"a": tree["a"].copy(), "b": tree["b"].copy()}
+    new["a"][0, 0] += 1.0
+    diffs = D.diff_tree(tree, new)
+    assert len(diffs) == 1                    # only leaf 'a' is dirty
+    assert D.diff_nbytes(diffs) < tree["a"].nbytes + tree["b"].nbytes
+    merged = D.apply_tree(tree, diffs)
+    np.testing.assert_array_equal(merged["a"], new["a"])
+    np.testing.assert_array_equal(merged["b"], tree["b"])
+
+
+def test_dense_diff_matches_sparse():
+    rng = np.random.default_rng(0)
+    old = rng.normal(size=5000).astype(np.float32)
+    new = old.copy()
+    new[100:200] += 1.5
+    import jax.numpy as jnp
+    mask, delta = jax.jit(D.dense_diff)(jnp.asarray(old), jnp.asarray(new))
+    sparse = D.diff_leaf(old, new, op="sum")
+    np.testing.assert_array_equal(np.nonzero(np.asarray(mask))[0],
+                                  sparse.idx)
+    merged = jax.jit(lambda m, ms, p: D.dense_merge(m, ms, p, op="sum"))(
+        jnp.asarray(old), mask, delta)
+    np.testing.assert_allclose(np.asarray(merged), new, atol=1e-6)

@@ -1,0 +1,190 @@
+"""Model-math invariants: fused loss == naive loss, blocked attention ==
+full attention, chunked scans == recurrences, MoE capacity semantics,
+sharding-spec validity for every arch x mesh."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import ARCH_IDS, get_config, reduced_config
+from repro.models import attention as A
+from repro.models import layers as L
+from repro.models import model as M
+from repro.models import shardings as SH
+from repro.models import xlstm as X
+from repro.models.ssm import ssd_chunked
+from repro.kernels.mamba_scan.ref import ssd_ref
+
+key = jax.random.PRNGKey(0)
+sub = lambda i: jax.random.fold_in(key, i)
+
+
+def test_fused_unembed_xent_matches_naive():
+    b, s, d, v = 2, 64, 32, 101
+    x = jax.random.normal(sub(1), (b, s, d))
+    head = jax.random.normal(sub(2), (d, v)) * 0.1
+    labels = jax.random.randint(sub(3), (b, s), 0, v)
+    naive = L.softmax_xent(x @ head, labels, v)
+    fused = L.fused_unembed_xent(x, head, labels, chunk=16)
+    scan = L.fused_unembed_xent_scan(x, head, labels, chunk=16)
+    np.testing.assert_allclose(float(naive), float(fused), rtol=1e-6)
+    np.testing.assert_allclose(float(naive), float(scan), rtol=1e-6)
+
+
+def test_fused_xent_gradients_match():
+    b, s, d, v = 2, 32, 16, 50
+    x = jax.random.normal(sub(4), (b, s, d))
+    head = jax.random.normal(sub(5), (d, v)) * 0.1
+    labels = jax.random.randint(sub(6), (b, s), 0, v)
+    g1 = jax.grad(lambda h: L.softmax_xent(x @ h, labels, v))(head)
+    g2 = jax.grad(lambda h: L.fused_unembed_xent(x, h, labels,
+                                                 chunk=8))(head)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-5)
+
+
+def test_blocked_attention_matches_full():
+    b, s, h, kv, hd = 2, 512, 4, 2, 32
+    q = jax.random.normal(sub(7), (b, s, h, hd))
+    k = jax.random.normal(sub(8), (b, s, kv, hd))
+    v = jax.random.normal(sub(9), (b, s, kv, hd))
+    full = A.sdpa(q, k, v, causal=True)
+    blocked = A.sdpa_blocked(q, k, v, block_q=128)
+    scan = A.sdpa_blocked_scan(q, k, v, block_q=128)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(blocked),
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(scan),
+                               atol=2e-5)
+
+
+def test_blocked_attention_window():
+    b, s, h, hd = 1, 256, 2, 16
+    q = jax.random.normal(sub(10), (b, s, h, hd))
+    k = jax.random.normal(sub(11), (b, s, h, hd))
+    v = jax.random.normal(sub(12), (b, s, h, hd))
+    full = A.sdpa(q, k, v, causal=True, window=64)
+    blocked = A.sdpa_blocked(q, k, v, window=64, block_q=64)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(blocked),
+                               atol=2e-5)
+
+
+def test_ring_buffer_decode_matches_window_attention():
+    """Windowed ring-buffer decode == full-cache windowed attention."""
+    cfg = reduced_config("zamba2-2.7b")
+    params = jax.jit(lambda k: A.init_attention(k, cfg))(sub(13))
+    b, s, window = 2, 32, 8
+    x = jax.random.normal(sub(14), (b, s, cfg.d_model))
+    pos = jnp.arange(s)[None, :]
+    full, _ = A.attention(params, x, cfg, pos, causal=True, window=window)
+    cache = A.init_kv_cache(cfg, b, s, x.dtype, window=window)
+    outs = []
+    for t in range(s):
+        o, cache = A.decode_attention(params, x[:, t:t + 1], cache, cfg,
+                                      jnp.full((b, 1), t), window=window)
+        outs.append(o[:, 0])
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)),
+                               np.asarray(full), atol=2e-4, rtol=1e-3)
+
+
+def test_ssd_chunked_matches_recurrence():
+    b, l, h, p, n = 2, 64, 3, 8, 4
+    x = jax.random.normal(sub(15), (b, l, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(sub(16), (b, l, h)))
+    a = -jnp.exp(jax.random.normal(sub(17), (h,)) * 0.3)
+    bb = jax.random.normal(sub(18), (b, l, n)) * 0.5
+    cc = jax.random.normal(sub(19), (b, l, n)) * 0.5
+    y1, s1 = ssd_chunked(x, dt, a, bb, cc, chunk=16)
+    y2, s2 = ssd_ref(jnp.moveaxis(x, 2, 1), jnp.moveaxis(dt, 2, 1)[..., None],
+                     a[:, None, None], bb, cc)
+    np.testing.assert_allclose(np.asarray(y1),
+                               np.asarray(jnp.moveaxis(y2, 1, 2)),
+                               atol=5e-4, rtol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=1e-4,
+                               rtol=1e-3)
+
+
+def test_mlstm_chunk_size_invariance():
+    b, l, h, hd = 2, 64, 2, 16
+    q = jax.random.normal(sub(20), (b, l, h, hd))
+    k = jax.random.normal(sub(21), (b, l, h, hd))
+    v = jax.random.normal(sub(22), (b, l, h, hd))
+    li = jax.random.normal(sub(23), (b, l, h)) - 1
+    lf = -jax.nn.softplus(jax.random.normal(sub(24), (b, l, h)))
+    o1, s1 = X.mlstm_chunked(q, k, v, li, lf, chunk=64)
+    o2, s2 = X.mlstm_chunked(q, k, v, li, lf, chunk=1)   # pure recurrence
+    o3, s3 = X.mlstm_chunked(q, k, v, li, lf, chunk=16, use_scan=True)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o3), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s1[0]), np.asarray(s2[0]),
+                               atol=1e-4)
+
+
+def test_moe_capacity_drops_tokens():
+    """Lower capacity factor must drop tokens (zeroed outputs), higher must
+    not; gates renormalise over top-k."""
+    from repro.models import moe as moe_mod
+    cfg = reduced_config("granite-moe-1b-a400m")
+    params = jax.jit(lambda k: moe_mod.init_moe(k, cfg))(sub(25))
+    x = jax.random.normal(sub(26), (2, 64, cfg.d_model))
+    y_hi, _ = jax.jit(lambda p, x: moe_mod.moe_ffn(
+        p, x, cfg.with_(capacity_factor=8.0)))(params, x)
+    y_lo, _ = jax.jit(lambda p, x: moe_mod.moe_ffn(
+        p, x, cfg.with_(capacity_factor=0.25)))(params, x)
+    # low capacity zeroes some token outputs
+    zeros_lo = int((jnp.abs(y_lo).sum(-1) < 1e-9).sum())
+    zeros_hi = int((jnp.abs(y_hi).sum(-1) < 1e-9).sum())
+    assert zeros_lo > zeros_hi
+
+
+# ---------------------------------------------------------------------------
+# sharding specs: structural validity for every arch on both meshes
+# ---------------------------------------------------------------------------
+class _FakeMesh:
+    def __init__(self, shape, axes):
+        self.shape = dict(zip(axes, shape))
+        self.axis_names = axes
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("mesh_shape,axes", [
+    ((16, 16), ("data", "model")),
+    ((2, 16, 16), ("pod", "data", "model")),
+])
+def test_param_specs_divisible(arch, mesh_shape, axes):
+    cfg = get_config(arch).with_(fsdp=True)
+    mesh = _FakeMesh(mesh_shape, axes)
+    shapes = M.param_specs(cfg)
+    specs = SH.param_pspecs(cfg, shapes, mesh)
+    flat_s = jax.tree_util.tree_leaves_with_path(shapes)
+    flat_p = jax.tree.leaves(specs, is_leaf=lambda x: hasattr(x, "_normalized_spec") or str(type(x).__name__) == "PartitionSpec")
+    assert len(flat_s) == len(flat_p)
+    for (path, leaf), spec in zip(flat_s, flat_p):
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            ax_names = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in ax_names:
+                n *= mesh.shape[a]
+            assert dim % n == 0, (arch, jax.tree_util.keystr(path),
+                                  leaf.shape, spec)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "glm4-9b", "zamba2-2.7b",
+                                  "xlstm-1.3b", "whisper-small"])
+def test_decode_state_specs_divisible(arch):
+    from repro.configs.base import SHAPES
+    cfg = get_config(arch)
+    mesh = _FakeMesh((16, 16), ("data", "model"))
+    shapes = M.decode_state_specs(cfg, SHAPES["decode_32k"])
+    specs = SH.decode_state_pspecs(cfg, shapes, mesh)
+    flat_s = jax.tree_util.tree_leaves(shapes)
+    flat_p = jax.tree.leaves(specs, is_leaf=lambda x: str(type(x).__name__) == "PartitionSpec")
+    for leaf, spec in zip(flat_s, flat_p):
+        for dim, ax in zip(leaf.shape, tuple(spec)):
+            if ax is None:
+                continue
+            ax_names = ax if isinstance(ax, tuple) else (ax,)
+            n = 1
+            for a in ax_names:
+                n *= mesh.shape[a]
+            assert dim % n == 0, (arch, leaf.shape, spec)

@@ -1,0 +1,112 @@
+"""Scheduler allocation invariants (property-based) and simulator
+reproduction of the paper's qualitative results (Fig 10/11/14)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import simulator as S
+from repro.core.scheduler import ClusterState
+
+
+@given(st.lists(st.integers(1, 20), min_size=1, max_size=30),
+       st.integers(2, 8), st.integers(4, 16))
+@settings(max_examples=40, deadline=None)
+def test_granular_alloc_conserves_chips(sizes, chips, hosts):
+    cs = ClusterState(hosts, chips)
+    allocs = []
+    for i, n in enumerate(sizes):
+        a = cs.alloc_granular(f"j{i}", n)
+        if a is not None:
+            assert a.n == n
+            allocs.append(a)
+        assert cs.idle_chips() == cs.total_chips - sum(x.n for x in allocs)
+        assert (cs.free >= 0).all()
+    for a in allocs:
+        cs.release(a)
+    assert cs.idle_chips() == cs.total_chips
+
+
+@given(st.integers(1, 64), st.integers(1, 8))
+@settings(max_examples=40, deadline=None)
+def test_slice_alloc_wastes_fragmentation(n, k):
+    """Slice allocation rounds up to whole slices — the paper's
+    fragmentation waste."""
+    cs = ClusterState(8, 8)
+    slice_size = 8 // k if 8 % k == 0 else 1
+    a = cs.alloc_slices("j", n, slice_size)
+    if a is not None:
+        assert a.n >= n                      # over-allocation = waste
+        assert a.n % slice_size == 0
+
+
+def test_migration_plan_defragments():
+    cs = ClusterState(4, 8)
+    fillers = [cs.alloc_granular(f"f{i}", 6) for i in range(4)]
+    frag = cs.alloc_granular("frag", 8)      # forced to span hosts
+    assert frag.fragmentation() > 1
+    for f in fillers[:2]:
+        cs.release(f)
+    plans = cs.migration_plan([frag])
+    assert plans and plans[0][0] == "frag"
+    new = cs.apply_migration(frag, plans[0][1])
+    assert new.fragmentation() < frag.fragmentation()
+    assert new.n == 8
+
+
+def test_cross_host_fraction():
+    cs = ClusterState(2, 8)
+    a = cs.alloc_granular("a", 8)            # fits one host
+    assert a.cross_host_fraction() == 0.0
+    b = cs.alloc_granular("b", 8)
+    cs.release(a)
+    cs.release(b)
+
+
+# ---------------------------------------------------------------------------
+# simulator: the paper's headline results, qualitatively
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def mpi_results():
+    jobs = S.generate_trace(100, "mpi-compute", seed=0)
+    return S.run_baselines(jobs, hosts=32)
+
+
+def test_fig10_mpi_faabric_beats_coarse_baselines(mpi_results):
+    fa = mpi_results["faabric"].makespan
+    # paper: 13-23% lower makespan vs coarse slices; on par with 8-ctr
+    assert fa < mpi_results["1-ctr-per-vm"].makespan * 0.9
+    assert fa < mpi_results["2-ctr-per-vm"].makespan
+    assert abs(fa - mpi_results["8-ctr-per-vm"].makespan) \
+        / mpi_results["8-ctr-per-vm"].makespan < 0.1
+
+
+def test_fig10_idle_chips_lower_for_faabric(mpi_results):
+    fa = np.median(mpi_results["faabric"].idle_cdf())
+    coarse = np.median(mpi_results["1-ctr-per-vm"].idle_cdf())
+    assert fa <= coarse + 0.05
+
+
+def test_fig10_omp_overcommit_baseline_worst(mpi_results):
+    jobs = S.generate_trace(100, "omp", seed=0)
+    res = S.run_baselines(jobs, hosts=32)
+    fa = res["faabric"].makespan
+    # paper: Faabric 38% lower than 8-ctr-per-vm; higher than mid slices
+    assert fa < res["8-ctr-per-vm"].makespan * 0.8
+    assert fa > res["4-ctr-per-vm"].makespan
+
+
+def test_fig11_scaling_constant_per_host_throughput():
+    makespans = {}
+    for hosts, njobs in ((16, 50), (32, 100), (64, 200)):
+        jobs = S.generate_trace(njobs, "mpi-compute", seed=1)
+        makespans[hosts] = S.Simulator(hosts, 8, "granular").run(jobs).makespan
+    ms = list(makespans.values())
+    assert max(ms) / min(ms) < 1.6   # roughly flat (paper: within 5-10%)
+
+
+def test_fig14_migration_helps_network_bound():
+    jobs = S.generate_trace(60, "mpi-network", seed=2)
+    with_mig = S.Simulator(16, 8, "granular", migrate=True).run(jobs)
+    without = S.Simulator(16, 8, "granular", migrate=False).run(jobs)
+    assert with_mig.migrations > 0
+    assert with_mig.makespan <= without.makespan * 1.02
