@@ -1,0 +1,12 @@
+# Tier-1 verification and fast iteration targets.
+PY ?= python
+
+.PHONY: check quick
+
+# the repo's tier-1 gate (see ROADMAP.md)
+check:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# fast subset for scheduler/placement/simulator iteration
+quick:
+	PYTHONPATH=src $(PY) -m pytest -q -k "placement or scheduler or simulator"

@@ -26,9 +26,9 @@ import json, time
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.core import collectives as C
+from repro.core.compat import make_mesh, shard_map
 
-mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh = make_mesh((2, 4), ("pod", "data"))
 out = {}
 
 def timeit(f, *args, reps=20):
@@ -46,7 +46,7 @@ def p2p(x):
     def body(v):
         perm = [(i, (i + 1) % 4) for i in range(4)]
         return jax.lax.ppermute(v, "data", perm)
-    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P(("pod","data")),
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=P(("pod","data")),
                                  out_specs=P(("pod","data")),
                                  check_vma=False))(x)
 out["p2p_ring_us"] = timeit(p2p, vec) * 1e6
@@ -57,7 +57,7 @@ def nstream(x):
         v = v * 2.0 + 1.0
         s = jax.lax.psum(jnp.sum(v), ("pod", "data"))
         return v + 0.0 * s
-    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P(("pod","data")),
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=P(("pod","data")),
                                  out_specs=P(("pod","data")),
                                  check_vma=False))(x)
 out["nstream_us"] = timeit(nstream, vec) * 1e6
@@ -87,7 +87,7 @@ def stencil(x):
         right = jax.lax.ppermute(v[:, :128], "data", perm_b)
         mid = v.at[:, :128].add(left).at[:, -128:].add(right)
         return mid * 0.25
-    return jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P(("pod","data"), None),
+    return jax.jit(shard_map(body, mesh=mesh, in_specs=P(("pod","data"), None),
                                  out_specs=P(("pod","data"), None),
                                  check_vma=False))(x)
 grid = jnp.ones((8, 4096), jnp.float32)

@@ -1,6 +1,8 @@
 """Paper Fig 11: cluster-size scaling — 50/100/200/400-job traces on
 16/32/64/128 hosts; makespan + execution-time distribution + the
-centralised-scheduler degradation at 128 hosts.
+centralised-scheduler degradation at 128 hosts.  Each scale also sweeps
+the granular placement policies and a Poisson-arrival regime (the
+multi-tenant extension of §6.3).
 """
 from __future__ import annotations
 
@@ -14,6 +16,21 @@ def run(report):
         jobs = S.generate_trace(njobs, "mpi-compute", seed=hosts)
         res = S.run_baselines(jobs, hosts=hosts)
         fa = res["faabric"]
+        # policy sweep: faabric's run IS the binpack data point
+        report(f"policy/{hosts}h/binpack/makespan",
+               round(fa.makespan, 1), "s", "Fig11 policy sweep")
+        for policy in ("spread", "locality"):
+            r = S.Simulator(hosts, 8, "granular", policy=policy).run(jobs)
+            report(f"policy/{hosts}h/{policy}/makespan",
+                   round(r.makespan, 1), "s", "Fig11 policy sweep")
+        arr = S.generate_trace(njobs, "mpi-compute", seed=hosts,
+                               arrival_rate=njobs / 200.0)
+        r = S.Simulator(hosts, 8, "granular", backfill=True).run(arr)
+        report(f"poisson/{hosts}h/makespan", round(r.makespan, 1), "s",
+               "Poisson arrivals + backfill")
+        report(f"poisson/{hosts}h/mean_wait",
+               round(float(np.mean(r.waited)), 1), "s",
+               "Poisson arrivals + backfill")
         report(f"makespan/{hosts}h/faabric", round(fa.makespan, 1), "s",
                "Fig11a")
         best_base = min(v.makespan for k, v in res.items() if k != "faabric")

@@ -26,7 +26,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.core import compat
+from repro.core.compat import shard_map
 
 
 # ---------------------------------------------------------------------------
@@ -104,7 +106,7 @@ def ring_allreduce(vec, axis: str):
     """Bandwidth-optimal ring all-reduce via explicit collective-permutes
     (2*(n-1) steps: reduce-scatter ring + all-gather ring).  This is the
     ppermute mapping of the paper's p2p messaging layer."""
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
     if n == 1:
         return vec
     me = jax.lax.axis_index(axis)

@@ -1,0 +1,79 @@
+"""Version-compat shims for jax APIs that moved between releases.
+
+The repo targets the current jax API surface; older installs (e.g. the
+0.4.x line baked into some images) expose the same functionality under
+different names/keywords.  Every call site imports from here so the
+divergence lives in exactly one file:
+
+* ``shard_map``  — top-level ``jax.shard_map`` (new) vs
+  ``jax.experimental.shard_map.shard_map`` (old); the replication-check
+  keyword was renamed ``check_rep`` -> ``check_vma``.
+* ``make_mesh`` — the ``axis_types`` keyword (explicit-sharding API) does
+  not exist on older releases; mesh axes there are implicitly Auto, which
+  is exactly what every caller requests.
+* ``tpu_compiler_params`` — ``pltpu.CompilerParams`` (new) vs
+  ``pltpu.TPUCompilerParams`` (old).
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+
+try:
+    from jax import shard_map as _shard_map          # jax >= 0.6
+except ImportError:                                   # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_CHECK_KW = ("check_vma" if "check_vma"
+             in inspect.signature(_shard_map).parameters else "check_rep")
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True, **kw):
+    """``jax.shard_map`` with the replication-check keyword translated."""
+    kw[_CHECK_KW] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)
+
+
+_MAKE_MESH_HAS_AXIS_TYPES = (
+    "axis_types" in inspect.signature(jax.make_mesh).parameters)
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              axis_types: Optional[Tuple[Any, ...]] = None, **kw):
+    """``jax.make_mesh`` tolerating the ``axis_types`` keyword.
+
+    Older jax has no explicit-sharding axis types: axes are Auto, which
+    matches the ``(AxisType.Auto,) * n`` every caller passes.
+    """
+    if _MAKE_MESH_HAS_AXIS_TYPES and axis_types is not None:
+        return jax.make_mesh(axis_shapes, axis_names,
+                             axis_types=axis_types, **kw)
+    return jax.make_mesh(axis_shapes, axis_names, **kw)
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a named mesh axis from inside shard_map.
+
+    ``jax.lax.axis_size`` on current jax; older releases expose the same
+    number through the axis-env frame.
+    """
+    fn = getattr(jax.lax, "axis_size", None)
+    if fn is not None:
+        return fn(axis_name)
+    from jax import core
+    # axis_frame returns the size directly on some 0.4.x releases and an
+    # AxisEnvFrame (with .size) on others
+    frame = core.axis_frame(axis_name)
+    return int(getattr(frame, "size", frame))
+
+
+def tpu_compiler_params(**kwargs):
+    """Construct Pallas-TPU compiler params under either class name."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

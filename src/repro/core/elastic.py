@@ -21,6 +21,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import migration
+from repro.core.placement import PlacementEngine
 
 
 def make_dp_mesh(devices: Sequence[Any]) -> Mesh:
@@ -52,19 +53,35 @@ def reshard_gang(state, new_devices: Sequence[Any]):
 
 @dataclasses.dataclass
 class ElasticPolicy:
-    """Decides the DP world size from the free-chip signal.
+    """Decides the DP world size from the cluster's free-chip signal.
 
     ``target_free``: leave this many chips for other tenants (the paper's
     shared-cluster economics); world size snaps to powers of two so the
     global batch divides evenly.
+
+    The decision goes through the shared ``PlacementEngine`` — the same
+    free-chip accounting the simulator and scheduler use: the budget
+    comes from ``engine.idle_chips()``, and a grow is validated with a
+    reservation probe.  The shipped greedy policies can always fragment
+    a gang into any free chips, so the probe only rejects under future
+    contiguity-constrained policies; it is released before returning,
+    so a caller that needs to *hold* the chips across a multi-step
+    rescale should keep its own ``engine.reserve`` open until commit.
     """
     min_world: int = 1
     max_world: int = 64
     target_free: int = 0
 
-    def decide(self, world: int, free_chips: int) -> Optional[int]:
-        budget = world + free_chips - self.target_free
+    def decide(self, world: int, engine: PlacementEngine) -> Optional[int]:
+        budget = world + engine.idle_chips() - self.target_free
         new = self.min_world
         while new * 2 <= min(budget, self.max_world):
             new *= 2
-        return None if new == world else new
+        if new == world:
+            return None
+        if new > world:
+            res = engine.reserve(new - world)
+            if res is None:                 # gang not carveable right now
+                return None
+            engine.cancel(res)
+        return new

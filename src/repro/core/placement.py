@@ -1,0 +1,426 @@
+"""Policy-driven gang placement on a shared cluster (paper §3.4, §6.2).
+
+This is the single code path behind every placement decision in the repo:
+the discrete-event simulator (paper Fig 10/11/14), the live runtime's
+sub-mesh carving / rescale / migrate control-point actions, and the
+scheduler facade in ``core.scheduler``.  The split is:
+
+* ``PlacementPolicy`` — a pure function from a free-chip snapshot
+  (``ClusterView``) to a gang placement ``[(host, n_chips)]``.  Shipped
+  policies:
+
+  - ``binpack``      Faabric's default: greedy most-free-first so the gang
+                     spans as few hosts as possible (the seed behaviour).
+  - ``spread``       round-robin chips over hosts (load balancing).
+  - ``fixed-slice``  the §6.2 k-containers-per-VM baselines: whole slices
+                     of ``slice_size`` chips, never shared between jobs.
+  - ``locality``     scores candidate placements under the simulator's
+                     cost model T = (W/n)(1 + beta*chi) and picks the one
+                     minimising the predicted slowdown, tie-breaking on
+                     chips stranded on touched hosts (best-fit) so large
+                     contiguous blocks survive for later gangs.
+
+* ``PlacementEngine`` — owns the mutable cluster state: free-chip
+  accounting, gang allocation, preemption-safe reservations (hold chips
+  before binding a job so multi-step decisions are atomic), migration
+  planning at barrier points, and adoption of externally-created
+  placements (``bind``, used by the live runtime).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+Placement = List[Tuple[int, int]]          # [(host, n_chips)] sorted
+
+
+def placement_cross_host_fraction(placement: Sequence[Tuple[int, int]]
+                                  ) -> float:
+    """chi = P[two random ranks sit on different hosts] — the collective
+    slow-path fraction used by the simulator's time model."""
+    n = sum(c for _, c in placement)
+    if n <= 1:
+        return 0.0
+    return 1.0 - sum((c / n) ** 2 for _, c in placement)
+
+
+@dataclasses.dataclass
+class Allocation:
+    job_id: str
+    placement: Placement
+    slice_size: int = 0                     # 0 = granular
+
+    @property
+    def n(self) -> int:
+        return sum(c for _, c in self.placement)
+
+    @property
+    def hosts(self) -> List[int]:
+        return [h for h, _ in self.placement]
+
+    def fragmentation(self) -> int:
+        return len(self.placement)
+
+    def cross_host_fraction(self) -> float:
+        return placement_cross_host_fraction(self.placement)
+
+
+class ClusterView:
+    """Read-only free-chip snapshot handed to policies (keeps them pure)."""
+
+    __slots__ = ("free", "chips_per_host")
+
+    def __init__(self, free: np.ndarray, chips_per_host: int):
+        self.free = free
+        self.chips_per_host = chips_per_host
+
+    @property
+    def hosts(self) -> int:
+        return len(self.free)
+
+    def idle_chips(self) -> int:
+        return int(self.free.sum())
+
+
+# ---------------------------------------------------------------------------
+# Policies
+# ---------------------------------------------------------------------------
+class PlacementPolicy:
+    """A pure placement function; the engine commits the result."""
+
+    name = "abstract"
+    slice_size = 0                          # granular unless overridden
+
+    def place(self, view: ClusterView, n: int) -> Optional[Placement]:
+        raise NotImplementedError
+
+
+def _greedy_most_free(free: np.ndarray, n: int) -> Optional[Placement]:
+    """Most-free-first greedy: the gang spans as few hosts as possible."""
+    order = np.argsort(free)[::-1]
+    placement: Placement = []
+    remaining = n
+    for h in order:
+        if free[h] == 0:
+            continue
+        take = min(int(free[h]), remaining)
+        placement.append((int(h), take))
+        remaining -= take
+        if remaining == 0:
+            break
+    return sorted(placement) if remaining == 0 else None
+
+
+class BinpackPolicy(PlacementPolicy):
+    """Faabric's default: fewest hosts via greedy most-free-first."""
+
+    name = "binpack"
+
+    def place(self, view: ClusterView, n: int) -> Optional[Placement]:
+        if n > view.idle_chips():
+            return None
+        return _greedy_most_free(view.free, n)
+
+
+class SpreadPolicy(PlacementPolicy):
+    """Round-robin chips over hosts (load balancing)."""
+
+    name = "spread"
+
+    def place(self, view: ClusterView, n: int) -> Optional[Placement]:
+        if n > view.idle_chips():
+            return None
+        counts: Dict[int, int] = {}
+        free = view.free.copy()
+        remaining = n
+        while remaining > 0:
+            candidates = np.nonzero(free > 0)[0]
+            if candidates.size == 0:
+                return None
+            h = int(candidates[np.argmax(free[candidates])])
+            counts[h] = counts.get(h, 0) + 1
+            free[h] -= 1
+            remaining -= 1
+        return sorted(counts.items())
+
+
+class FixedSlicePolicy(PlacementPolicy):
+    """Whole-slice allocation: ceil(n/slice) slices, each on one host.
+
+    Emulates the paper's k-containers-per-VM baselines: a host holds
+    ``chips_per_host // slice_size`` slices; slices are never shared
+    between jobs, so a request is rounded up to whole slices (the
+    fragmentation waste of Fig 10).
+    """
+
+    name = "fixed-slice"
+
+    def __init__(self, slice_size: int):
+        assert slice_size > 0
+        self.slice_size = slice_size
+
+    def place(self, view: ClusterView, n: int) -> Optional[Placement]:
+        slice_size = self.slice_size
+        n_slices = -(-n // slice_size)
+        placement: Dict[int, int] = {}
+        need = n_slices
+        free = view.free
+        for h in np.argsort(free)[::-1]:
+            while free[h] - placement.get(int(h), 0) >= slice_size \
+                    and need > 0:
+                placement[int(h)] = placement.get(int(h), 0) + slice_size
+                need -= 1
+            if need == 0:
+                break
+        if need:
+            return None
+        return sorted(placement.items())
+
+
+class LocalityScoredPolicy(PlacementPolicy):
+    """Minimise the predicted cross-host slowdown of the §6 cost model.
+
+    Candidate placements are scored by the slowdown factor (1 + beta*chi)
+    of T = (W/n)(1 + beta*chi); W/n is identical across candidates so it
+    drops out.  Ties (e.g. every single-host placement has chi = 0) break
+    on chips *stranded* on touched hosts: best-fit keeps large free blocks
+    intact, so later gangs fragment less — that second-order effect is
+    what lowers the trace-wide mean chi versus binpack's worst-fit choice
+    of the most-free host.
+    """
+
+    name = "locality"
+
+    def __init__(self, beta: float = 0.4):
+        self.beta = beta
+
+    def _stranded(self, view: ClusterView, placement: Placement) -> int:
+        return sum(int(view.free[h]) - c for h, c in placement)
+
+    def place(self, view: ClusterView, n: int) -> Optional[Placement]:
+        if n > view.idle_chips():
+            return None
+        free = view.free
+        candidates: List[Placement] = []
+        fits = np.nonzero(free >= n)[0]
+        if fits.size:                        # best-fit single host
+            h = int(fits[np.argmin(free[fits])])
+            candidates.append([(h, n)])
+        greedy = _greedy_most_free(free, n)
+        if greedy is not None:
+            candidates.append(greedy)
+        exact = self._greedy_exact_fill(free, n)
+        if exact is not None:
+            candidates.append(exact)
+        if not candidates:
+            return None
+        return min(candidates, key=lambda p: (
+            1.0 + self.beta * placement_cross_host_fraction(p),
+            self._stranded(view, p)))
+
+    @staticmethod
+    def _greedy_exact_fill(free: np.ndarray, n: int) -> Optional[Placement]:
+        """Greedy most-free-first, but finish the remainder on the
+        best-fit host (smallest free count that still covers it) — same
+        chi as plain greedy when the chunk multiset matches, strictly
+        fewer stranded chips otherwise."""
+        avail = free.copy()
+        placement: Placement = []
+        remaining = n
+        while remaining > 0:
+            fits = np.nonzero(avail >= remaining)[0]
+            if fits.size:
+                h = int(fits[np.argmin(avail[fits])])
+                placement.append((h, remaining))
+                remaining = 0
+                break
+            h = int(np.argmax(avail))
+            if avail[h] == 0:
+                return None
+            take = int(avail[h])
+            placement.append((h, take))
+            avail[h] = 0
+            remaining -= take
+        return sorted(placement)
+
+
+POLICIES: Dict[str, PlacementPolicy] = {
+    "binpack": BinpackPolicy(),
+    "spread": SpreadPolicy(),
+    "locality": LocalityScoredPolicy(),
+}
+
+
+def resolve_policy(policy: Union[str, PlacementPolicy, None],
+                   default: Optional[PlacementPolicy] = None
+                   ) -> PlacementPolicy:
+    if policy is None:
+        assert default is not None
+        return default
+    if isinstance(policy, PlacementPolicy):
+        return policy
+    try:
+        return POLICIES[policy]
+    except KeyError:
+        raise ValueError(f"unknown placement policy: {policy!r}") from None
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Reservation:
+    """Chips held but not yet bound to a job.
+
+    The preemption-safe handshake: ``reserve`` carves the chips out of the
+    free pool atomically, so a multi-step decision (e.g. elastic grow:
+    decide, snapshot, reshard) cannot lose the chips to a concurrent
+    allocation; ``commit`` binds them to a job, ``cancel`` returns them.
+    """
+
+    placement: Placement
+    slice_size: int = 0
+    settled: bool = False                   # committed or cancelled
+
+    @property
+    def n(self) -> int:
+        return sum(c for _, c in self.placement)
+
+
+class PlacementEngine:
+    """Free-chip accounting + policy-driven gang allocation for a cluster
+    of ``hosts`` identical hosts with ``chips_per_host`` chips each."""
+
+    def __init__(self, hosts: int, chips_per_host: int,
+                 policy: Union[str, PlacementPolicy] = "binpack"):
+        self.hosts = hosts
+        self.chips_per_host = chips_per_host
+        self.free = np.full(hosts, chips_per_host, dtype=np.int64)
+        self.jobs_on_host: List[set] = [set() for _ in range(hosts)]
+        self.default_policy = resolve_policy(policy)
+        self.allocations: Dict[str, Allocation] = {}
+
+    # ---- capacity ----------------------------------------------------------
+    @property
+    def total_chips(self) -> int:
+        return self.hosts * self.chips_per_host
+
+    def idle_chips(self) -> int:
+        return int(self.free.sum())
+
+    def idle_fraction(self) -> float:
+        return self.idle_chips() / self.total_chips
+
+    def view(self) -> ClusterView:
+        return ClusterView(self.free.copy(), self.chips_per_host)
+
+    # ---- reservation lifecycle ---------------------------------------------
+    def reserve(self, n: int,
+                policy: Union[str, PlacementPolicy, None] = None
+                ) -> Optional[Reservation]:
+        pol = resolve_policy(policy, self.default_policy)
+        placement = pol.place(self.view(), n)
+        if placement is None:
+            return None
+        for h, c in placement:
+            self.free[h] -= c
+        assert (self.free >= 0).all()
+        return Reservation(placement, slice_size=pol.slice_size)
+
+    def commit(self, res: Reservation, job_id: str) -> Allocation:
+        assert not res.settled, "reservation already settled"
+        res.settled = True
+        for h, _ in res.placement:
+            self.jobs_on_host[h].add(job_id)
+        alloc = Allocation(job_id, sorted(res.placement),
+                           slice_size=res.slice_size)
+        self.allocations[job_id] = alloc
+        return alloc
+
+    def cancel(self, res: Reservation) -> None:
+        assert not res.settled, "reservation already settled"
+        res.settled = True
+        for h, c in res.placement:
+            self.free[h] += c
+        assert (self.free <= self.chips_per_host).all()
+
+    # ---- allocation ----------------------------------------------------------
+    def allocate(self, job_id: str, n: int,
+                 policy: Union[str, PlacementPolicy, None] = None
+                 ) -> Optional[Allocation]:
+        res = self.reserve(n, policy)
+        return None if res is None else self.commit(res, job_id)
+
+    def bind(self, job_id: str, placement: Sequence[Tuple[int, int]],
+             slice_size: int = 0) -> Allocation:
+        """Adopt an externally-determined placement (the live runtime
+        attaching the gang it was launched with)."""
+        for h, c in placement:
+            assert 0 < c <= self.free[h], \
+                f"bind over-subscribes host {h}: {c} > {self.free[h]}"
+            self.free[h] -= c
+            self.jobs_on_host[h].add(job_id)
+        alloc = Allocation(job_id, sorted(placement), slice_size=slice_size)
+        self.allocations[job_id] = alloc
+        return alloc
+
+    def release(self, alloc: Allocation) -> None:
+        for h, c in alloc.placement:
+            self.free[h] += c
+            self.jobs_on_host[h].discard(alloc.job_id)
+        self.allocations.pop(alloc.job_id, None)
+        assert (self.free <= self.chips_per_host).all()
+
+    # ---- migration (defragmentation at barrier points) ------------------------
+    def migration_plan(self, allocs: Sequence[Allocation]
+                       ) -> List[Tuple[str, Placement]]:
+        """For each fragmented granular gang, try to consolidate onto
+        fewer hosts using currently-free chips (+ the chips the gang
+        already holds).  Returns [(job_id, new_placement)].
+
+        Invariants: slice allocations are never migrated; a plan that
+        frees zero hosts (same host count) is not emitted; plans are
+        committed against a scratch free map so they never double-book
+        chips among themselves.
+        """
+        plans = []
+        free = self.free.copy()
+        for alloc in allocs:
+            if alloc.slice_size or alloc.fragmentation() <= 1:
+                continue
+            held = dict(alloc.placement)
+            avail = free.copy()
+            for h, c in held.items():
+                avail[h] += c
+            # can the gang fit on fewer hosts?
+            order = np.argsort(avail)[::-1]
+            new_placement: Placement = []
+            remaining = alloc.n
+            for h in order:
+                if avail[h] <= 0 or remaining == 0:
+                    break
+                take = min(int(avail[h]), remaining)
+                new_placement.append((int(h), take))
+                remaining -= take
+            if remaining == 0 and len(new_placement) < alloc.fragmentation():
+                plans.append((alloc.job_id, sorted(new_placement)))
+                # commit against the scratch free map so plans don't overlap
+                for h, c in held.items():
+                    free[h] += c
+                for h, c in new_placement:
+                    free[h] -= c
+        return plans
+
+    def apply_migration(self, alloc: Allocation,
+                        new_placement: Sequence[Tuple[int, int]]
+                        ) -> Allocation:
+        self.release(alloc)
+        for h, c in new_placement:
+            self.free[h] -= c
+            self.jobs_on_host[h].add(alloc.job_id)
+        assert (self.free >= 0).all()
+        new = Allocation(alloc.job_id, sorted(new_placement))
+        self.allocations[alloc.job_id] = new
+        return new

@@ -1,195 +1,84 @@
-"""Cluster scheduler: chip-granular gang allocation (paper §3.4).
+"""Cluster scheduler facade: chip-granular gang allocation (paper §3.4).
 
 The paper's headline mechanism is scheduling threads/processes at vCPU
 granularity onto shared VMs instead of dedicating whole VMs.  The TPU
-adaptation schedules *Granules* (one per chip) onto shared hosts:
+adaptation schedules *Granules* (one per chip) onto shared hosts.
 
-* ``alloc_granular`` — Faabric's policy: fill the host already running the
-  job (locality), else the host with most free chips; a gang may fragment
-  across hosts.
-* ``alloc_slices``  — the fixed-slice baselines of §6.2: the cluster is
-  pre-carved into slices of ``slice_size`` chips (the "k containers per VM"
-  baselines); a job takes whole slices.
-* ``migration_plan`` — at barrier control points, find fragmented gangs that
-  now fit on fewer hosts and emit Granule moves (paper §3.3, Fig 8).
+All placement mechanics live in ``core.placement``: ``PlacementEngine``
+owns the free-chip accounting, gang allocation, reservations, and
+barrier-point migration planning, and ``PlacementPolicy`` implementations
+(binpack / spread / locality / fixed-slice) decide where a gang lands.
+``ClusterState`` survives as the thin facade the rest of the repo (and
+the tests) already speak:
 
-The same object drives the discrete-event simulator (paper Fig 10/11/14)
-and the live runtime's sub-mesh carving on the CPU test fabric.
+* ``alloc_granular`` — policy-driven chip-granular gang allocation
+  (default: Faabric's binpack).
+* ``alloc_slices``  — the fixed-slice baselines of §6.2 (the "k
+  containers per VM" baselines); a job takes whole slices.
+* ``migration_plan`` — at barrier control points, find fragmented gangs
+  that now fit on fewer hosts and emit Granule moves (paper §3.3, Fig 8).
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple, Union
 
-import numpy as np
+from repro.core.placement import (Allocation, FixedSlicePolicy,
+                                  PlacementEngine, PlacementPolicy)
 
-
-@dataclasses.dataclass
-class Allocation:
-    job_id: str
-    placement: List[Tuple[int, int]]        # [(host, n_chips)] sorted
-    slice_size: int = 0                     # 0 = granular
-
-    @property
-    def n(self) -> int:
-        return sum(c for _, c in self.placement)
-
-    @property
-    def hosts(self) -> List[int]:
-        return [h for h, _ in self.placement]
-
-    def fragmentation(self) -> int:
-        return len(self.placement)
-
-    def cross_host_fraction(self) -> float:
-        """χ = P[two random ranks sit on different hosts] — the collective
-        slow-path fraction used by the simulator's time model."""
-        n = self.n
-        if n <= 1:
-            return 0.0
-        return 1.0 - sum((c / n) ** 2 for _, c in self.placement)
+__all__ = ["Allocation", "ClusterState"]
 
 
 class ClusterState:
-    """Free-chip accounting for a cluster of identical hosts."""
+    """Free-chip accounting for a cluster of identical hosts — a facade
+    over ``PlacementEngine`` keeping the original call signatures."""
 
     def __init__(self, hosts: int, chips_per_host: int):
+        self.engine = PlacementEngine(hosts, chips_per_host)
         self.hosts = hosts
         self.chips_per_host = chips_per_host
-        self.free = np.full(hosts, chips_per_host, dtype=np.int64)
-        self.jobs_on_host: List[set] = [set() for _ in range(hosts)]
 
     # ---- capacity ----------------------------------------------------------
     @property
+    def free(self):
+        return self.engine.free
+
+    @property
+    def jobs_on_host(self):
+        return self.engine.jobs_on_host
+
+    @property
     def total_chips(self) -> int:
-        return self.hosts * self.chips_per_host
+        return self.engine.total_chips
 
     def idle_chips(self) -> int:
-        return int(self.free.sum())
+        return self.engine.idle_chips()
 
     def idle_fraction(self) -> float:
-        return self.idle_chips() / self.total_chips
+        return self.engine.idle_fraction()
 
-    # ---- granular (Faabric) policy -----------------------------------------
+    # ---- allocation ----------------------------------------------------------
     def alloc_granular(self, job_id: str, n: int,
-                       policy: str = "binpack") -> Optional[Allocation]:
-        """Chip-granular gang allocation.
+                       policy: Union[str, PlacementPolicy] = "binpack"
+                       ) -> Optional[Allocation]:
+        """Chip-granular gang allocation under a named placement policy
+        (binpack / spread / locality) or a ``PlacementPolicy`` instance."""
+        return self.engine.allocate(job_id, n, policy=policy)
 
-        binpack: prefer hosts with the *least* free chips that still help
-        (dense packing); spread: most-free-first (load balancing);
-        locality handled implicitly by taking the fewest hosts possible.
-        """
-        if n > self.idle_chips():
-            return None
-        if policy == "binpack":
-            # fewest hosts: greedily take the most-free hosts first so the
-            # gang spans as few hosts as possible (locality-first)
-            order = np.argsort(self.free)[::-1]
-            placement = []
-            remaining = n
-            for h in order:
-                if self.free[h] == 0:
-                    continue
-                take = min(int(self.free[h]), remaining)
-                placement.append((int(h), take))
-                remaining -= take
-                if remaining == 0:
-                    break
-        elif policy == "spread":
-            # round-robin chips over hosts (load balancing)
-            counts: Dict[int, int] = {}
-            free = self.free.copy()
-            remaining = n
-            while remaining > 0:
-                candidates = np.nonzero(free > 0)[0]
-                if candidates.size == 0:
-                    break
-                h = int(candidates[np.argmax(free[candidates])])
-                counts[h] = counts.get(h, 0) + 1
-                free[h] -= 1
-                remaining -= 1
-            placement = sorted(counts.items())
-        else:
-            raise ValueError(policy)
-        if remaining:
-            return None
-        for h, c in placement:
-            self.free[h] -= c
-            self.jobs_on_host[h].add(job_id)
-        return Allocation(job_id, sorted(placement))
-
-    # ---- fixed-slice baselines ----------------------------------------------
     def alloc_slices(self, job_id: str, n_chips: int,
                      slice_size: int) -> Optional[Allocation]:
-        """Whole-slice allocation: ceil(n/slice) slices, each on one host.
-
-        This emulates the paper's k-containers-per-VM baselines: a host
-        holds ``chips_per_host // slice_size`` slices; slices are never
-        shared between jobs.
-        """
-        n_slices = -(-n_chips // slice_size)
-        placement: Dict[int, int] = {}
-        need = n_slices
-        for h in np.argsort(self.free)[::-1]:
-            while self.free[h] - placement.get(int(h), 0) >= slice_size \
-                    and need > 0:
-                placement[int(h)] = placement.get(int(h), 0) + slice_size
-                need -= 1
-            if need == 0:
-                break
-        if need:
-            return None
-        for h, c in placement.items():
-            self.free[h] -= c
-            self.jobs_on_host[h].add(job_id)
-        return Allocation(job_id, sorted(placement.items()),
-                          slice_size=slice_size)
+        """Whole-slice allocation: ceil(n/slice) slices, each on one host."""
+        return self.engine.allocate(job_id, n_chips,
+                                    policy=FixedSlicePolicy(slice_size))
 
     # ---- free ----------------------------------------------------------------
     def release(self, alloc: Allocation) -> None:
-        for h, c in alloc.placement:
-            self.free[h] += c
-            self.jobs_on_host[h].discard(alloc.job_id)
-        assert (self.free <= self.chips_per_host).all()
+        self.engine.release(alloc)
 
     # ---- migration (defragmentation at barrier points) ------------------------
     def migration_plan(self, allocs: Sequence[Allocation]
                        ) -> List[Tuple[str, List[Tuple[int, int]]]]:
-        """For each fragmented granular gang, try to consolidate onto fewer
-        hosts using currently-free chips (+ the chips the gang already
-        holds).  Returns [(job_id, new_placement)]."""
-        plans = []
-        free = self.free.copy()
-        for alloc in allocs:
-            if alloc.slice_size or alloc.fragmentation() <= 1:
-                continue
-            held = dict(alloc.placement)
-            avail = free.copy()
-            for h, c in held.items():
-                avail[h] += c
-            # can the gang fit on fewer hosts?
-            order = np.argsort(avail)[::-1]
-            new_placement, remaining = [], alloc.n
-            for h in order:
-                if avail[h] <= 0 or remaining == 0:
-                    break
-                take = min(int(avail[h]), remaining)
-                new_placement.append((int(h), take))
-                remaining -= take
-            if remaining == 0 and len(new_placement) < alloc.fragmentation():
-                plans.append((alloc.job_id, sorted(new_placement)))
-                # commit against the scratch free map so plans don't overlap
-                for h, c in held.items():
-                    free[h] += c
-                for h, c in new_placement:
-                    free[h] -= c
-        return plans
+        return self.engine.migration_plan(allocs)
 
     def apply_migration(self, alloc: Allocation,
                         new_placement: List[Tuple[int, int]]) -> Allocation:
-        self.release(alloc)
-        for h, c in new_placement:
-            self.free[h] -= c
-            self.jobs_on_host[h].add(alloc.job_id)
-        assert (self.free >= 0).all()
-        return Allocation(alloc.job_id, sorted(new_placement))
+        return self.engine.apply_migration(alloc, new_placement)

@@ -20,17 +20,31 @@ from the paper's own microbenchmarks:
 * centralised-scheduler latency: a per-decision cost proportional to the
   host count (reproduces the 128-VM degradation of Fig 11).
 
+Every placement goes through ``core.placement.PlacementEngine`` — the same
+code path the live runtime uses — under a selectable policy (binpack /
+spread / locality for granular mode; fixed-slice for the baselines).
+
+Beyond the paper's all-jobs-at-t=0 FIFO replay, traces carry per-job
+**arrival times** (e.g. Poisson arrivals) and **priority classes**; the
+queue is ordered (priority desc, arrival, submission), and optional
+**backfill** lets queued jobs jump past a blocked head-of-line job — the
+shared-cluster, multi-tenant economics of §2.1.  With all arrivals at t=0,
+uniform priority, and backfill off, the event loop is exactly the paper's
+FIFO experiment.
+
 The simulator is deterministic given a seed.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import heapq
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.scheduler import Allocation, ClusterState
+from repro.core.placement import (Allocation, FixedSlicePolicy,
+                                  PlacementEngine, PlacementPolicy)
 
 BETA = {"mpi-compute": 0.4, "mpi-network": 13.0, "omp": 1.0}
 WASM_OVERHEAD_OMP = 1.25          # paper §6.4
@@ -45,6 +59,8 @@ class Job:
     kind: str                     # mpi-compute | mpi-network | omp
     parallelism: int              # MPI world size / OMP_NUM_THREADS
     work: float                   # chip-seconds at perfect scaling
+    arrival: float = 0.0          # submission time (0 = paper's replay)
+    priority: int = 0             # higher runs first
 
 
 @dataclasses.dataclass
@@ -78,6 +94,13 @@ class TraceResult:
     migrations: int
     waited: List[float]
     queue_drain_time: float = 0.0             # when the job queue emptied
+    cross_host_fractions: List[float] = dataclasses.field(
+        default_factory=list)                 # chi at placement, per job
+
+    def mean_cross_host_fraction(self) -> float:
+        if not self.cross_host_fractions:
+            return 0.0
+        return float(np.mean(self.cross_host_fractions))
 
     def idle_cdf(self, backlogged_only: bool = True) -> np.ndarray:
         """Time-weighted idle-fraction samples for CDF plotting.
@@ -100,9 +123,19 @@ class TraceResult:
 
 
 def generate_trace(n_jobs: int, kind: str, seed: int,
-                   chips_per_host: int = 8) -> List[Job]:
+                   chips_per_host: int = 8,
+                   arrival_rate: float = 0.0,
+                   priority_classes: Optional[Sequence[Tuple[int, float]]]
+                   = None) -> List[Job]:
     """Paper §6.2 traces: parallelism uniform over [2, 2*chips] for MPI
-    (world sizes up to 2 VMs) and [2, chips] for OpenMP."""
+    (world sizes up to 2 VMs) and [2, chips] for OpenMP.
+
+    ``arrival_rate`` > 0 draws Poisson arrivals (exponential inter-arrival
+    gaps with mean ``1/arrival_rate`` seconds); 0 keeps the paper's
+    all-at-t=0 replay.  ``priority_classes`` is [(priority, weight)] to
+    sample per-job priority classes.  Both use rng streams separate from
+    the job-size draws, so the base trace is identical across regimes.
+    """
     rng = np.random.default_rng(seed)
     jobs = []
     for i in range(n_jobs):
@@ -113,33 +146,81 @@ def generate_trace(n_jobs: int, kind: str, seed: int,
             n = int(rng.integers(2, chips_per_host + 1))
             work = 240.0
         jobs.append(Job(f"{kind}-{i}", kind, n, work))
+    return _assign_arrivals(jobs, seed, arrival_rate, priority_classes)
+
+
+def _assign_arrivals(jobs: List[Job], seed: int, arrival_rate: float,
+                     priority_classes) -> List[Job]:
+    """Stamp one Poisson arrival process / priority draw over a whole
+    trace (rng streams separate from the job-size draws)."""
+    if arrival_rate > 0:
+        arr_rng = np.random.default_rng([seed, 1])
+        t = 0.0
+        for job in jobs:
+            t += float(arr_rng.exponential(1.0 / arrival_rate))
+            job.arrival = t
+    if priority_classes:
+        pri_rng = np.random.default_rng([seed, 2])
+        pris = [p for p, _ in priority_classes]
+        w = np.asarray([w for _, w in priority_classes], dtype=np.float64)
+        picks = pri_rng.choice(len(pris), size=len(jobs), p=w / w.sum())
+        for job, k in zip(jobs, picks):
+            job.priority = pris[int(k)]
     return jobs
 
 
+def mixed_trace(n_jobs: int, seed: int, chips_per_host: int = 8,
+                arrival_rate: float = 0.0,
+                priority_classes: Optional[Sequence[Tuple[int, float]]]
+                = None) -> List[Job]:
+    """Interleaved mpi-compute / mpi-network / omp trace — the fragmented
+    multi-tenant mix used by the policy-sweep benchmarks.  Arrivals and
+    priorities are drawn once over the merged trace, so ``arrival_rate``
+    is the aggregate rate (not per job kind)."""
+    kinds = ("mpi-compute", "omp", "mpi-network")
+    per = -(-n_jobs // len(kinds))
+    parts = [generate_trace(per, k, seed + i, chips_per_host)
+             for i, k in enumerate(kinds)]
+    jobs = [parts[i % len(kinds)][i // len(kinds)] for i in range(n_jobs)]
+    for i, j in enumerate(jobs):           # unique ids after interleave
+        j.job_id = f"mix-{i}-{j.job_id}"
+    return _assign_arrivals(jobs, seed, arrival_rate, priority_classes)
+
+
 class Simulator:
-    """Event-driven execution of a FIFO job queue on a shared cluster."""
+    """Event-driven execution of a job trace on a shared cluster."""
 
     def __init__(self, hosts: int, chips_per_host: int, mode: str,
                  slice_size: int = 0, migrate: bool = True,
-                 barrier_interval: float = 5.0):
-        """mode: 'granular' (Faabric) or 'slices' (fixed baseline)."""
-        self.cluster = ClusterState(hosts, chips_per_host)
+                 barrier_interval: float = 5.0,
+                 policy: Union[str, PlacementPolicy] = "binpack",
+                 backfill: bool = False):
+        """mode: 'granular' (Faabric) or 'slices' (fixed baseline).
+
+        ``policy`` selects the granular placement policy (binpack /
+        spread / locality); 'slices' mode always uses fixed slices.
+        ``backfill`` lets queued jobs that fit run past a blocked
+        head-of-line job (capacity only shrinks while the head waits, so
+        no skipped job could have run sooner).
+        """
+        if mode == "slices":
+            pol: PlacementPolicy = FixedSlicePolicy(slice_size)
+        else:
+            pol = policy
+        self.engine = PlacementEngine(hosts, chips_per_host, policy=pol)
         self.mode = mode
         self.slice_size = slice_size
         self.migrate = migrate and mode == "granular"
         self.barrier_interval = barrier_interval
+        self.backfill = backfill
         self.sched_latency = SCHED_LATENCY_PER_HOST * hosts
 
     # ---- placement --------------------------------------------------------
     def _try_place(self, job: Job) -> Optional[Allocation]:
-        if self.mode == "granular":
-            return self.cluster.alloc_granular(job.job_id, job.parallelism)
-        if job.kind == "omp":
+        if self.mode != "granular" and job.kind == "omp":
             # shared-memory baseline: exactly one container
-            return self.cluster.alloc_slices(job.job_id, self.slice_size,
-                                             self.slice_size)
-        return self.cluster.alloc_slices(job.job_id, job.parallelism,
-                                         self.slice_size)
+            return self.engine.allocate(job.job_id, self.slice_size)
+        return self.engine.allocate(job.job_id, job.parallelism)
 
     def _eff_parallelism(self, job: Job, alloc: Allocation) -> int:
         if self.mode == "granular":
@@ -151,15 +232,28 @@ class Simulator:
 
     # ---- main loop ----------------------------------------------------------
     def run(self, jobs: List[Job]) -> TraceResult:
-        queue: List[Job] = list(jobs)
+        # queue key: (priority desc, arrival, submission order)
+        seq = {j.job_id: i for i, j in enumerate(jobs)}
+
+        def qkey(j: Job):
+            return (-j.priority, j.arrival, seq[j.job_id])
+
+        queue: List[Job] = sorted((j for j in jobs if j.arrival <= 0),
+                                  key=qkey)
+        arrivals = sorted((j for j in jobs if j.arrival > 0), key=qkey)
         running: Dict[str, RunningJob] = {}
-        heap: List[Tuple[float, int, str]] = []
+        heap: List[Tuple[float, int, int, str]] = []
         token = 0
         now = 0.0
         exec_times, waited = [], []
         idle_samples: List[Tuple[float, float]] = []
-        submit_time = {j.job_id: 0.0 for j in jobs}
+        chis: List[float] = []
         migrations = 0
+        ARRIVE, FINISH = 0, 1
+        for j in arrivals:
+            token += 1
+            heapq.heappush(heap, (j.arrival, token, ARRIVE, j.job_id))
+        pending_arrivals = {j.job_id: j for j in arrivals}
 
         def progress_to(t: float):
             for rj in running.values():
@@ -172,35 +266,55 @@ class Simulator:
             t_fin = now + remaining / rj.rate()
             token += 1
             rj.finish_event = token
-            heapq.heappush(heap, (t_fin, token, rj.job.job_id))
+            heapq.heappush(heap, (t_fin, token, FINISH, rj.job.job_id))
+
+        def start_job(job: Job, alloc: Allocation):
+            nonlocal now
+            now += self.sched_latency          # centralised scheduler
+            rj = RunningJob(job, alloc, start=now, last_update=now,
+                            eff_parallelism=self._eff_parallelism(
+                                job, alloc))
+            running[job.job_id] = rj
+            waited.append(now - max(0.0, job.arrival))
+            chis.append(alloc.cross_host_fraction())
+            schedule_finish(rj)
 
         def pump_queue():
-            nonlocal now
-            while queue:
-                alloc = self._try_place(queue[0])
+            i = 0
+            while i < len(queue):
+                alloc = self._try_place(queue[i])
                 if alloc is None:
-                    break
-                job = queue.pop(0)
-                now += self.sched_latency          # centralised scheduler
-                rj = RunningJob(job, alloc, start=now, last_update=now,
-                                eff_parallelism=self._eff_parallelism(
-                                    job, alloc))
-                running[job.job_id] = rj
-                waited.append(now - submit_time[job.job_id])
-                schedule_finish(rj)
-            idle_samples.append((now, self.cluster.idle_fraction()))
+                    if not self.backfill:
+                        break
+                    i += 1                     # backfill past blocked head
+                    continue
+                start_job(queue.pop(i), alloc)
+            idle_samples.append((now, self.engine.idle_fraction()))
 
         pump_queue()
         drain_time = 0.0
         while heap:
-            t, tok, job_id = heapq.heappop(heap)
+            t, tok, kind, job_id = heapq.heappop(heap)
+            if kind == ARRIVE:
+                job = pending_arrivals.pop(job_id)
+                now = max(now, t)
+                progress_to(now)
+                bisect.insort(queue, job, key=qkey)
+                pump_queue()
+                if not pending_arrivals and not queue \
+                        and drain_time == 0.0:
+                    drain_time = now           # backlog ended mid-arrivals
+                continue
             rj = running.get(job_id)
             if rj is None or rj.finish_event != tok:
                 continue                            # stale event
+            # monotone clock: scheduler-latency bumps during a pump can
+            # push `now` past an already-queued finish timestamp
+            t = max(now, t)
             progress_to(t)
             now = t
             # numerical slack: the job is done
-            self.cluster.release(rj.alloc)
+            self.engine.release(rj.alloc)
             del running[job_id]
             exec_times.append(now - rj.start)
             # barrier-point migration: consolidate fragmented gangs
@@ -208,31 +322,37 @@ class Simulator:
             if self.migrate and running:
                 candidates = [r.alloc for r in running.values()
                               if r.progress <= 0.8]
-                for jid, new_pl in self.cluster.migration_plan(candidates):
+                for jid, new_pl in self.engine.migration_plan(candidates):
                     r = running[jid]
                     progress_to(now)
-                    r.alloc = self.cluster.apply_migration(r.alloc, new_pl)
+                    r.alloc = self.engine.apply_migration(r.alloc, new_pl)
                     r.progress = max(
                         0.0, r.progress - MIGRATION_COST_S * r.rate())
                     migrations += 1
                     schedule_finish(r)
             had_queue = bool(queue)
             pump_queue()
-            if had_queue and not queue and drain_time == 0.0:
+            if had_queue and not queue and not pending_arrivals \
+                    and drain_time == 0.0:
                 drain_time = now
         return TraceResult(makespan=now, exec_times=exec_times,
                            idle_samples=idle_samples, migrations=migrations,
-                           waited=waited, queue_drain_time=drain_time)
+                           waited=waited, queue_drain_time=drain_time,
+                           cross_host_fractions=chis)
 
 
 def run_baselines(jobs: List[Job], hosts: int, chips_per_host: int = 8,
-                  migrate: bool = True) -> Dict[str, TraceResult]:
+                  migrate: bool = True,
+                  policy: Union[str, PlacementPolicy] = "binpack",
+                  backfill: bool = False) -> Dict[str, TraceResult]:
     """Faabric vs the paper's fixed-slice baselines (1/2/4/8 ctr per VM)."""
     out = {}
     out["faabric"] = Simulator(hosts, chips_per_host, "granular",
-                               migrate=migrate).run(jobs)
+                               migrate=migrate, policy=policy,
+                               backfill=backfill).run(jobs)
     for k in (1, 2, 4, 8):
         slice_size = chips_per_host // k
         out[f"{k}-ctr-per-vm"] = Simulator(
-            hosts, chips_per_host, "slices", slice_size=slice_size).run(jobs)
+            hosts, chips_per_host, "slices", slice_size=slice_size,
+            backfill=backfill).run(jobs)
     return out

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.compat import tpu_compiler_params
+
 
 def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, sfin_ref,
                 s_scr, *, nc: int):
@@ -103,7 +105,7 @@ def ssd_scan(x, dt, a, b, c, *, chunk: int = 64, interpret: bool = False):
         out_shape=[jax.ShapeDtypeStruct((bs, h, l, p), x.dtype),
                    jax.ShapeDtypeStruct((bs, h, p, n), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, a, b, c)

@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.compat import tpu_compiler_params
+
 NEG = -1e30
 
 
@@ -116,7 +118,7 @@ def mlstm_scan(q, k, v, logi, logf, *, chunk: int = 128,
         scratch_shapes=[pltpu.VMEM((hd, hd), jnp.float32),
                         pltpu.VMEM((1, hd), jnp.float32),
                         pltpu.VMEM((1, 1), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, logi, logf)

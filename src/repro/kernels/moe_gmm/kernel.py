@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.compat import tpu_compiler_params
+
 BLOCK_M = 128
 BLOCK_F = 512
 
@@ -78,7 +80,7 @@ def expert_ffn(x, w1, w2, w3, *, act: str = "silu",
                                lambda ee, mi, fi: (ee, mi, 0)),
         out_shape=jax.ShapeDtypeStruct((e, m, d), x.dtype),
         scratch_shapes=[pltpu.VMEM((block_m, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w1, w3, w2)

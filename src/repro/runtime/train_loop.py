@@ -27,9 +27,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.checkpoint.manager import CheckpointManager
 from repro.configs.base import ArchConfig
 from repro.core import collectives as coll
+from repro.core import compat
 from repro.core import control as ctl
 from repro.core import elastic as elastic_mod
 from repro.core.granule import GranuleGroup, make_group_from_devices
+from repro.core.placement import PlacementEngine
 from repro.data import pipeline as dp
 from repro.models import model as model_mod
 from repro.optim import adamw
@@ -51,6 +53,11 @@ class RuntimeConfig:
     # elastic schedule: {step: new_world_size}
     rescale_at: Dict[int, int] = dataclasses.field(default_factory=dict)
     pods: int = 1                     # >1: two-level gang (pod, data) mesh
+    # gang placement policy on the host fabric (binpack/spread/locality)
+    placement_policy: str = "binpack"
+    # free-chip-driven elastic policy, consulted at every control point;
+    # None = only the explicit rescale_at schedule fires
+    elastic: Optional[elastic_mod.ElasticPolicy] = None
 
 
 def make_gang_mesh(devices: Sequence[Any], pods: int = 1) -> Mesh:
@@ -84,7 +91,7 @@ def make_dp_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
     resid_spec = P(slow, fast) if slow else P(None, fast)
 
     def train_step(state, batch, resid):
-        grads, metrics, new_resid = jax.shard_map(
+        grads, metrics, new_resid = compat.shard_map(
             per_device, mesh=mesh,
             in_specs=(P(), jax.tree.map(
                 lambda _: dp_spec, batch), resid_spec),
@@ -113,6 +120,19 @@ class FaabricTrainRuntime:
         self.group: GranuleGroup = make_group_from_devices(
             job_id, self.devices, rt.chips_per_host, semantics="process")
         self.mesh = make_gang_mesh(self.devices, rt.pods)
+        # Placement engine over the whole host fabric: the same code path
+        # the simulator uses decides which chips this gang occupies at
+        # rescale/migrate control points (paper §3.3/§3.4).
+        self.fabric = list(jax.devices())
+        cph = rt.chips_per_host
+        n_hosts = -(-len(self.fabric) // cph)
+        self.engine = PlacementEngine(n_hosts, cph,
+                                      policy=rt.placement_policy)
+        pad = n_hosts * cph - len(self.fabric)
+        if pad:                       # phantom chips on the ragged last host
+            self.engine.bind("_fabric-pad", [(n_hosts - 1, pad)])
+        self.gang_alloc = self.engine.bind(
+            job_id, self._placement_of(self.devices))
         self.ckpt = CheckpointManager(
             rt.ckpt_dir, job_id=job_id,
             incremental_every=rt.incremental_ckpt_every)
@@ -134,6 +154,25 @@ class FaabricTrainRuntime:
         return {}
 
     # ---- state/placement -----------------------------------------------------
+    def _placement_of(self, devices: Sequence[Any]):
+        """[(host, n_chips)] of a device list on the fabric's host grid."""
+        idx = {d: i for i, d in enumerate(self.fabric)}
+        counts: Dict[int, int] = {}
+        for d in devices:
+            h = idx[d] // self.rt.chips_per_host
+            counts[h] = counts.get(h, 0) + 1
+        return sorted(counts.items())
+
+    def _devices_for(self, placement) -> List[Any]:
+        """Concrete devices of an engine placement.  The engine models a
+        single tenant (this gang + the fabric pad), so host h's first
+        ``c`` chips are exactly the ones the placement owns."""
+        cph = self.rt.chips_per_host
+        out: List[Any] = []
+        for h, c in placement:
+            out.extend(self.fabric[h * cph:h * cph + c])
+        return out
+
     def _shardings(self, state):
         rep = NamedSharding(self.mesh, P())
         return jax.tree.map(lambda _: rep, state)
@@ -162,24 +201,42 @@ class FaabricTrainRuntime:
         return restored, ck_step
 
     def _migrate_gang(self, state):
-        """Straggler response: live-migrate the gang to a rotated device
-        placement (paper §3.3 — on a real cluster the scheduler would pick
-        fresh hosts; on the host fabric this exercises the same machinery:
-        barrier point, live resharding, group re-addressing)."""
-        rotated = self.devices[1:] + self.devices[:1]
-        new_state, self.mesh = elastic_mod.reshard_gang(state, rotated)
-        if self.rt.pods > 1 and len(rotated) % self.rt.pods == 0:
-            self.mesh = make_gang_mesh(rotated, self.rt.pods)
-        self.devices = rotated
+        """Straggler response: live-migrate the gang (paper §3.3).
+
+        The placement engine plans the move: a fragmented gang that now
+        fits on fewer hosts is consolidated (the barrier-point
+        defragmentation of Fig 8).  When no consolidation exists — e.g.
+        the gang already spans the minimum host count — fall back to
+        rotating the rank order within the same chips, which still
+        exercises the full machinery: barrier point, live resharding,
+        group re-addressing."""
+        plans = self.engine.migration_plan([self.gang_alloc])
+        if plans:
+            _, new_pl = plans[0]
+            self.gang_alloc = self.engine.apply_migration(
+                self.gang_alloc, new_pl)
+            new_devices = self._devices_for(new_pl)
+        else:
+            new_devices = self.devices[1:] + self.devices[:1]
+        new_state, self.mesh = elastic_mod.reshard_gang(state, new_devices)
+        if self.rt.pods > 1 and len(new_devices) % self.rt.pods == 0:
+            self.mesh = make_gang_mesh(new_devices, self.rt.pods)
+        self.devices = new_devices
         self.group = make_group_from_devices(
-            self.job_id, rotated, self.rt.chips_per_host)
+            self.job_id, new_devices, self.rt.chips_per_host)
         self._build()
         return new_state
 
     def _rescale(self, state, resid, new_world: int):
-        new_devices = self.devices[:new_world] if (
-            new_world <= len(self.devices)) else list(
-                jax.devices())[:new_world]
+        """Grow/shrink the gang to ``new_world`` chips: release the gang's
+        chips back to the shared pool and let the placement engine carve
+        the new sub-mesh under the configured policy (paper §2.1)."""
+        new_world = min(new_world, len(self.fabric))
+        self.engine.release(self.gang_alloc)
+        alloc = self.engine.allocate(self.job_id, new_world)
+        assert alloc is not None, "rescale within fabric capacity"
+        self.gang_alloc = alloc
+        new_devices = self._devices_for(alloc.placement)
         state, self.mesh = elastic_mod.reshard_gang(state, new_devices)
         if self.rt.pods > 1 and len(new_devices) % self.rt.pods == 0:
             self.mesh = make_gang_mesh(new_devices, self.rt.pods)
@@ -234,6 +291,13 @@ class FaabricTrainRuntime:
                 state, resid = self._rescale(state, resid,
                                              rt.rescale_at[step + 1])
                 rescales += 1
+            elif rt.elastic is not None:
+                # free-chip-driven elasticity through the shared engine
+                new_world = rt.elastic.decide(len(self.devices),
+                                              self.engine)
+                if new_world is not None:
+                    state, resid = self._rescale(state, resid, new_world)
+                    rescales += 1
             step += 1
         self.ckpt.wait()
         return state, {"losses": [losses[s] for s in sorted(losses)],

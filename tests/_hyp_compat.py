@@ -1,0 +1,32 @@
+"""Property tests with an example-based fallback.
+
+When ``hypothesis`` is installed, ``hyp_or_examples`` wraps a test in the
+usual ``@settings(...) @given(...)`` pair.  On minimal environments
+(no hypothesis), the same test body runs as a plain
+``pytest.mark.parametrize`` over a hand-picked example set — the suite
+still collects and the invariants still get exercised, just without the
+random search.
+"""
+import inspect
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    given = settings = st = None
+    HAVE_HYPOTHESIS = False
+
+
+def hyp_or_examples(build_strategies, examples, max_examples=40):
+    """Decorator: ``build_strategies(st)`` must return the positional
+    strategy tuple for ``@given``; ``examples`` is the fallback list of
+    argument tuples (or bare values for single-argument tests)."""
+    def deco(fn):
+        if HAVE_HYPOTHESIS:
+            return settings(max_examples=max_examples, deadline=None)(
+                given(*build_strategies(st))(fn))
+        argnames = [p for p in inspect.signature(fn).parameters]
+        return pytest.mark.parametrize(",".join(argnames), examples)(fn)
+    return deco

@@ -1,21 +1,33 @@
-"""Property-based tests (hypothesis) for the byte-wise diff protocol —
-Table 3 merge-op algebra and diff/apply invariants (paper §4)."""
+"""Property-based tests (hypothesis, with example fallback) for the
+byte-wise diff protocol — Table 3 merge-op algebra and diff/apply
+invariants (paper §4)."""
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
+import _hyp_compat as hc
 from repro.core import diffsync as D
 
-arrays = st.integers(1, 4000).flatmap(
-    lambda n: st.builds(
-        lambda seed: np.random.default_rng(seed).normal(
-            size=n).astype(np.float32) + 2.0,
-        st.integers(0, 2 ** 16)))
+
+def _arr(n: int, seed: int) -> np.ndarray:
+    return np.random.default_rng(seed).normal(
+        size=n).astype(np.float32) + 2.0
 
 
-@given(arrays, st.integers(0, 2 ** 16))
-@settings(max_examples=40, deadline=None)
+def _arrays(st):
+    return st.integers(1, 4000).flatmap(
+        lambda n: st.builds(
+            lambda seed: np.random.default_rng(seed).normal(
+                size=n).astype(np.float32) + 2.0,
+            st.integers(0, 2 ** 16)))
+
+
+_EXAMPLE_ARRAYS = [_arr(1, 0), _arr(7, 1), _arr(400, 2), _arr(4000, 3)]
+
+
+@hc.hyp_or_examples(
+    lambda st: (_arrays(st), st.integers(0, 2 ** 16)),
+    examples=[(a, s) for s, a in enumerate(_EXAMPLE_ARRAYS)])
 def test_sum_merge_is_grad_accumulation(a0, seed):
     """A1 = A0 + (B1 - B0): merging N children == summing their deltas."""
     rng = np.random.default_rng(seed)
@@ -30,8 +42,7 @@ def test_sum_merge_is_grad_accumulation(a0, seed):
     np.testing.assert_allclose(main, a0 + sum(deltas), atol=1e-5)
 
 
-@given(arrays)
-@settings(max_examples=40, deadline=None)
+@hc.hyp_or_examples(lambda st: (_arrays(st),), examples=_EXAMPLE_ARRAYS)
 def test_overwrite_roundtrip(a0):
     """diff(old, new) applied to old reproduces new exactly."""
     rng = np.random.default_rng(1)
@@ -42,16 +53,17 @@ def test_overwrite_roundtrip(a0):
     np.testing.assert_array_equal(D.apply_leaf(a0, d), new)
 
 
-@given(arrays)
-@settings(max_examples=40, deadline=None)
+@hc.hyp_or_examples(lambda st: (_arrays(st),), examples=_EXAMPLE_ARRAYS)
 def test_clean_state_empty_diff(a0):
     d = D.diff_leaf(a0, a0.copy())
     assert d.idx.size == 0
     np.testing.assert_array_equal(D.apply_leaf(a0, d), a0)
 
 
-@given(arrays, st.sampled_from(["sum", "subtract"]))
-@settings(max_examples=40, deadline=None)
+@hc.hyp_or_examples(
+    lambda st: (_arrays(st), st.sampled_from(["sum", "subtract"])),
+    examples=[(_EXAMPLE_ARRAYS[1], "sum"), (_EXAMPLE_ARRAYS[2], "subtract"),
+              (_EXAMPLE_ARRAYS[3], "sum")])
 def test_sum_subtract_inverse(a0, op):
     """subtract(A0, B0, B1) == sum(A0, B1, B0): Table 3 algebra."""
     rng = np.random.default_rng(2)
@@ -62,8 +74,8 @@ def test_sum_subtract_inverse(a0, op):
     np.testing.assert_allclose(via_sub + via_sum, 2 * a0, atol=1e-4)
 
 
-@given(st.integers(0, 2 ** 16))
-@settings(max_examples=30, deadline=None)
+@hc.hyp_or_examples(lambda st: (st.integers(0, 2 ** 16),),
+                    examples=[0, 7, 12345], max_examples=30)
 def test_multiply_merge(seed):
     rng = np.random.default_rng(seed)
     a0 = rng.uniform(1, 2, 2048).astype(np.float32)
@@ -74,8 +86,8 @@ def test_multiply_merge(seed):
     np.testing.assert_allclose(merged, a0 * scale, rtol=1e-4)
 
 
-@given(st.integers(0, 2 ** 16))
-@settings(max_examples=20, deadline=None)
+@hc.hyp_or_examples(lambda st: (st.integers(0, 2 ** 16),),
+                    examples=[1, 42, 65535], max_examples=20)
 def test_tree_diff_only_ships_dirty_bytes(seed):
     rng = np.random.default_rng(seed)
     tree = {"a": rng.normal(size=(64, 64)).astype(np.float32),

@@ -28,8 +28,8 @@ def test_collective_modes_agree():
     print(run_sub("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.core import collectives as C
-        mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.core.compat import make_mesh
+        mesh = make_mesh((2, 4), ("pod", "data"))
         tree = {"a": jax.random.normal(jax.random.PRNGKey(0), (8, 4, 3)),
                 "b": jax.random.normal(jax.random.PRNGKey(1), (8, 7))}
         expect = jax.tree.map(lambda x: jnp.broadcast_to(x.mean(0), x.shape),
@@ -48,8 +48,8 @@ def test_compressed_allreduce_error_feedback_converges():
     print(run_sub("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.core import collectives as C
-        mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                             axis_types=(jax.sharding.AxisType.Auto,)*2)
+        from repro.core.compat import make_mesh
+        mesh = make_mesh((2, 4), ("pod", "data"))
         tree = {"g": jax.random.normal(jax.random.PRNGKey(0), (8, 64))}
         f = jax.jit(C.build_tree_allreduce(mesh, mode="compressed",
                                            compress_frac=0.25))
