@@ -1,12 +1,16 @@
 # Tier-1 verification and fast iteration targets.
 PY ?= python
 
-.PHONY: check quick
+.PHONY: check quick bench-smoke
 
 # the repo's tier-1 gate (see ROADMAP.md)
 check:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
-# fast subset for scheduler/placement/simulator iteration
+# fast subset for scheduler/placement/simulator/fabric iteration
 quick:
-	PYTHONPATH=src $(PY) -m pytest -q -k "placement or scheduler or simulator"
+	PYTHONPATH=src $(PY) -m pytest -q -k "(placement or scheduler or simulator or fabric) and not run_trace and not gangs and not resume and not shared"
+
+# benchmark smoke (the CI bench step)
+bench-smoke:
+	PYTHONPATH=src:. $(PY) benchmarks/run.py --only bench_makespan

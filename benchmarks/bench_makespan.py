@@ -61,3 +61,22 @@ def run(report):
             report(f"arrivals/{regime}/{tag}/mean_wait",
                    round(float(np.mean(r.waited)), 1), "s",
                    "multi-tenant arrivals")
+
+    # ---- priority preemption: high-priority latency vs churn ---------------
+    def trace():
+        return S.generate_trace(100, "mpi-compute", seed=11,
+                                arrival_rate=0.4,
+                                priority_classes=[(0, 0.85), (5, 0.15)])
+
+    for preempt in (False, True):
+        r = S.Simulator(16, 8, "granular", preempt=preempt).run(trace())
+        hi = [j for j in trace() if j.priority > 0]
+        ms = r.makespans(hi)
+        tag = "preempt" if preempt else "no-preempt"
+        report(f"preemption/{tag}/hi_pri_mean_makespan",
+               round(float(np.mean(list(ms.values()))), 1), "s",
+               "priority classes / rFaaS-style reclamation")
+        report(f"preemption/{tag}/makespan", round(r.makespan, 1), "s",
+               "priority classes")
+        report(f"preemption/{tag}/evictions", r.preemptions, "count",
+               "checkpoint + requeue + resume")

@@ -1,13 +1,19 @@
 """Benchmark driver: one module per paper table/figure.
 
 Prints ``bench,name,value,unit,paper_ref`` CSV lines; ``--only`` selects
-one benchmark; results also land in results/bench.csv.
+one benchmark; results land in results/bench.csv plus one standardized
+``results/BENCH_<name>.json`` per benchmark (schema below) so the perf
+trajectory is machine-readable across PRs:
+
+    {"bench": str, "schema": 1, "unix_time": float, "wall_s": float,
+     "metrics": {name: {"value": num, "unit": str, "note": str}}}
 """
 from __future__ import annotations
 
 import argparse
 import csv
 import importlib
+import json
 import os
 import sys
 import time
@@ -20,29 +26,54 @@ BENCHES = [
     "bench_migration",        # Fig 14
 ]
 
-OUT = os.path.join(os.path.dirname(__file__), "..", "results", "bench.csv")
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+OUT = os.path.join(RESULTS_DIR, "bench.csv")
+
+
+def write_bench_json(bench: str, metrics, wall_s: float) -> str:
+    path = os.path.join(os.path.abspath(RESULTS_DIR),
+                        f"BENCH_{bench}.json")
+    payload = {
+        "bench": bench,
+        "schema": 1,
+        "unix_time": time.time(),
+        "wall_s": round(wall_s, 2),
+        "metrics": {name: {"value": value, "unit": unit, "note": note}
+                    for name, value, unit, note in metrics},
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+    return path
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=BENCHES)
     args = ap.parse_args()
+    os.makedirs(os.path.abspath(RESULTS_DIR), exist_ok=True)
     rows = []
     current = ""
+    current_metrics = []
+    # stdout is real CSV (notes may contain commas -> quoted), matching
+    # the results/bench.csv writer exactly
+    stdout_csv = csv.writer(sys.stdout)
 
     def report(name, value, unit="", note=""):
         rows.append((current, name, value, unit, note))
-        print(f"{current},{name},{value},{unit},{note}")
+        current_metrics.append((name, value, unit, note))
+        stdout_csv.writerow([current, name, value, unit, note])
 
-    print("bench,name,value,unit,paper_ref")
+    stdout_csv.writerow(["bench", "name", "value", "unit", "paper_ref"])
     for mod_name in ([args.only] if args.only else BENCHES):
         current = mod_name
+        current_metrics = []
         mod = importlib.import_module(f"benchmarks.{mod_name}")
         t0 = time.time()
         mod.run(report)
-        rows.append((mod_name, "bench_wall", round(time.time() - t0, 1),
-                     "s", ""))
-    os.makedirs(os.path.dirname(os.path.abspath(OUT)), exist_ok=True)
+        wall = time.time() - t0
+        rows.append((mod_name, "bench_wall", round(wall, 1), "s", ""))
+        path = write_bench_json(mod_name, current_metrics, wall)
+        print(f"# wrote {path}")
     with open(OUT, "w", newline="") as f:
         w = csv.writer(f)
         w.writerow(["bench", "name", "value", "unit", "paper_ref"])

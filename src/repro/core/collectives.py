@@ -164,7 +164,6 @@ def tree_sync_body(tree, mode: str, fast: str, slow: Optional[str],
     """Per-device gradient sync of a pytree (call inside shard_map).
 
     Returns (mean tree, new residual shard or None)."""
-    n_fast_pad = 1
     vec, spec = flatten_tree(tree, pad_to=n_total)  # divisible by n_fast too
     if mode == "flat":
         out, resid = flat_psum(vec, [a for a in (fast, slow) if a]), None

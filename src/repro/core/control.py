@@ -6,12 +6,17 @@ all-reduce already synchronises the gang, so it is a barrier control point
 with no in-flight messages (paper §5.2's precondition for migration).
 
 ``ControlPointRunner`` is consulted by the runtime loop at every step
-boundary and may emit actions:
+boundary (via ``GangHandle.control_point``) and may emit actions:
 
     checkpoint   periodic / incremental snapshot
     migrate      consolidate a fragmented gang (locality)
-    rescale      grow/shrink the data-parallel world (elasticity)
+    rescale      grow/shrink the data-parallel world (elasticity;
+                 routed through the gang handle's shared engine)
     recover      gang-restart from the last snapshot after a failure
+
+``Action`` is the shared vocabulary of the whole scheduling stack: the
+trace simulator logs its start/preempt/resume/migrate/finish decisions
+as the same records, so simulated and live schedules diff directly.
 
 Straggler mitigation: an EWMA of step times flags steps slower than
 ``straggler_factor`` x the moving average; persistent stragglers trigger a

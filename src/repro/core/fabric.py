@@ -1,0 +1,559 @@
+"""The shared multi-tenant Fabric: one device pool, many gangs (§2.1).
+
+Faabric's core claim is that *many applications share one cluster* under
+fine-grained (Granule-level) scheduling with preemption-safe elasticity
+and locality-driven migration.  This module is that shared layer for the
+live runtime:
+
+* ``Fabric`` owns the host fabric — the concrete jax devices, the
+  per-host free-device pool (including the ragged last host), and the
+  ``PlacementEngine`` that every tenant's placement decision goes
+  through.  Multiple gangs coexist on one fabric with disjoint device
+  sets; chips released by one gang are immediately placeable for
+  another.
+
+* ``GangHandle`` encapsulates one gang's lifecycle::
+
+      allocate -> build mesh/GranuleGroup -> step -> control point
+               -> migrate / rescale / preempt -> resume -> release
+
+  Placement changes re-address the ``GranuleGroup`` *in place*
+  (``readdress``/``resize``) so rank-keyed control-plane queues and the
+  migration epoch survive the move, as the paper requires (Fig 8).
+  Workload state moves with ``core.migration``/``core.snapshot``:
+  migrate/rescale reshard live state onto the new sub-mesh; preempt
+  checkpoints state to a host-side ``Snapshot`` and frees the chips;
+  resume restores bit-exactly (fingerprint-verified) on a fresh
+  placement.
+
+* ``LiveTraceRunner`` closes the simulate→execute gap: it subclasses the
+  discrete-event ``Simulator`` — inheriting the queueing discipline,
+  priority classes, Poisson arrivals, preemption and the placement
+  engine — and overrides the event hooks to run *real* train/serve gangs
+  on the fabric while virtual time drives scheduling.  Because live
+  execution and ``Fabric.predict_trace`` share one event loop and one
+  placement code path, the live per-job completion order is directly
+  comparable with the simulated prediction for the same trace.
+
+Workload protocol (implemented by ``runtime.gang_workloads``): a gang's
+payload is any object with
+
+    ``state``                 replicated pytree — the snapshot/migration
+                              unit (None until started)
+    ``steps_done`` / ``total_steps`` / ``done``
+    ``bind(handle)``          (re)compile step fns for ``handle.mesh``;
+                              called at start and after every placement
+                              change
+    ``init_state(handle)``    create ``state`` (first start only)
+    ``run_step(handle)``      execute one real step, advance
+                              ``steps_done``, return a metrics dict
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core import control as ctl
+from repro.core import elastic as elastic_mod
+from repro.core import snapshot as snap_mod
+from repro.core.granule import GranuleGroup
+from repro.core.placement import (Allocation, PlacementEngine,
+                                  PlacementPolicy, PreemptPolicy)
+from repro.core.simulator import Job, Simulator, TraceResult
+
+
+def make_gang_mesh(devices: Sequence[Any], pods: int = 1) -> Mesh:
+    """Gang mesh: 1-D ``(data,)``, or two-level ``(pod, data)`` when the
+    gang divides into ``pods`` equal pods."""
+    devs = np.asarray(list(devices))
+    if pods > 1 and len(devices) % pods == 0:
+        return Mesh(devs.reshape(pods, -1), ("pod", "data"))
+    return Mesh(devs, ("data",))
+
+
+class GangWorkload:
+    """Minimal base for the workload protocol (see module docstring)."""
+
+    state: Any = None
+    steps_done: int = 0
+    total_steps: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.steps_done >= self.total_steps
+
+    def bind(self, handle: "GangHandle") -> None:
+        raise NotImplementedError
+
+    def init_state(self, handle: "GangHandle") -> None:
+        raise NotImplementedError
+
+    def run_step(self, handle: "GangHandle") -> Dict[str, Any]:
+        raise NotImplementedError
+
+
+class GangHandle:
+    """One gang's lifecycle on a shared ``Fabric``.
+
+    The handle owns the gang's *placement* artifacts — ``Allocation``,
+    concrete devices, ``GranuleGroup``, mesh — and moves the caller's
+    (opaque, replicated) state pytree through placement changes.  State
+    is passed in and returned functionally so drivers keep ownership.
+    """
+
+    def __init__(self, fabric: "Fabric", job_id: str, priority: int = 0,
+                 pods: int = 1,
+                 policy: Union[str, PlacementPolicy, None] = None):
+        self.fabric = fabric
+        self.job_id = job_id
+        self.priority = priority
+        self.pods = pods
+        self.policy = policy
+        self.alloc: Optional[Allocation] = None
+        self.devices: List[Any] = []
+        self.group: Optional[GranuleGroup] = None
+        self.mesh: Optional[Mesh] = None
+        self.snapshot: Optional[snap_mod.Snapshot] = None
+        self.status = "created"     # created|running|preempted|released
+        self.control: Optional[ctl.ControlPointRunner] = None
+        self.epoch_log: List[Dict[str, Any]] = []
+
+    @property
+    def n(self) -> int:
+        return len(self.devices)
+
+    # ---- attach / detach (device + group bookkeeping) ----------------------
+    def attach(self, alloc: Allocation,
+               devices: Optional[Sequence[Any]] = None) -> None:
+        """Bind this gang to an engine allocation: claim concrete devices
+        and build (or in-place re-address) the GranuleGroup and mesh."""
+        self.alloc = alloc
+        self.devices = list(devices if devices is not None
+                            else self.fabric.claim(alloc.placement))
+        placement = [(self.fabric.host_of(d), d) for d in self.devices]
+        if self.group is None:
+            self.group = GranuleGroup(self.job_id, len(self.devices),
+                                      placement)
+        elif self.group.size == len(self.devices):
+            self.group.readdress(placement)     # queues + epoch survive
+        else:
+            self.group.resize(placement)
+        self.mesh = make_gang_mesh(self.devices, self.pods)
+        self.status = "running"
+
+    def detach(self) -> None:
+        """Return devices to the fabric pool (engine accounting is the
+        caller's: release/preempt handle it in engine-managed mode, the
+        trace runner's event loop in adopted mode)."""
+        self.fabric.reclaim(self.devices)
+        self.devices = []
+        self.alloc = None
+
+    # ---- control point -----------------------------------------------------
+    def control_point(self, step: int, step_time: float) -> List[ctl.Action]:
+        """Evaluate this gang's step-boundary control point (checkpoint /
+        migrate / rescale / recover triggers)."""
+        if self.control is None:
+            return []
+        return self.control.on_step(step, step_time, len(self.devices))
+
+    # ---- migrate -----------------------------------------------------------
+    def migrate(self, state: Any) -> Tuple[Any, bool]:
+        """Barrier-point live migration (paper §3.3, Fig 8).
+
+        The engine plans a consolidation onto fewer hosts; when none
+        exists the gang rotates rank order within its own chips, which
+        still exercises the full machinery (barrier, live resharding,
+        in-place group re-addressing).  Returns (state, devices_changed).
+        """
+        assert self.status == "running"
+        engine = self.fabric.engine
+        plans = engine.migration_plan([self.alloc])
+        if plans:
+            _, new_pl = plans[0]
+            self.alloc = engine.apply_migration(self.alloc, new_pl)
+            self.fabric.reclaim(self.devices)
+            new_devices = self.fabric.claim(new_pl)
+        else:
+            new_devices = self.devices[1:] + self.devices[:1]
+        changed = new_devices != self.devices
+        state, _ = elastic_mod.reshard_gang(state, new_devices)
+        self.devices = new_devices
+        self.group.readdress([(self.fabric.host_of(d), d)
+                              for d in new_devices])
+        self.mesh = make_gang_mesh(new_devices, self.pods)
+        self.epoch_log.append({"kind": "migrate",
+                               "epoch": self.group.epoch})
+        return state, changed
+
+    # ---- rescale -----------------------------------------------------------
+    def rescale(self, state: Any, new_world: int) -> Any:
+        """Grow/shrink to ``new_world`` chips: release this gang's chips
+        to the shared pool and let the engine carve the new sub-mesh
+        under the configured policy (paper §2.1)."""
+        assert self.status == "running"
+        engine = self.fabric.engine
+        new_world = min(new_world, engine.total_chips)
+        old_placement = self.alloc.placement
+        old_devices = self.devices
+        engine.release(self.alloc)
+        self.fabric.reclaim(old_devices)
+        alloc = engine.allocate(self.job_id, new_world, policy=self.policy)
+        if alloc is None:            # other tenants hold the delta: undo
+            self.alloc = engine.bind(self.job_id, old_placement)
+            self.devices = self.fabric.claim_exact(old_devices)
+            raise RuntimeError(
+                f"rescale to {new_world} not placeable on shared fabric")
+        self.alloc = alloc
+        new_devices = self.fabric.claim(alloc.placement)
+        state, _ = elastic_mod.reshard_gang(state, new_devices)
+        self.devices = new_devices
+        self.group.resize([(self.fabric.host_of(d), d)
+                           for d in new_devices])
+        self.mesh = make_gang_mesh(new_devices, self.pods)
+        self.epoch_log.append({"kind": "rescale", "to": new_world,
+                               "epoch": self.group.epoch})
+        return state
+
+    # ---- preempt / resume ---------------------------------------------------
+    def preempt(self, state: Any, step: int,
+                release_engine: bool = True) -> snap_mod.Snapshot:
+        """Checkpoint + release: snapshot the gang's state to host
+        memory, free its chips for the preemptor, keep the group (queues
+        and epoch survive suspension).  The caller requeues the job."""
+        assert self.status == "running"
+        self.snapshot = snap_mod.take(self.job_id, step, state)
+        if release_engine:
+            self.fabric.engine.release(self.alloc)
+        self.detach()
+        self.status = "preempted"
+        self.epoch_log.append({"kind": "preempt", "step": step,
+                               "fingerprint": self.snapshot.fingerprint})
+        return self.snapshot
+
+    def resume(self, alloc: Optional[Allocation] = None,
+               verify: bool = True) -> Tuple[Any, int]:
+        """Re-place and restore the preempted gang bit-exactly.
+
+        ``alloc``: adopt an allocation the caller already made (trace
+        runner); None allocates through the engine.  Returns
+        (state, step); raises if no placement or the restore is not
+        bit-exact (fingerprint mismatch).
+        """
+        assert self.status == "preempted" and self.snapshot is not None
+        if alloc is None:
+            alloc = self.fabric.engine.allocate(
+                self.job_id, self.snapshot_world(), policy=self.policy)
+            if alloc is None:
+                raise RuntimeError("resume: gang not placeable")
+        self.attach(alloc)
+        shardings = elastic_mod.replicated_shardings(self.snapshot.state,
+                                                     self.mesh)
+        state = snap_mod.restore(self.snapshot, shardings)
+        if verify:
+            check = snap_mod.take(self.job_id, self.snapshot.step, state)
+            if check.fingerprint != self.snapshot.fingerprint:
+                raise RuntimeError("resume: restored state is not "
+                                   "bit-exact with the snapshot")
+        step = self.snapshot.step
+        self.epoch_log.append({"kind": "resume", "step": step,
+                               "fingerprint": self.snapshot.fingerprint})
+        self.snapshot = None
+        return state, step
+
+    def snapshot_world(self) -> int:
+        """World size to restore a preempted gang at (its group size)."""
+        return self.group.size if self.group is not None else 0
+
+    # ---- release -----------------------------------------------------------
+    def release(self) -> None:
+        """Return the gang's chips to the shared pool."""
+        if self.status == "running":
+            self.fabric.engine.release(self.alloc)
+            self.detach()
+        self.status = "released"
+        self.fabric.gangs.pop(self.job_id, None)
+
+
+class Fabric:
+    """The shared device pool + placement engine all gangs run on.
+
+    ``devices``: the concrete jax devices (default: all local devices);
+    hosts are consecutive runs of ``chips_per_host`` devices, and the
+    ragged last host is carried as a reduced per-host capacity in the
+    engine (no phantom pad job).
+    """
+
+    def __init__(self, devices: Optional[Sequence[Any]] = None,
+                 chips_per_host: int = 4,
+                 policy: Union[str, PlacementPolicy] = "binpack",
+                 preempt: Optional[PreemptPolicy] = None):
+        self.devices = list(devices if devices is not None
+                            else jax.devices())
+        assert self.devices, "empty fabric"
+        self.chips_per_host = chips_per_host
+        self._dev_index = {d: i for i, d in enumerate(self.devices)}
+        n_hosts = -(-len(self.devices) // chips_per_host)
+        capacities = [min(chips_per_host,
+                          len(self.devices) - h * chips_per_host)
+                      for h in range(n_hosts)]
+        self.engine = PlacementEngine(n_hosts, chips_per_host,
+                                      policy=policy, capacities=capacities)
+        self.preempt = preempt or PreemptPolicy()
+        self.gangs: Dict[str, GangHandle] = {}
+        self._free: List[List[Any]] = [
+            self.devices[h * chips_per_host:(h + 1) * chips_per_host]
+            for h in range(n_hosts)]
+
+    # ---- device pool -------------------------------------------------------
+    def host_of(self, device: Any) -> int:
+        return self._dev_index[device] // self.chips_per_host
+
+    def claim(self, placement: Sequence[Tuple[int, int]]) -> List[Any]:
+        """Take the lowest-indexed free devices matching an engine
+        placement (deterministic, so simulation and execution agree)."""
+        out: List[Any] = []
+        for h, c in placement:
+            pool = self._free[h]
+            assert len(pool) >= c, \
+                f"host {h}: {c} chips claimed, {len(pool)} free"
+            out.extend(pool[:c])
+            self._free[h] = pool[c:]
+        return out
+
+    def claim_exact(self, devices: Sequence[Any]) -> List[Any]:
+        """Take specific devices out of the free pool (bind/undo paths)."""
+        for d in devices:
+            self._free[self.host_of(d)].remove(d)
+        return list(devices)
+
+    def reclaim(self, devices: Sequence[Any]) -> None:
+        for d in devices:
+            self._free[self.host_of(d)].append(d)
+        for pool in self._free:
+            pool.sort(key=self._dev_index.__getitem__)
+
+    def idle_chips(self) -> int:
+        return self.engine.idle_chips()
+
+    # ---- gang lifecycle ----------------------------------------------------
+    def allocate(self, job_id: str, n: int, priority: int = 0,
+                 pods: int = 1,
+                 policy: Union[str, PlacementPolicy, None] = None
+                 ) -> Optional[GangHandle]:
+        """Policy-driven gang allocation; None when it does not fit."""
+        alloc = self.engine.allocate(job_id, n, policy=policy)
+        if alloc is None:
+            return None
+        handle = GangHandle(self, job_id, priority=priority, pods=pods,
+                            policy=policy)
+        handle.attach(alloc)
+        self.gangs[job_id] = handle
+        return handle
+
+    def bind(self, job_id: str, devices: Sequence[Any], priority: int = 0,
+             pods: int = 1,
+             policy: Union[str, PlacementPolicy, None] = None
+             ) -> GangHandle:
+        """Adopt an externally-chosen device list (a launch-time gang),
+        preserving its rank order."""
+        counts: Dict[int, int] = {}
+        for d in devices:
+            counts[self.host_of(d)] = counts.get(self.host_of(d), 0) + 1
+        alloc = self.engine.bind(job_id, sorted(counts.items()))
+        handle = GangHandle(self, job_id, priority=priority, pods=pods,
+                            policy=policy)
+        handle.attach(alloc, devices=self.claim_exact(devices))
+        self.gangs[job_id] = handle
+        return handle
+
+    def adopt(self, alloc: Allocation, priority: int = 0, pods: int = 1,
+              handle: Optional[GangHandle] = None) -> GangHandle:
+        """Build/re-attach a handle for an allocation the engine already
+        holds (the trace runner's event loop owns engine accounting)."""
+        if handle is None:
+            handle = GangHandle(self, alloc.job_id, priority=priority,
+                                pods=pods)
+        handle.attach(alloc)
+        self.gangs[alloc.job_id] = handle
+        return handle
+
+    def priorities(self) -> Dict[str, int]:
+        return {jid: h.priority for jid, h in self.gangs.items()}
+
+    def preemption_plan(self, n: int, priority: int) -> Optional[List[str]]:
+        """Victims (lower-priority gangs) to evict so an ``n``-chip gang
+        at ``priority`` fits — the live counterpart of the simulator's
+        preemption step; the caller checkpoints + requeues them."""
+        return self.engine.preemption_plan(n, priority, self.priorities(),
+                                           preempt=self.preempt)
+
+    # ---- trace execution ---------------------------------------------------
+    def run_trace(self, jobs: Sequence[Job],
+                  workload_factory: Callable[[Job], GangWorkload],
+                  policy: Union[str, PlacementPolicy, None] = None,
+                  preempt: Union[bool, PreemptPolicy] = True,
+                  migrate: bool = False, backfill: bool = False
+                  ) -> "TraceExecution":
+        """Execute an arrival-time trace — Poisson arrivals, priority
+        classes, preemption — against real concurrent gangs on this
+        fabric.  Scheduling runs on the simulator's virtual clock; gang
+        steps are real jax computations.  See ``LiveTraceRunner``."""
+        assert not self.gangs, "run_trace requires an idle fabric"
+        runner = LiveTraceRunner(self, workload_factory,
+                                 policy=policy or self.engine.default_policy,
+                                 preempt=preempt, migrate=migrate,
+                                 backfill=backfill)
+        t0 = time.time()
+        result = runner.run(list(jobs))
+        return TraceExecution(result=result, live=dict(runner.records),
+                              wall_s=time.time() - t0)
+
+    def predict_trace(self, jobs: Sequence[Job],
+                      policy: Union[str, PlacementPolicy, None] = None,
+                      preempt: Union[bool, PreemptPolicy] = True,
+                      migrate: bool = False, backfill: bool = False
+                      ) -> TraceResult:
+        """Pure-simulation prediction for the same trace on a fabric of
+        this shape (same hosts, capacities, policy) — what ``run_trace``
+        should reproduce, placement-for-placement."""
+        pol = policy or self.engine.default_policy
+        engine = PlacementEngine(self.engine.hosts, self.chips_per_host,
+                                 policy=pol,
+                                 capacities=list(self.engine.capacities))
+        sim = Simulator(engine.hosts, self.chips_per_host, "granular",
+                        migrate=migrate, policy=pol, backfill=backfill,
+                        preempt=preempt, engine=engine)
+        return sim.run(list(jobs))
+
+
+@dataclasses.dataclass
+class TraceExecution:
+    """Result of a live ``Fabric.run_trace``: the (virtual-time) trace
+    result plus the per-job live execution log."""
+    result: TraceResult
+    live: Dict[str, Dict[str, Any]]
+    wall_s: float = 0.0
+
+    def job_makespans(self, jobs: Sequence[Job]) -> Dict[str, float]:
+        return self.result.makespans(jobs)
+
+
+class LiveTraceRunner(Simulator):
+    """Trace-driven live execution (the simulate→execute bridge).
+
+    Inherits the discrete-event loop — queueing discipline, priorities,
+    Poisson arrivals, placement, preemption — and overrides the event
+    hooks to drive *real* gangs on a shared ``Fabric``: virtual time
+    decides *when/where*, the hooks execute *actual* train/serve steps on
+    the allocated devices.  Because the loop and the placement engine are
+    shared with the pure simulator, the live completion order matches
+    ``Fabric.predict_trace`` for the same trace and policy.
+
+    Interleaving: every event advances each running gang by one real
+    step, so concurrent gangs genuinely alternate on the fabric; a
+    finishing gang runs its remaining steps at its FINISH event; a
+    preempted gang is checkpointed (snapshot) mid-run and later resumes
+    bit-exactly on whatever placement the engine grants.
+    """
+
+    def __init__(self, fabric: Fabric,
+                 workload_factory: Callable[[Job], GangWorkload],
+                 policy: Union[str, PlacementPolicy] = "binpack",
+                 preempt: Union[bool, PreemptPolicy] = True,
+                 migrate: bool = False, backfill: bool = False):
+        super().__init__(fabric.engine.hosts, fabric.chips_per_host,
+                         "granular", migrate=migrate, policy=policy,
+                         backfill=backfill, preempt=preempt,
+                         engine=fabric.engine)
+        self.fabric = fabric
+        self.factory = workload_factory
+        self.workloads: Dict[str, GangWorkload] = {}
+        self.handles: Dict[str, GangHandle] = {}
+        self.records: Dict[str, Dict[str, Any]] = {}
+
+    def _record(self, job_id: str) -> Dict[str, Any]:
+        return self.records.setdefault(
+            job_id, {"steps": 0, "preemptions": 0, "resumes_verified": 0,
+                     "metrics": {}, "epochs": []})
+
+    def _step_gang(self, job_id: str) -> None:
+        wl = self.workloads[job_id]
+        if wl.done:
+            return
+        metrics = wl.run_step(self.handles[job_id])
+        rec = self._record(job_id)
+        rec["steps"] = wl.steps_done
+        rec["metrics"] = metrics
+
+    # ---- hooks -------------------------------------------------------------
+    def _on_start(self, rj, resumed: bool) -> None:
+        job = rj.job
+        wl = self.workloads.get(job.job_id)
+        if wl is None:
+            wl = self.workloads[job.job_id] = self.factory(job)
+        handle = self.handles.get(job.job_id)
+        if resumed:
+            assert handle is not None and handle.status == "preempted"
+            state, _ = handle.resume(alloc=rj.alloc)   # bit-exact restore
+            self.fabric.gangs[job.job_id] = handle
+            wl.state = state
+            wl.bind(handle)
+            self._record(job.job_id)["resumes_verified"] += 1
+        else:
+            handle = self.fabric.adopt(rj.alloc, priority=job.priority,
+                                       handle=handle)
+            self.handles[job.job_id] = handle
+            wl.bind(handle)
+            if wl.state is None:
+                wl.init_state(handle)
+        self._record(job.job_id)["workload"] = type(wl).__name__
+        self._step_gang(job.job_id)    # gangs make real progress at start
+
+    def _on_advance(self, now: float) -> None:
+        # one real step per running gang per event: concurrent gangs
+        # interleave on the fabric exactly as wall-clock sharing would
+        for job_id, handle in self.handles.items():
+            if handle.status == "running":
+                self._step_gang(job_id)
+
+    def _on_preempt(self, rj) -> None:
+        job_id = rj.job.job_id
+        handle = self.handles[job_id]
+        wl = self.workloads[job_id]
+        # engine accounting already released by the event loop
+        handle.preempt(wl.state, wl.steps_done, release_engine=False)
+        self.fabric.gangs.pop(job_id, None)
+        wl.state = None               # lives in the snapshot until resume
+        rec = self._record(job_id)
+        rec["preemptions"] += 1
+        rec["epochs"].append(handle.group.epoch)
+
+    def _on_migrate(self, rj) -> None:
+        job_id = rj.job.job_id
+        handle = self.handles[job_id]
+        wl = self.workloads[job_id]
+        # the loop already applied the engine migration; move the gang:
+        # reshard live state onto the new devices, then re-attach (the
+        # in-place readdress keeps queues + epoch)
+        self.fabric.reclaim(handle.devices)
+        new_devices = self.fabric.claim(rj.alloc.placement)
+        wl.state, _ = elastic_mod.reshard_gang(wl.state, new_devices)
+        handle.attach(rj.alloc, devices=new_devices)
+        wl.bind(handle)
+
+    def _on_finish(self, rj) -> None:
+        job_id = rj.job.job_id
+        handle = self.handles[job_id]
+        while not self.workloads[job_id].done:
+            self._step_gang(job_id)   # drain the gang's remaining steps
+        handle.detach()               # loop releases engine accounting
+        handle.status = "released"
+        self.fabric.gangs.pop(job_id, None)
+        rec = self._record(job_id)
+        rec["final_metrics"] = rec.pop("metrics", {})

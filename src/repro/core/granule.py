@@ -117,6 +117,49 @@ class GranuleGroup:
             g.device = new_device
         self.epoch += 1
 
+    def readdress(self, placement: Sequence[Tuple[int, Any]]) -> None:
+        """Gang-wide ``migrate``: re-address every rank in place at a
+        barrier point.  Rank-keyed queues and granule identity survive —
+        only (host, device) change — and the whole move is one migration
+        epoch (paper Fig 8's group-metadata update)."""
+        assert len(placement) == self.size, "readdress keeps the gang size"
+        if self.in_flight():
+            raise RuntimeError(
+                "migration requires an empty message plane (barrier point)")
+        changed = False
+        for g, (h, d) in zip(self.granules, placement):
+            if g.host != h or g.device is not d:
+                g.host, g.device = h, d
+                changed = True
+        if changed:
+            self.epoch += 1
+
+    def resize(self, placement: Sequence[Tuple[int, Any]]) -> None:
+        """Elastic grow/shrink in place at a barrier point: surviving
+        ranks keep their queues and identity, new ranks start empty,
+        dropped ranks disappear (their queues are empty — the barrier
+        guarantees no in-flight messages)."""
+        if self.in_flight():
+            raise RuntimeError(
+                "resize requires an empty message plane (barrier point)")
+        new_size = len(placement)
+        semantics = self.granules[0].semantics if self.granules else "process"
+        granules: List[Granule] = []
+        for i, (h, d) in enumerate(placement):
+            if i < self.size:
+                g = self.granules[i]
+                g.host, g.device = h, d
+            else:
+                g = Granule(job_id=self.job_id, index=i, host=h, device=d,
+                            semantics=semantics)
+            granules.append(g)
+        self.granules = granules
+        self._queues = (self._queues[:new_size]
+                        + [collections.defaultdict(collections.deque)
+                           for _ in range(max(0, new_size - self.size))])
+        self.size = new_size
+        self.epoch += 1
+
     # ---- collective message schedule (paper Fig 9) -------------------------
     def allreduce_message_schedule(self) -> Dict[str, int]:
         """Count intra-host vs cross-host messages for a VM-leader two-level

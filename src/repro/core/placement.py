@@ -24,7 +24,16 @@ scheduler facade in ``core.scheduler``.  The split is:
   accounting, gang allocation, preemption-safe reservations (hold chips
   before binding a job so multi-step decisions are atomic), migration
   planning at barrier points, and adoption of externally-created
-  placements (``bind``, used by the live runtime).
+  placements (``bind``, used by the live runtime).  Hosts default to
+  ``chips_per_host`` chips each; ``capacities`` overrides per-host chip
+  counts (a ragged last host on the CPU fabric, heterogeneous
+  generations later).
+
+* ``PreemptPolicy`` — victim selection when a high-priority arrival
+  cannot be placed: evict the cheapest set of strictly-lower-priority
+  gangs (checkpoint + requeue is the *caller's* job — the engine only
+  plans).  Used by the simulator's priority traces and by
+  ``core.fabric.Fabric`` for live preemption.
 """
 from __future__ import annotations
 
@@ -268,6 +277,74 @@ def resolve_policy(policy: Union[str, PlacementPolicy, None],
 
 
 # ---------------------------------------------------------------------------
+# Preemption
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class PreemptPolicy:
+    """Victim selection for a high-priority arrival that cannot be placed.
+
+    Victims are strictly-lower-priority gangs, evicted cheapest-first:
+    lowest priority class first, and within a class the largest gang first
+    (frees the most chips per eviction).  Greedy selection stops as soon
+    as the arrival fits under the engine's placement policy; a prune pass
+    then drops any victim the fit does not actually need — preferring to
+    spare the *higher*-priority ones — so no gang is evicted needlessly.
+    The plan is a pure decision — the caller performs the actual
+    checkpoint + release + requeue.
+
+    ``max_victims`` bounds the blast radius of one arrival (0 = unbounded).
+    """
+
+    max_victims: int = 0
+
+    def plan(self, engine: "PlacementEngine", n: int, priority: int,
+             priorities: Dict[str, int],
+             policy: Union[str, PlacementPolicy, None] = None
+             ) -> Optional[List[str]]:
+        """job_ids to evict so an ``n``-chip gang at ``priority`` places;
+        ``None`` if no lower-priority victim set suffices, ``[]`` if it
+        already fits without eviction."""
+        pol = resolve_policy(policy, engine.default_policy)
+        scratch = engine.free.copy()
+
+        def fits() -> bool:
+            return pol.place(ClusterView(scratch.copy(),
+                                         engine.chips_per_host),
+                             n) is not None
+
+        if fits():
+            return []
+        # cheapest-first victim order: priority asc, gang size desc, id
+        victims = sorted(
+            (a for a in engine.allocations.values()
+             if priorities.get(a.job_id, 0) < priority),
+            key=lambda a: (priorities.get(a.job_id, 0), -a.n, a.job_id))
+        chosen: List[Allocation] = []
+        for a in victims:
+            for h, c in a.placement:
+                scratch[h] += c
+            chosen.append(a)
+            if fits():
+                break
+        else:
+            return None
+        # prune needless victims, sparing higher-priority gangs first
+        for a in sorted(chosen,
+                        key=lambda a: (-priorities.get(a.job_id, 0), a.n,
+                                       a.job_id)):
+            for h, c in a.placement:
+                scratch[h] -= c
+            if fits():
+                chosen.remove(a)        # not needed after all
+            else:
+                for h, c in a.placement:
+                    scratch[h] += c
+        if self.max_victims and len(chosen) > self.max_victims:
+            return None
+        return [a.job_id for a in chosen]
+
+
+# ---------------------------------------------------------------------------
 # Engine
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -291,13 +368,22 @@ class Reservation:
 
 class PlacementEngine:
     """Free-chip accounting + policy-driven gang allocation for a cluster
-    of ``hosts`` identical hosts with ``chips_per_host`` chips each."""
+    of ``hosts`` hosts with ``chips_per_host`` chips each (``capacities``
+    overrides individual hosts, e.g. a ragged last host)."""
 
     def __init__(self, hosts: int, chips_per_host: int,
-                 policy: Union[str, PlacementPolicy] = "binpack"):
+                 policy: Union[str, PlacementPolicy] = "binpack",
+                 capacities: Optional[Sequence[int]] = None):
         self.hosts = hosts
         self.chips_per_host = chips_per_host
-        self.free = np.full(hosts, chips_per_host, dtype=np.int64)
+        if capacities is None:
+            self.capacities = np.full(hosts, chips_per_host, dtype=np.int64)
+        else:
+            assert len(capacities) == hosts
+            self.capacities = np.asarray(capacities, dtype=np.int64)
+            assert (self.capacities >= 0).all() \
+                and (self.capacities <= chips_per_host).all()
+        self.free = self.capacities.copy()
         self.jobs_on_host: List[set] = [set() for _ in range(hosts)]
         self.default_policy = resolve_policy(policy)
         self.allocations: Dict[str, Allocation] = {}
@@ -305,7 +391,7 @@ class PlacementEngine:
     # ---- capacity ----------------------------------------------------------
     @property
     def total_chips(self) -> int:
-        return self.hosts * self.chips_per_host
+        return int(self.capacities.sum())
 
     def idle_chips(self) -> int:
         return int(self.free.sum())
@@ -344,7 +430,7 @@ class PlacementEngine:
         res.settled = True
         for h, c in res.placement:
             self.free[h] += c
-        assert (self.free <= self.chips_per_host).all()
+        assert (self.free <= self.capacities).all()
 
     # ---- allocation ----------------------------------------------------------
     def allocate(self, job_id: str, n: int,
@@ -371,7 +457,18 @@ class PlacementEngine:
             self.free[h] += c
             self.jobs_on_host[h].discard(alloc.job_id)
         self.allocations.pop(alloc.job_id, None)
-        assert (self.free <= self.chips_per_host).all()
+        assert (self.free <= self.capacities).all()
+
+    # ---- preemption -----------------------------------------------------------
+    def preemption_plan(self, n: int, priority: int,
+                        priorities: Dict[str, int],
+                        policy: Union[str, PlacementPolicy, None] = None,
+                        preempt: Optional[PreemptPolicy] = None
+                        ) -> Optional[List[str]]:
+        """Plan victims (see ``PreemptPolicy.plan``) against the live
+        allocation table; the caller checkpoints + releases + requeues."""
+        return (preempt or PreemptPolicy()).plan(self, n, priority,
+                                                 priorities, policy)
 
     # ---- migration (defragmentation at barrier points) ------------------------
     def migration_plan(self, allocs: Sequence[Allocation]

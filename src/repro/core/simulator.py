@@ -30,7 +30,22 @@ queue is ordered (priority desc, arrival, submission), and optional
 **backfill** lets queued jobs jump past a blocked head-of-line job — the
 shared-cluster, multi-tenant economics of §2.1.  With all arrivals at t=0,
 uniform priority, and backfill off, the event loop is exactly the paper's
-FIFO experiment.
+FIFO experiment.  ``preempt`` adds rFaaS-style lease reclamation: a
+high-priority arrival that cannot be placed evicts lower-priority gangs
+(``PlacementEngine.preemption_plan``) — the victim is checkpointed
+(progress survives), requeued, and pays a snapshot restore cost when it
+resumes.
+
+Scheduling decisions are logged as ``core.control.Action`` records —
+the same action vocabulary (checkpoint / migrate / rescale / preempt /
+start / finish) the live runtime's control points consume, so a simulated
+trace and a ``core.fabric.Fabric.run_trace`` execution of the same trace
+can be diffed event-by-event.
+
+The event loop exposes overridable hooks (``_on_start`` / ``_on_advance``
+/ ``_on_preempt`` / ``_on_migrate`` / ``_on_finish``) that are no-ops
+here; ``core.fabric`` subclasses them to execute the trace against real
+gangs while virtual time drives scheduling.
 
 The simulator is deterministic given a seed.
 """
@@ -43,13 +58,16 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.core.control import Action
 from repro.core.placement import (Allocation, FixedSlicePolicy,
-                                  PlacementEngine, PlacementPolicy)
+                                  PlacementEngine, PlacementPolicy,
+                                  PreemptPolicy, resolve_policy)
 
 BETA = {"mpi-compute": 0.4, "mpi-network": 13.0, "omp": 1.0}
 WASM_OVERHEAD_OMP = 1.25          # paper §6.4
 OVERCOMMIT_PENALTY = 1.5          # threads > vCPUs in one container (§6.2)
 MIGRATION_COST_S = 2.0            # snapshot transfer at a barrier point
+PREEMPT_COST_S = 2.0              # snapshot restore when a victim resumes
 SCHED_LATENCY_PER_HOST = 0.004    # centralised scheduler cost (Fig 11)
 
 
@@ -61,6 +79,7 @@ class Job:
     work: float                   # chip-seconds at perfect scaling
     arrival: float = 0.0          # submission time (0 = paper's replay)
     priority: int = 0             # higher runs first
+    workload: str = ""            # live-execution payload: train | serve
 
 
 @dataclasses.dataclass
@@ -96,6 +115,15 @@ class TraceResult:
     queue_drain_time: float = 0.0             # when the job queue emptied
     cross_host_fractions: List[float] = dataclasses.field(
         default_factory=list)                 # chi at placement, per job
+    preemptions: int = 0
+    finish_order: List[str] = dataclasses.field(default_factory=list)
+    finish_times: Dict[str, float] = dataclasses.field(default_factory=dict)
+    actions: List[Action] = dataclasses.field(default_factory=list)
+
+    def makespans(self, jobs: Sequence[Job]) -> Dict[str, float]:
+        """Per-job makespan (finish - arrival) for the jobs that finished."""
+        return {j.job_id: self.finish_times[j.job_id] - j.arrival
+                for j in jobs if j.job_id in self.finish_times}
 
     def mean_cross_host_fraction(self) -> float:
         if not self.cross_host_fractions:
@@ -194,7 +222,9 @@ class Simulator:
                  slice_size: int = 0, migrate: bool = True,
                  barrier_interval: float = 5.0,
                  policy: Union[str, PlacementPolicy] = "binpack",
-                 backfill: bool = False):
+                 backfill: bool = False,
+                 preempt: Union[bool, PreemptPolicy, None] = False,
+                 engine: Optional[PlacementEngine] = None):
         """mode: 'granular' (Faabric) or 'slices' (fixed baseline).
 
         ``policy`` selects the granular placement policy (binpack /
@@ -202,25 +232,65 @@ class Simulator:
         ``backfill`` lets queued jobs that fit run past a blocked
         head-of-line job (capacity only shrinks while the head waits, so
         no skipped job could have run sooner).
+        ``preempt`` enables priority preemption for a blocked
+        head-of-line job (granular mode only): ``True`` for the default
+        ``PreemptPolicy``, or a configured instance.
+        ``engine`` adopts an externally-owned (fresh) ``PlacementEngine``
+        instead of building one — used by ``core.fabric`` so live
+        execution and prediction share one accounting code path; the
+        engine's hosts/capacities override ``hosts``/``chips_per_host``.
         """
         if mode == "slices":
             pol: PlacementPolicy = FixedSlicePolicy(slice_size)
         else:
             pol = policy
-        self.engine = PlacementEngine(hosts, chips_per_host, policy=pol)
+        # the trace policy is carried per-call, never written into the
+        # engine: an adopted (fabric-owned) engine keeps its own default
+        self.policy = resolve_policy(pol)
+        if engine is None:
+            engine = PlacementEngine(hosts, chips_per_host, policy=pol)
+        else:
+            assert engine.idle_chips() == engine.total_chips, \
+                "adopted engine must be idle at trace start"
+            hosts = engine.hosts
+        self.engine = engine
         self.mode = mode
         self.slice_size = slice_size
         self.migrate = migrate and mode == "granular"
+        if preempt and mode == "granular":
+            self.preempt: Optional[PreemptPolicy] = (
+                preempt if isinstance(preempt, PreemptPolicy)
+                else PreemptPolicy())
+        else:
+            self.preempt = None
         self.barrier_interval = barrier_interval
         self.backfill = backfill
         self.sched_latency = SCHED_LATENCY_PER_HOST * hosts
+
+    # ---- live-execution hooks (no-ops; see core.fabric) --------------------
+    def _on_start(self, rj: RunningJob, resumed: bool) -> None:
+        pass
+
+    def _on_advance(self, now: float) -> None:
+        pass
+
+    def _on_preempt(self, rj: RunningJob) -> None:
+        pass
+
+    def _on_migrate(self, rj: RunningJob) -> None:
+        pass
+
+    def _on_finish(self, rj: RunningJob) -> None:
+        pass
 
     # ---- placement --------------------------------------------------------
     def _try_place(self, job: Job) -> Optional[Allocation]:
         if self.mode != "granular" and job.kind == "omp":
             # shared-memory baseline: exactly one container
-            return self.engine.allocate(job.job_id, self.slice_size)
-        return self.engine.allocate(job.job_id, job.parallelism)
+            return self.engine.allocate(job.job_id, self.slice_size,
+                                        policy=self.policy)
+        return self.engine.allocate(job.job_id, job.parallelism,
+                                    policy=self.policy)
 
     def _eff_parallelism(self, job: Job, alloc: Allocation) -> int:
         if self.mode == "granular":
@@ -248,7 +318,13 @@ class Simulator:
         exec_times, waited = [], []
         idle_samples: List[Tuple[float, float]] = []
         chis: List[float] = []
-        migrations = 0
+        actions: List[Action] = []
+        migrations = preemptions = 0
+        # progress of checkpointed (preempted) jobs awaiting resume
+        suspended: Dict[str, float] = {}
+        first_start: Dict[str, float] = {}
+        finish_order: List[str] = []
+        finish_times: Dict[str, float] = {}
         ARRIVE, FINISH = 0, 1
         for j in arrivals:
             token += 1
@@ -274,15 +350,54 @@ class Simulator:
             rj = RunningJob(job, alloc, start=now, last_update=now,
                             eff_parallelism=self._eff_parallelism(
                                 job, alloc))
+            resumed = job.job_id in suspended
+            if resumed:
+                # checkpointed progress survives; the snapshot restore
+                # costs like a migration
+                rj.progress = max(0.0, suspended.pop(job.job_id)
+                                  - PREEMPT_COST_S * rj.rate())
             running[job.job_id] = rj
-            waited.append(now - max(0.0, job.arrival))
+            if job.job_id not in first_start:
+                first_start[job.job_id] = now
+                waited.append(now - max(0.0, job.arrival))
             chis.append(alloc.cross_host_fraction())
+            actions.append(Action("resume" if resumed else "start",
+                                  {"job": job.job_id, "t": now,
+                                   "placement": list(alloc.placement)}))
             schedule_finish(rj)
+            self._on_start(rj, resumed)
+
+        def preempt_for(job: Job) -> bool:
+            """Evict lower-priority gangs so the blocked head job fits."""
+            priorities = {jid: r.job.priority for jid, r in running.items()}
+            plan = self.engine.preemption_plan(
+                job.parallelism, job.priority, priorities,
+                policy=self.policy, preempt=self.preempt)
+            if not plan:
+                return False
+            nonlocal preemptions
+            for jid in plan:
+                rj = running.pop(jid)
+                suspended[jid] = rj.progress   # checkpoint (snapshot)
+                self.engine.release(rj.alloc)
+                rj.finish_event = -1           # cancel pending finish
+                bisect.insort(queue, rj.job, key=qkey)
+                preemptions += 1
+                actions.append(Action("preempt",
+                                      {"job": jid, "t": now,
+                                       "by": job.job_id,
+                                       "progress": round(rj.progress, 6)}))
+                self._on_preempt(rj)
+            return True
 
         def pump_queue():
             i = 0
             while i < len(queue):
-                alloc = self._try_place(queue[i])
+                job = queue[i]
+                alloc = self._try_place(job)
+                if alloc is None and i == 0 and self.preempt is not None \
+                        and preempt_for(job):
+                    alloc = self._try_place(job)
                 if alloc is None:
                     if not self.backfill:
                         break
@@ -299,6 +414,7 @@ class Simulator:
                 job = pending_arrivals.pop(job_id)
                 now = max(now, t)
                 progress_to(now)
+                self._on_advance(now)
                 bisect.insort(queue, job, key=qkey)
                 pump_queue()
                 if not pending_arrivals and not queue \
@@ -313,10 +429,15 @@ class Simulator:
             t = max(now, t)
             progress_to(t)
             now = t
+            self._on_advance(now)
             # numerical slack: the job is done
             self.engine.release(rj.alloc)
             del running[job_id]
-            exec_times.append(now - rj.start)
+            exec_times.append(now - first_start[job_id])
+            finish_order.append(job_id)
+            finish_times[job_id] = now
+            actions.append(Action("finish", {"job": job_id, "t": now}))
+            self._on_finish(rj)
             # barrier-point migration: consolidate fragmented gangs
             # (only gangs with enough remaining work to pay the cost)
             if self.migrate and running:
@@ -329,6 +450,10 @@ class Simulator:
                     r.progress = max(
                         0.0, r.progress - MIGRATION_COST_S * r.rate())
                     migrations += 1
+                    actions.append(Action("migrate",
+                                          {"job": jid, "t": now,
+                                           "placement": list(new_pl)}))
+                    self._on_migrate(r)
                     schedule_finish(r)
             had_queue = bool(queue)
             pump_queue()
@@ -338,7 +463,10 @@ class Simulator:
         return TraceResult(makespan=now, exec_times=exec_times,
                            idle_samples=idle_samples, migrations=migrations,
                            waited=waited, queue_drain_time=drain_time,
-                           cross_host_fractions=chis)
+                           cross_host_fractions=chis,
+                           preemptions=preemptions,
+                           finish_order=finish_order,
+                           finish_times=finish_times, actions=actions)
 
 
 def run_baselines(jobs: List[Job], hosts: int, chips_per_host: int = 8,

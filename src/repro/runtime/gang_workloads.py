@@ -1,0 +1,170 @@
+"""Gang workloads for trace-driven live execution (``Fabric.run_trace``).
+
+The simulator's discrete-event loop decides *when and where* each trace
+job runs (placement, priorities, preemption); these workloads are the
+*what* — real jax computations stepped one control point at a time so
+concurrent gangs interleave on one fabric:
+
+* ``TrainWorkload`` — a data-parallel training gang (the step machinery
+  of ``runtime.train_loop`` without its driver loop).  State = the train
+  state pytree; bit-exact across migrate/preempt because the data
+  pipeline is (seed, step)-keyed.
+* ``ServeWorkload`` — a serving replica (``runtime.serve_loop``): prefill
+  at first step, then one decoded token per step.  State = the serving
+  state (params + KV caches + cursor), so the same snapshot machinery
+  moves it.
+
+``workload_factory`` maps trace jobs to workloads by ``Job.workload``
+("train" | "serve", falling back on job kind: omp → serve, mpi → train)
+— the default factory for tests, benchmarks and examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.core import collectives as coll
+from repro.core.fabric import GangHandle, GangWorkload
+from repro.core.simulator import Job
+from repro.data import pipeline as dp
+from repro.models import model as model_mod
+from repro.models import transformer as tf
+from repro.optim import adamw
+from repro.runtime.serve_loop import Request, ServeLoop
+from repro.runtime.train_loop import extra_batch_specs, make_dp_train_step
+
+
+class TrainWorkload(GangWorkload):
+    """One training gang stepped at control-point granularity."""
+
+    def __init__(self, cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                 data_cfg: dp.DataConfig, total_steps: int = 4,
+                 sync_mode: str = "hierarchical",
+                 compress_frac: float = 0.05, seed: int = 0):
+        self.cfg, self.opt_cfg, self.data_cfg = cfg, opt_cfg, data_cfg
+        self.total_steps = total_steps
+        self.sync_mode = sync_mode
+        self.compress_frac = compress_frac
+        self.seed = seed
+        self.state = None
+        self.resid = None
+        self.steps_done = 0
+        self.losses: list = []
+        self._step_fn = None
+        self._extras = extra_batch_specs(cfg, data_cfg.global_batch)
+
+    def bind(self, handle: GangHandle) -> None:
+        # the global batch must divide over the gang; trace jobs come in
+        # arbitrary world sizes, so snap the batch to the nearest
+        # divisible size (per-device share of the configured batch, at
+        # least one row per device).  The world size is stable across
+        # preempt/resume, so each job's data stream stays deterministic.
+        world = len(handle.devices)
+        per = max(1, self.data_cfg.global_batch // world)
+        if self.data_cfg.global_batch != per * world:
+            self.data_cfg = dataclasses.replace(self.data_cfg,
+                                                global_batch=per * world)
+            self._extras = extra_batch_specs(self.cfg,
+                                             self.data_cfg.global_batch)
+        self._step_fn = make_dp_train_step(
+            self.cfg, self.opt_cfg, handle.mesh, self.sync_mode,
+            self.compress_frac)
+        if self.state is not None:
+            self.resid = coll.init_residual_buffer(handle.mesh,
+                                                   self.state["params"])
+
+    def init_state(self, handle: GangHandle) -> None:
+        key = jax.random.PRNGKey(self.seed)
+        with jax.default_device(handle.devices[0]):
+            state = model_mod.init_train_state(key, self.cfg, self.opt_cfg)
+        rep = NamedSharding(handle.mesh, P())
+        self.state = jax.tree.map(lambda x: jax.device_put(x, rep), state)
+        self.resid = coll.init_residual_buffer(handle.mesh,
+                                               self.state["params"])
+
+    def run_step(self, handle: GangHandle) -> Dict[str, Any]:
+        batch = dp.make_batch(self.data_cfg, self.steps_done, self._extras)
+        axes = tuple(a for a in ("pod", "data")
+                     if a in handle.mesh.axis_names)
+        s = NamedSharding(handle.mesh, P(axes))
+        batch = jax.tree.map(lambda x: jax.device_put(x, s), batch)
+        self.state, metrics, self.resid = self._step_fn(self.state, batch,
+                                                        self.resid)
+        self.steps_done += 1
+        loss = float(metrics["loss"])
+        self.losses.append(loss)
+        return {"loss": loss, "step": self.steps_done,
+                "world": len(handle.devices)}
+
+
+class ServeWorkload(GangWorkload):
+    """One serving gang: prefill on the first step, then one token/step."""
+
+    def __init__(self, cfg: ArchConfig,
+                 requests: Optional[Sequence[Request]] = None,
+                 prompt_len: int = 8, new_tokens: int = 4, batch: int = 2,
+                 max_len: int = 32, seed: int = 0):
+        self.cfg = cfg
+        self.max_len = max_len
+        self.seed = seed
+        if requests is None:
+            rng = np.random.default_rng(seed)
+            requests = [Request(rid=i,
+                                prompt=rng.integers(0, cfg.vocab, prompt_len,
+                                                    dtype=np.int32),
+                                max_new_tokens=new_tokens)
+                        for i in range(batch)]
+        self.requests = list(requests)
+        # step 0 = prefill; then one decode step per generated token
+        self.total_steps = 1 + max(r.max_new_tokens for r in self.requests)
+        self.steps_done = 0
+        self.state = None
+        self.loop: Optional[ServeLoop] = None
+
+    def bind(self, handle: GangHandle) -> None:
+        if self.loop is None:
+            params = jax.jit(lambda k: tf.init_params(k, self.cfg))(
+                jax.random.PRNGKey(self.seed))
+            self.loop = ServeLoop(self.cfg, params, max_len=self.max_len)
+        # adopt the new placement (and any restored snapshot) in one move
+        self.loop.attach(handle, state=self.state)
+        self.state = self.loop.serve_state()
+
+    def init_state(self, handle: GangHandle) -> None:
+        self.state = self.loop.serve_state()
+
+    def run_step(self, handle: GangHandle) -> Dict[str, Any]:
+        if self.steps_done == 0:
+            self.loop.start(self.requests)
+        else:
+            self.loop.decode_step()
+        self.state = self.loop.serve_state()
+        self.steps_done += 1
+        return {"decoded": self.loop.stats.decoded_tokens,
+                "step": self.steps_done,
+                "outputs": [list(r.out) for r in self.requests]}
+
+
+def workload_factory(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
+                     data_cfg: dp.DataConfig, train_steps: int = 3,
+                     serve_tokens: int = 3
+                     ) -> Callable[[Job], GangWorkload]:
+    """Default ``Job -> GangWorkload`` mapping for ``Fabric.run_trace``:
+    ``Job.workload`` wins; otherwise omp jobs serve, mpi jobs train."""
+
+    def make(job: Job) -> GangWorkload:
+        kind = job.workload or ("serve" if job.kind == "omp" else "train")
+        if kind == "serve":
+            return ServeWorkload(cfg, new_tokens=serve_tokens,
+                                 prompt_len=data_cfg.seq_len,
+                                 batch=min(2, data_cfg.global_batch),
+                                 max_len=data_cfg.seq_len + serve_tokens + 1,
+                                 seed=job.priority + 1)
+        return TrainWorkload(cfg, opt_cfg, data_cfg,
+                             total_steps=train_steps)
+    return make

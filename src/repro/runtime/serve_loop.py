@@ -2,9 +2,14 @@
 
 Requests carry a prompt; the runtime batches admitted requests, prefills
 them (building decode state), then decodes one token per step for the whole
-batch.  Serving gangs are Granule groups like training gangs, so migration
-works the same way: decode state is the snapshot (a KV cache is just more
-shared state to diff — paper §4 applies unchanged).
+batch.  Serving gangs are Granule groups like training gangs: attach a
+``core.fabric.GangHandle`` and the replica's **serving state** — params +
+decode caches + next-token cursor — lives replicated on the gang's mesh.
+That state is the snapshot, so migration, preemption and bit-exact resume
+work identically to training (a KV cache is just more shared state to diff
+— paper §4 applies unchanged).  Each decode step is a barrier control
+point: ``decode_step`` returns between tokens, so a driver can interleave
+several gangs on one fabric and move this one mid-generation.
 """
 from __future__ import annotations
 
@@ -14,10 +19,11 @@ from typing import Any, Dict, List, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.core.fabric import GangHandle
 from repro.models import model as model_mod
-from repro.models import transformer as tf
 
 
 @dataclasses.dataclass
@@ -39,15 +45,98 @@ class ServeLoop:
     """Fixed-batch serving of equal-length prompts (greedy decoding)."""
 
     def __init__(self, cfg: ArchConfig, params, max_len: int = 256,
-                 window: int = 0):
+                 window: int = 0, handle: Optional[GangHandle] = None):
         self.cfg = cfg
         self.params = params
         self.max_len = max_len
         self.window = window
+        self.handle: Optional[GangHandle] = None
         self._prefill = jax.jit(model_mod.make_prefill_step(cfg,
                                                             window=window))
         self._serve = jax.jit(model_mod.make_serve_step(cfg, window=window))
         self.stats = ServeStats()
+        # in-flight decode batch (None when idle)
+        self._reqs: Optional[List[Request]] = None
+        self._states = None
+        self._cur = None
+        self._plen = 0
+        self._t = 0
+        self._max_new = 0
+        if handle is not None:
+            self.attach(handle)
+
+    # ---- gang placement ----------------------------------------------------
+    def attach(self, handle: GangHandle,
+               state: Optional[Dict[str, Any]] = None) -> None:
+        """Run this replica as a gang on a shared fabric: place params
+        (and any in-flight decode state) replicated on the gang mesh.
+        Re-attach after a migrate/rescale/resume to follow the new
+        placement; ``state`` adopts a restored/resharded serving state in
+        the same move."""
+        self.handle = handle
+        if state is not None:
+            self.load_serve_state(state)
+        else:
+            self._place()
+
+    def _replicated(self, tree):
+        if self.handle is None or self.handle.mesh is None:
+            return tree
+        s = NamedSharding(self.handle.mesh, P())
+        return jax.tree.map(lambda x: jax.device_put(x, s), tree)
+
+    def _place(self) -> None:
+        self.params = self._replicated(self.params)
+        if self._reqs is not None:
+            self._states = self._replicated(self._states)
+            self._cur = self._replicated(self._cur)
+
+    # ---- serving state = the snapshot (migration/preemption unit) ----------
+    def serve_state(self) -> Dict[str, Any]:
+        """Pytree capturing the replica mid-generation: params + decode
+        caches + cursor, plus the host-side request bookkeeping — so the
+        snapshot restores into a *fresh* ServeLoop, not just this one."""
+        st: Dict[str, Any] = {"params": self.params}
+        if self._reqs is not None:
+            st["states"] = self._states
+            st["cur"] = self._cur
+            st["decode"] = {
+                "meta": np.asarray([self._plen, self._t, self._max_new],
+                                   np.int64),
+                "rids": np.asarray([r.rid for r in self._reqs], np.int64),
+                "prompts": [np.asarray(r.prompt, np.int32)
+                            for r in self._reqs],
+                "max_new": np.asarray([r.max_new_tokens
+                                       for r in self._reqs], np.int64),
+                "outs": [np.asarray(r.out, np.int64) for r in self._reqs],
+            }
+        return st
+
+    def load_serve_state(self, st: Dict[str, Any]) -> None:
+        """Adopt a (restored or resharded) serving state; generation
+        continues exactly where the snapshot was taken.  When this loop
+        has no in-flight batch (fresh process / driver), the snapshot's
+        request bookkeeping rebuilds it; an already-live batch keeps its
+        own Request objects (same generation, callers hold references)."""
+        self.params = st["params"]
+        if "states" in st:
+            self._states = st["states"]
+            self._cur = st["cur"]
+            dec = st.get("decode")
+            if dec is not None:
+                plen, t, max_new = (int(x) for x in np.asarray(dec["meta"]))
+                self._plen, self._t, self._max_new = plen, t, max_new
+                if self._reqs is None:
+                    self._reqs = [
+                        Request(rid=int(rid),
+                                prompt=np.asarray(p, np.int32),
+                                max_new_tokens=int(mn),
+                                out=[int(x) for x in np.asarray(o)])
+                        for rid, p, mn, o in zip(dec["rids"],
+                                                 dec["prompts"],
+                                                 dec["max_new"],
+                                                 dec["outs"])]
+        self._place()
 
     def _pad_states(self, states, prompt_len: int):
         """Grow prefill KV caches to max_len-sized decode buffers."""
@@ -63,27 +152,60 @@ class ServeLoop:
             return x
         return [jax.tree.map(pad, s) for s in states]
 
-    def run(self, requests: Sequence[Request],
-            extras: Optional[Dict[str, Any]] = None) -> List[Request]:
+    # ---- decode lifecycle --------------------------------------------------
+    def start(self, requests: Sequence[Request],
+              extras: Optional[Dict[str, Any]] = None) -> None:
+        """Admit + prefill a batch; decoding proceeds via decode_step."""
         reqs = list(requests)
         b = len(reqs)
         plen = len(reqs[0].prompt)
         assert all(len(r.prompt) == plen for r in reqs), "equal-length batch"
         tokens = jnp.asarray(np.stack([r.prompt for r in reqs]), jnp.int32)
-        batch = {"tokens": tokens, **(extras or {})}
+        batch = self._replicated({"tokens": tokens, **(extras or {})})
         last_logits, states = self._prefill(self.params, batch)
         self.stats.prefill_tokens += b * plen
-        states = self._pad_states(states, plen)
-        cur = jnp.argmax(last_logits[:, 0], axis=-1).astype(jnp.int32)
-        max_new = max(r.max_new_tokens for r in reqs)
-        for t in range(max_new):
-            for i, r in enumerate(reqs):
-                if t < r.max_new_tokens:
-                    r.out.append(int(cur[i]))
-            pos = jnp.full((b, 1), plen + t, jnp.int32)
-            logits, states = self._serve(self.params, states,
-                                         cur[:, None], pos)
-            cur = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
-            self.stats.decoded_tokens += b
-            self.stats.steps += 1
+        self._reqs = reqs
+        self._states = self._pad_states(states, plen)
+        self._cur = jnp.argmax(last_logits[:, 0], axis=-1).astype(jnp.int32)
+        self._plen = plen
+        self._t = 0
+        self._max_new = max(r.max_new_tokens for r in reqs)
+        self._place()
+
+    @property
+    def done(self) -> bool:
+        return self._reqs is None or self._t >= self._max_new
+
+    def decode_step(self) -> bool:
+        """One token for the whole batch; returns True while decoding.
+        The step boundary is this gang's control point — between calls
+        the replica may be migrated or snapshotted."""
+        if self.done:
+            return False
+        reqs, t, b = self._reqs, self._t, len(self._reqs)
+        for i, r in enumerate(reqs):
+            if t < r.max_new_tokens:
+                r.out.append(int(self._cur[i]))
+        pos = jnp.full((b, 1), self._plen + t, jnp.int32)
+        logits, self._states = self._serve(self.params, self._states,
+                                           self._cur[:, None], pos)
+        self._cur = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        self.stats.decoded_tokens += b
+        self.stats.steps += 1
+        self._t += 1
+        if self.done:
+            # drop the drained batch AND its device state — idle decode
+            # buffers would otherwise pin device memory on a shared fabric
+            self._reqs = None
+            self._states = None
+            self._cur = None
+            return False
+        return True
+
+    def run(self, requests: Sequence[Request],
+            extras: Optional[Dict[str, Any]] = None) -> List[Request]:
+        reqs = list(requests)
+        self.start(reqs, extras=extras)
+        while self.decode_step():
+            pass
         return reqs

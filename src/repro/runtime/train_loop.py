@@ -8,6 +8,14 @@ shard_map, and passing through a **control point** at every step boundary
 where the runtime may checkpoint, recover from failure, migrate, or
 elastically rescale the gang (paper §3.2/§3.3).
 
+Multi-tenancy: the runtime is a thin driver over a ``core.fabric``
+``GangHandle`` — the shared ``Fabric`` owns the device pool and the
+``PlacementEngine``, so several gangs (train or serve) can coexist on one
+fabric and this gang's rescale/migrate decisions go through the same
+accounting every other tenant uses.  Control-point actions arrive as
+``core.control.Action`` records (checkpoint / migrate / rescale /
+recover) — the same vocabulary the trace simulator logs.
+
 Fault tolerance (paper §3.4, implemented): failure -> gang restart from the
 latest snapshot; the deterministic (seed, step)-keyed data pipeline makes
 recovery bit-exact.  Straggler mitigation: EWMA step-time detector triggers
@@ -30,8 +38,7 @@ from repro.core import collectives as coll
 from repro.core import compat
 from repro.core import control as ctl
 from repro.core import elastic as elastic_mod
-from repro.core.granule import GranuleGroup, make_group_from_devices
-from repro.core.placement import PlacementEngine
+from repro.core.fabric import Fabric, GangHandle, make_gang_mesh
 from repro.data import pipeline as dp
 from repro.models import model as model_mod
 from repro.optim import adamw
@@ -58,13 +65,6 @@ class RuntimeConfig:
     # free-chip-driven elastic policy, consulted at every control point;
     # None = only the explicit rescale_at schedule fires
     elastic: Optional[elastic_mod.ElasticPolicy] = None
-
-
-def make_gang_mesh(devices: Sequence[Any], pods: int = 1) -> Mesh:
-    devs = np.asarray(list(devices))
-    if pods > 1:
-        return Mesh(devs.reshape(pods, -1), ("pod", "data"))
-    return Mesh(devs, ("data",))
 
 
 def make_dp_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
@@ -105,73 +105,76 @@ def make_dp_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
     return jax.jit(train_step, donate_argnums=(0, 2))
 
 
+def extra_batch_specs(cfg: ArchConfig, global_batch: int) -> Dict[str, Any]:
+    """Modality extras (audio frames / vision tokens) for a batch."""
+    if cfg.family == "audio":
+        return {"frames": jax.ShapeDtypeStruct(
+            (global_batch, cfg.enc_seq, cfg.d_model), cfg.param_dtype())}
+    if cfg.family == "vlm":
+        return {"img": jax.ShapeDtypeStruct(
+            (global_batch, cfg.n_img_tokens, cfg.d_model),
+            cfg.param_dtype())}
+    return {}
+
+
 class FaabricTrainRuntime:
-    """End-to-end training driver with control points."""
+    """End-to-end training driver: a thin loop over one ``GangHandle``.
+
+    The handle owns placement (devices, mesh, GranuleGroup) on a shared
+    ``Fabric``; this class owns the training semantics — step function,
+    data, checkpoints, and what to do with each control-point ``Action``.
+    Pass ``fabric`` to share one fabric between several runtimes/serving
+    gangs; by default the runtime builds a private fabric over all local
+    devices and binds a whole-fabric gang (the single-tenant special
+    case).
+    """
 
     def __init__(self, cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
                  data_cfg: dp.DataConfig, rt: RuntimeConfig,
                  devices: Optional[Sequence[Any]] = None,
-                 job_id: str = "job0"):
+                 job_id: str = "job0", fabric: Optional[Fabric] = None,
+                 priority: int = 0):
         self.cfg, self.opt_cfg, self.data_cfg, self.rt = (cfg, opt_cfg,
                                                           data_cfg, rt)
-        self.devices = list(devices if devices is not None
-                            else jax.devices())
         self.job_id = job_id
-        self.group: GranuleGroup = make_group_from_devices(
-            job_id, self.devices, rt.chips_per_host, semantics="process")
-        self.mesh = make_gang_mesh(self.devices, rt.pods)
-        # Placement engine over the whole host fabric: the same code path
-        # the simulator uses decides which chips this gang occupies at
-        # rescale/migrate control points (paper §3.3/§3.4).
-        self.fabric = list(jax.devices())
-        cph = rt.chips_per_host
-        n_hosts = -(-len(self.fabric) // cph)
-        self.engine = PlacementEngine(n_hosts, cph,
-                                      policy=rt.placement_policy)
-        pad = n_hosts * cph - len(self.fabric)
-        if pad:                       # phantom chips on the ragged last host
-            self.engine.bind("_fabric-pad", [(n_hosts - 1, pad)])
-        self.gang_alloc = self.engine.bind(
-            job_id, self._placement_of(self.devices))
+        self.fabric = fabric if fabric is not None else Fabric(
+            chips_per_host=rt.chips_per_host, policy=rt.placement_policy)
+        gang_devices = list(devices if devices is not None
+                            else self.fabric.devices)
+        self.handle: GangHandle = self.fabric.bind(
+            job_id, gang_devices, priority=priority, pods=rt.pods,
+            policy=rt.placement_policy)
         self.ckpt = CheckpointManager(
             rt.ckpt_dir, job_id=job_id,
             incremental_every=rt.incremental_ckpt_every)
+        # control points consult the elastic probe, so `rescale` arrives
+        # as an Action — the same vocabulary the simulator logs
         self.control = ctl.ControlPointRunner(
-            checkpoint_every=rt.checkpoint_every)
+            checkpoint_every=rt.checkpoint_every,
+            elastic_probe=self._elastic_probe)
+        self.handle.control = self.control
+        self._probe_step = 0
         self.log: List[Dict[str, Any]] = []
         self._step_fn = None
-        self._extras = self._extra_specs()
+        self._extras = extra_batch_specs(self.cfg,
+                                         self.data_cfg.global_batch)
 
-    def _extra_specs(self):
-        cfg = self.cfg
-        b = self.data_cfg.global_batch
-        if cfg.family == "audio":
-            return {"frames": jax.ShapeDtypeStruct(
-                (b, cfg.enc_seq, cfg.d_model), cfg.param_dtype())}
-        if cfg.family == "vlm":
-            return {"img": jax.ShapeDtypeStruct(
-                (b, cfg.n_img_tokens, cfg.d_model), cfg.param_dtype())}
-        return {}
+    # ---- placement views (owned by the handle) -------------------------------
+    @property
+    def devices(self) -> List[Any]:
+        return self.handle.devices
 
-    # ---- state/placement -----------------------------------------------------
-    def _placement_of(self, devices: Sequence[Any]):
-        """[(host, n_chips)] of a device list on the fabric's host grid."""
-        idx = {d: i for i, d in enumerate(self.fabric)}
-        counts: Dict[int, int] = {}
-        for d in devices:
-            h = idx[d] // self.rt.chips_per_host
-            counts[h] = counts.get(h, 0) + 1
-        return sorted(counts.items())
+    @property
+    def mesh(self) -> Mesh:
+        return self.handle.mesh
 
-    def _devices_for(self, placement) -> List[Any]:
-        """Concrete devices of an engine placement.  The engine models a
-        single tenant (this gang + the fabric pad), so host h's first
-        ``c`` chips are exactly the ones the placement owns."""
-        cph = self.rt.chips_per_host
-        out: List[Any] = []
-        for h, c in placement:
-            out.extend(self.fabric[h * cph:h * cph + c])
-        return out
+    @property
+    def group(self):
+        return self.handle.group
+
+    @property
+    def engine(self):
+        return self.fabric.engine
 
     def _shardings(self, state):
         rep = NamedSharding(self.mesh, P())
@@ -194,6 +197,20 @@ class FaabricTrainRuntime:
         return jax.device_put(state, self._shardings(state))
 
     # ---- control-point actions --------------------------------------------------
+    def _elastic_probe(self, world: int) -> Optional[int]:
+        """Next world size, or None: the explicit schedule first, then the
+        free-chip-driven policy (through the shared engine)."""
+        step = self._probe_step
+        if step in self.rt.rescale_at:
+            # cap at what is actually placeable on the *shared* fabric:
+            # this gang's chips plus the currently-idle ones (other
+            # tenants' allocations are not ours to take)
+            return min(self.rt.rescale_at[step],
+                       world + self.fabric.engine.idle_chips())
+        if self.rt.elastic is not None:
+            return self.rt.elastic.decide(world, self.fabric.engine)
+        return None
+
     def _recover(self, state, step):
         """Gang restart from the latest checkpoint (paper §3.4)."""
         restored, ck_step = self.ckpt.restore(
@@ -201,48 +218,20 @@ class FaabricTrainRuntime:
         return restored, ck_step
 
     def _migrate_gang(self, state):
-        """Straggler response: live-migrate the gang (paper §3.3).
-
-        The placement engine plans the move: a fragmented gang that now
-        fits on fewer hosts is consolidated (the barrier-point
-        defragmentation of Fig 8).  When no consolidation exists — e.g.
-        the gang already spans the minimum host count — fall back to
-        rotating the rank order within the same chips, which still
-        exercises the full machinery: barrier point, live resharding,
-        group re-addressing."""
-        plans = self.engine.migration_plan([self.gang_alloc])
-        if plans:
-            _, new_pl = plans[0]
-            self.gang_alloc = self.engine.apply_migration(
-                self.gang_alloc, new_pl)
-            new_devices = self._devices_for(new_pl)
-        else:
-            new_devices = self.devices[1:] + self.devices[:1]
-        new_state, self.mesh = elastic_mod.reshard_gang(state, new_devices)
-        if self.rt.pods > 1 and len(new_devices) % self.rt.pods == 0:
-            self.mesh = make_gang_mesh(new_devices, self.rt.pods)
-        self.devices = new_devices
-        self.group = make_group_from_devices(
-            self.job_id, new_devices, self.rt.chips_per_host)
+        """Straggler response: live-migrate the gang (paper §3.3) through
+        the handle — engine-planned consolidation, or a rank rotation
+        when the gang already spans the minimum host count.  The
+        GranuleGroup is re-addressed in place, so buffered control-plane
+        messages and the migration epoch survive the move (Fig 8)."""
+        state, _ = self.handle.migrate(state)
         self._build()
-        return new_state
+        return state
 
     def _rescale(self, state, resid, new_world: int):
-        """Grow/shrink the gang to ``new_world`` chips: release the gang's
-        chips back to the shared pool and let the placement engine carve
-        the new sub-mesh under the configured policy (paper §2.1)."""
-        new_world = min(new_world, len(self.fabric))
-        self.engine.release(self.gang_alloc)
-        alloc = self.engine.allocate(self.job_id, new_world)
-        assert alloc is not None, "rescale within fabric capacity"
-        self.gang_alloc = alloc
-        new_devices = self._devices_for(alloc.placement)
-        state, self.mesh = elastic_mod.reshard_gang(state, new_devices)
-        if self.rt.pods > 1 and len(new_devices) % self.rt.pods == 0:
-            self.mesh = make_gang_mesh(new_devices, self.rt.pods)
-        self.devices = new_devices
-        self.group = make_group_from_devices(
-            self.job_id, new_devices, self.rt.chips_per_host)
+        """Grow/shrink the gang to ``new_world`` chips via the handle:
+        chips are released to the shared pool and the placement engine
+        carves the new sub-mesh under the configured policy (§2.1)."""
+        state = self.handle.rescale(state, new_world)
         self._build()
         resid = coll.init_residual_buffer(self.mesh, state["params"])
         return state, resid
@@ -279,27 +268,24 @@ class FaabricTrainRuntime:
                              "time": step_time,
                              "world": len(self.devices)})
             # ---- control point B (barrier: the grad sync is complete) ----
-            actions = self.control.on_step(step + 1, step_time,
-                                           len(self.devices))
+            self._probe_step = step + 1
+            actions = self.handle.control_point(step + 1, step_time)
             for act in actions:
                 if act.kind == "checkpoint":
                     self.ckpt.save(step + 1, state, blocking=False)
                 elif act.kind == "migrate":
                     state = self._migrate_gang(state)
                     migrations += 1
-            if (step + 1) in rt.rescale_at:
-                state, resid = self._rescale(state, resid,
-                                             rt.rescale_at[step + 1])
-                rescales += 1
-            elif rt.elastic is not None:
-                # free-chip-driven elasticity through the shared engine
-                new_world = rt.elastic.decide(len(self.devices),
-                                              self.engine)
-                if new_world is not None:
-                    state, resid = self._rescale(state, resid, new_world)
+                elif act.kind == "rescale":
+                    state, resid = self._rescale(state, resid,
+                                                 act.payload["to"])
                     rescales += 1
             step += 1
         self.ckpt.wait()
         return state, {"losses": [losses[s] for s in sorted(losses)],
                        "recoveries": recoveries, "rescales": rescales,
                        "migrations": migrations, "log": self.log}
+
+    def release(self) -> None:
+        """Return the gang's chips to the shared fabric."""
+        self.handle.release()

@@ -1,0 +1,333 @@
+"""Multi-tenant Fabric tests: gang lifecycle, priority preemption with
+bit-exact resume, concurrent gangs, and trace-driven live execution
+matching the simulator's prediction.
+
+Fast tests exercise the pure pieces (PreemptPolicy, GranuleGroup queue
+survival, device-pool accounting); the heavy end-to-end paths run in
+subprocesses with an 8-device CPU fabric (same pattern as test_dist)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.core.granule import GranuleGroup
+from repro.core.placement import PlacementEngine, PreemptPolicy
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(code: str, devices: int = 8, timeout: int = 1200) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# PreemptPolicy (pure)
+# ---------------------------------------------------------------------------
+def test_preemption_plan_evicts_lowest_priority_first():
+    eng = PlacementEngine(2, 8)
+    eng.allocate("low-big", 8)
+    eng.allocate("mid", 4)
+    eng.allocate("low-small", 4)
+    pri = {"low-big": 0, "mid": 3, "low-small": 0}
+    # 8 chips at priority 5: evicting the big low-priority gang suffices
+    plan = eng.preemption_plan(8, 5, pri)
+    assert plan == ["low-big"]
+    # 14 chips: both low-priority gangs go before the mid one
+    plan = eng.preemption_plan(14, 5, pri)
+    assert plan is not None and "mid" not in plan[:2] \
+        and set(plan) >= {"low-big", "low-small"}
+    # nothing outranked: a priority-0 arrival cannot evict anyone
+    assert eng.preemption_plan(4, 0, pri) is None
+    # already placeable -> empty plan
+    eng.release(eng.allocations["low-small"])
+    assert eng.preemption_plan(2, 5, pri) == []
+
+
+def test_preemption_plan_respects_max_victims():
+    eng = PlacementEngine(2, 4)
+    for i in range(4):
+        eng.allocate(f"j{i}", 2)
+    pri = {f"j{i}": 0 for i in range(4)}
+    assert eng.preemption_plan(8, 1, pri, preempt=PreemptPolicy(
+        max_victims=1)) is None
+    plan = eng.preemption_plan(8, 1, pri)
+    assert plan is not None and len(plan) == 4
+
+
+def test_engine_ragged_capacities():
+    eng = PlacementEngine(3, 4, capacities=[4, 4, 2])
+    assert eng.total_chips == 10
+    a = eng.allocate("j", 10)
+    assert a is not None and a.n == 10
+    eng.release(a)
+    assert eng.idle_chips() == 10
+
+
+# ---------------------------------------------------------------------------
+# GranuleGroup: in-place re-address keeps queues + epoch (paper Fig 8)
+# ---------------------------------------------------------------------------
+def test_readdress_preserves_group_identity_and_epoch():
+    g = GranuleGroup("j", 4, [(i // 2, None) for i in range(4)])
+    g.send(0, 3, {"tok": 1})
+    # barrier precondition (paper §5.2): the message plane must be empty
+    with pytest.raises(RuntimeError):
+        g.readdress([(1, None)] * 4)
+    assert g.recv(3, 0) == {"tok": 1}
+    e0 = g.epoch
+    granules_before = g.granules
+    g.readdress([((i + 1) % 2, None) for i in range(4)])
+    # in-place: granule identity survives (the old rebuild-from-scratch
+    # path silently discarded queues and reset the epoch to 0)
+    assert g.granules is granules_before
+    assert g.epoch == e0 + 1
+    assert g.address_table() == {0: 1, 1: 0, 2: 1, 3: 0}
+    # messaging still works across the move, addressed by rank
+    g.send(1, 2, "post-move")
+    assert g.recv(2, 1) == "post-move"
+    # no-op readdress does not burn an epoch
+    g.readdress([((i + 1) % 2, None) for i in range(4)])
+    assert g.epoch == e0 + 1
+
+
+def test_resize_keeps_surviving_rank_queues():
+    g = GranuleGroup("j", 4, [(0, None)] * 4)
+    g.send(0, 1, "in-flight")
+    with pytest.raises(RuntimeError):           # resize is a barrier too
+        g.resize([(0, None)] * 2)
+    assert g.recv(1, 0) == "in-flight"
+    e0 = g.epoch
+    g.resize([(0, None), (1, None)])            # shrink 4 -> 2
+    assert g.size == 2 and g.epoch == e0 + 1
+    g.send(1, 0, "post")
+    assert g.recv(0, 1) == "post"
+    e1 = g.epoch
+    g.resize([(h, None) for h in (0, 0, 1, 1, 2, 2)])   # grow 2 -> 6
+    assert g.size == 6 and g.epoch == e1 + 1
+    assert g.granules[5].index == 5 and g.pending(5) == 0
+    assert g.leader_of(2) == 4
+
+
+# ---------------------------------------------------------------------------
+# Live fabric (subprocess, 8 devices)
+# ---------------------------------------------------------------------------
+def test_preemption_evicts_checkpoints_and_resumes_bit_exact():
+    print(run_sub("""
+        import numpy as np
+        from repro.configs.registry import reduced_config
+        from repro.data.pipeline import DataConfig
+        from repro.optim.adamw import AdamWConfig
+        from repro.core.fabric import Fabric
+        from repro.runtime.gang_workloads import TrainWorkload
+
+        cfg = reduced_config("llama3.2-1b").with_(n_layers=1, vocab=128)
+        dcfg = DataConfig(vocab=128, seq_len=8, global_batch=8)
+        ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+
+        def steps(wl, handle, k):
+            for _ in range(k):
+                wl.run_step(handle)
+
+        # reference: uninterrupted 6-step run on a whole-fabric gang
+        fab = Fabric(chips_per_host=2)
+        h = fab.allocate("ref", 8)
+        ref = TrainWorkload(cfg, ocfg, dcfg, total_steps=6)
+        ref.bind(h); ref.init_state(h); steps(ref, h, 6)
+        h.release()
+        assert fab.idle_chips() == 8
+
+        # interrupted: 3 steps, then a high-priority arrival forces
+        # preempt (checkpoint + release); the victim resumes bit-exactly
+        low = fab.allocate("low", 8, priority=0)
+        wl = TrainWorkload(cfg, ocfg, dcfg, total_steps=6)
+        wl.bind(low); wl.init_state(low); steps(wl, low, 3)
+        victims = fab.preemption_plan(4, priority=5)
+        assert victims == ["low"], victims
+        snap = low.preempt(wl.state, wl.steps_done)
+        assert fab.idle_chips() == 8 and low.status == "preempted"
+        hi = fab.allocate("hi", 4, priority=5)
+        hiwl = TrainWorkload(cfg, ocfg, dcfg, total_steps=2)
+        hiwl.bind(hi); hiwl.init_state(hi); steps(hiwl, hi, 2)
+        hi.release()
+        state, step = low.resume()          # fingerprint-verified restore
+        assert step == 3 and low.status == "running"
+        wl.state = state; wl.bind(low)
+        steps(wl, low, 3)
+        np.testing.assert_allclose(ref.losses, wl.losses, atol=1e-6)
+        low.release()
+        assert fab.idle_chips() == 8 and not fab.gangs
+        print("preempt-resume-ok", wl.losses)
+    """))
+
+
+def test_concurrent_train_and_serve_gangs_share_fabric():
+    print(run_sub("""
+        import numpy as np, jax
+        from repro.configs.registry import reduced_config
+        from repro.data.pipeline import DataConfig
+        from repro.optim.adamw import AdamWConfig
+        from repro.core.fabric import Fabric
+        from repro.runtime.gang_workloads import ServeWorkload, TrainWorkload
+
+        cfg = reduced_config("llama3.2-1b").with_(n_layers=1, vocab=128)
+        dcfg = DataConfig(vocab=128, seq_len=8, global_batch=8)
+        ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+
+        fab = Fabric(chips_per_host=2)
+        a = fab.allocate("train0", 4, priority=0)
+        b = fab.allocate("serve0", 2, priority=1)
+        assert a is not None and b is not None
+        assert not (set(a.devices) & set(b.devices))
+        assert fab.idle_chips() == 2
+        ta = TrainWorkload(cfg, ocfg, dcfg, total_steps=3)
+        ta.bind(a); ta.init_state(a)
+        sb = ServeWorkload(cfg, prompt_len=8, new_tokens=3, batch=2,
+                           max_len=16)
+        sb.bind(b); sb.init_state(b)
+        # interleave the two gangs step by step on one fabric
+        while not (ta.done and sb.done):
+            if not ta.done: ta.run_step(a)
+            if not sb.done: sb.run_step(b)
+        outs = [r.out for r in sb.requests]
+        assert all(len(o) == 3 for o in outs), outs
+        assert len(ta.losses) == 3 and np.isfinite(ta.losses).all()
+        a.release(); b.release()
+        assert fab.idle_chips() == 8 and not fab.gangs
+        print("concurrent-ok", ta.losses, outs)
+    """))
+
+
+def test_shared_fabric_rescale_caps_and_serve_resume_fresh_loop():
+    print(run_sub("""
+        import numpy as np, jax
+        from repro.configs.registry import reduced_config
+        from repro.data.pipeline import DataConfig
+        from repro.optim.adamw import AdamWConfig
+        from repro.core.fabric import Fabric
+        from repro.core.placement import LocalityScoredPolicy
+        from repro.core.simulator import Job
+        from repro.models import transformer as tf
+        from repro.runtime.gang_workloads import workload_factory
+        from repro.runtime.serve_loop import Request, ServeLoop
+        from repro.runtime.train_loop import (FaabricTrainRuntime,
+                                              RuntimeConfig)
+
+        cfg = reduced_config("llama3.2-1b").with_(n_layers=1, vocab=128)
+        ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+
+        # a scheduled rescale beyond shared-fabric capacity is skipped
+        # (other tenants' chips are not ours to take), not a crash
+        dcfg = DataConfig(vocab=128, seq_len=8, global_batch=12)
+        fab = Fabric(chips_per_host=2)
+        rt = FaabricTrainRuntime(cfg, ocfg, dcfg, RuntimeConfig(
+            total_steps=4, checkpoint_every=100,
+            ckpt_dir="/tmp/repro-t-shresc/a", rescale_at={2: 8}),
+            devices=fab.devices[2:8], fabric=fab, job_id="t0")
+        other = fab.allocate("tenant", 2, priority=1)
+        out = rt.run(seed=0)[1]
+        assert out["rescales"] == 0 and len(rt.devices) == 6
+        rt.release(); other.release()
+        # ...but a placeable partial grow (4 -> world+idle = 6) fires
+        fab = Fabric(chips_per_host=2)
+        rt = FaabricTrainRuntime(cfg, ocfg, dcfg, RuntimeConfig(
+            total_steps=4, checkpoint_every=100,
+            ckpt_dir="/tmp/repro-t-shresc/b", rescale_at={2: 8}),
+            devices=fab.devices[:4], fabric=fab, job_id="t1")
+        other = fab.allocate("tenant", 2)
+        out = rt.run(seed=0)[1]
+        assert out["rescales"] == 1 and len(rt.devices) == 6
+        rt.release(); other.release()
+        assert fab.idle_chips() == 8
+        print("shared-rescale-ok")
+
+        # run_trace with an explicit policy must not overwrite the
+        # fabric engine's configured default
+        fab2 = Fabric(chips_per_host=2, policy="locality")
+        before = fab2.engine.default_policy
+        fab2.run_trace([Job("a", "mpi-compute", 2, 50.0,
+                            workload="train")],
+                       workload_factory(cfg, ocfg, dcfg, train_steps=1),
+                       policy="binpack")
+        assert fab2.engine.default_policy is before
+        assert isinstance(before, LocalityScoredPolicy)
+        print("policy-unmutated-ok")
+
+        # a serving snapshot restores into a FRESH ServeLoop (new driver
+        # process): host-side request bookkeeping rides in the snapshot
+        params = jax.jit(lambda k: tf.init_params(k, cfg))(
+            jax.random.PRNGKey(0))
+        mk = lambda: [Request(rid=i,
+                              prompt=np.asarray([1,2,3,4,5,6,7,8],
+                                                np.int32),
+                              max_new_tokens=6) for i in range(2)]
+        ref = [r.out for r in ServeLoop(cfg, params, max_len=32).run(mk())]
+        l1 = ServeLoop(cfg, params, max_len=32)
+        l1.start(mk()); l1.decode_step(); l1.decode_step()
+        snap = l1.serve_state()
+        l2 = ServeLoop(cfg, params, max_len=32)
+        l2.load_serve_state(snap)
+        rebuilt = l2._reqs                  # drained to None on finish
+        assert rebuilt is not None and not l2.done
+        while l2.decode_step():
+            pass
+        assert [r.out for r in rebuilt] == ref
+        print("fresh-serve-resume-ok")
+    """))
+
+
+def test_run_trace_preempts_and_matches_simulator_prediction():
+    # the acceptance trace: >=2 priority classes, a preemption with
+    # bit-exact resume, a concurrent train+serve pair, and live per-job
+    # completion order == the simulator's prediction under one policy
+    print(run_sub("""
+        from repro.configs.registry import reduced_config
+        from repro.data.pipeline import DataConfig
+        from repro.optim.adamw import AdamWConfig
+        from repro.core.fabric import Fabric
+        from repro.core.simulator import Job
+        from repro.runtime.gang_workloads import workload_factory
+
+        cfg = reduced_config("llama3.2-1b").with_(n_layers=1, vocab=128)
+        dcfg = DataConfig(vocab=128, seq_len=8, global_batch=8)
+        ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+        jobs = [
+            Job("train-low", "mpi-compute", 6, 300.0, arrival=0.0,
+                priority=0, workload="train"),
+            Job("serve-0", "omp", 2, 120.0, arrival=0.0, priority=1,
+                workload="serve"),
+            Job("train-hi", "mpi-compute", 6, 150.0, arrival=3.0,
+                priority=5, workload="train"),
+        ]
+        fab = Fabric(chips_per_host=2)
+        pred = fab.predict_trace(jobs, preempt=True)
+        assert pred.preemptions >= 1
+        ex = fab.run_trace(jobs, workload_factory(cfg, ocfg, dcfg,
+                                                  train_steps=3,
+                                                  serve_tokens=3),
+                           preempt=True)
+        res = ex.result
+        assert res.finish_order == pred.finish_order, (
+            res.finish_order, pred.finish_order)
+        assert res.preemptions == pred.preemptions >= 1
+        assert ex.live["train-low"]["preemptions"] >= 1
+        assert ex.live["train-low"]["resumes_verified"] >= 1
+        kinds = {j: r["workload"] for j, r in ex.live.items()}
+        assert kinds["serve-0"] == "ServeWorkload"
+        assert kinds["train-hi"] == "TrainWorkload"
+        ms = ex.job_makespans(jobs)
+        assert set(ms) == {j.job_id for j in jobs}
+        assert all(v > 0 for v in ms.values())
+        # the preemptor finished first despite arriving last
+        assert res.finish_order[0] == "train-hi"
+        assert fab.idle_chips() == fab.engine.total_chips
+        assert not fab.gangs
+        print("trace-acceptance-ok", res.finish_order, ms)
+    """))

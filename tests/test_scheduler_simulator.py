@@ -121,3 +121,59 @@ def test_fig14_migration_helps_network_bound():
     without = S.Simulator(16, 8, "granular", migrate=False).run(jobs)
     assert with_mig.migrations > 0
     assert with_mig.makespan <= without.makespan * 1.02
+
+
+# ---------------------------------------------------------------------------
+# priority preemption (rFaaS-style lease reclamation)
+# ---------------------------------------------------------------------------
+def _blocked_high_priority_trace():
+    return [
+        S.Job("low-0", "mpi-compute", 8, 400.0, arrival=0.0, priority=0),
+        S.Job("low-1", "mpi-compute", 8, 400.0, arrival=0.0, priority=0),
+        S.Job("hi-0", "mpi-compute", 12, 200.0, arrival=5.0, priority=5),
+    ]
+
+
+def test_preemption_lets_high_priority_jump_the_cluster():
+    res = S.Simulator(2, 8, "granular", preempt=True).run(
+        _blocked_high_priority_trace())
+    assert res.preemptions >= 1
+    assert res.finish_order[0] == "hi-0"
+    # victims resume from their checkpoint and still finish
+    assert set(res.finish_order) == {"hi-0", "low-0", "low-1"}
+    kinds = [a.kind for a in res.actions]
+    assert "preempt" in kinds and "resume" in kinds
+    # without preemption the high-priority job waits for the hogs
+    base = S.Simulator(2, 8, "granular", preempt=False).run(
+        _blocked_high_priority_trace())
+    assert base.preemptions == 0 and base.finish_order[-1] == "hi-0"
+    hi = next(j for j in _blocked_high_priority_trace()
+              if j.job_id == "hi-0")
+    assert res.makespans([hi])["hi-0"] < base.makespans([hi])["hi-0"]
+
+
+def test_preemption_conserves_chips_and_work():
+    jobs = S.mixed_trace(40, seed=3, arrival_rate=0.2,
+                         priority_classes=[(0, 0.8), (5, 0.2)])
+    sim = S.Simulator(8, 8, "granular", preempt=True)
+    res = sim.run(jobs)
+    assert sim.engine.idle_chips() == sim.engine.total_chips
+    assert len(res.finish_order) == len(jobs)     # every job completes
+    # preempted progress is preserved: makespan stays sane vs no-preempt
+    base = S.Simulator(8, 8, "granular", preempt=False).run(
+        S.mixed_trace(40, seed=3, arrival_rate=0.2,
+                      priority_classes=[(0, 0.8), (5, 0.2)]))
+    assert res.makespan < base.makespan * 1.5
+
+
+def test_preemption_deterministic_and_actions_shared_vocabulary():
+    jobs = lambda: S.mixed_trace(30, seed=5, arrival_rate=0.3,
+                                 priority_classes=[(0, 0.7), (3, 0.3)])
+    r1 = S.Simulator(4, 8, "granular", preempt=True).run(jobs())
+    r2 = S.Simulator(4, 8, "granular", preempt=True).run(jobs())
+    assert r1.finish_order == r2.finish_order
+    assert r1.makespan == r2.makespan
+    from repro.core.control import Action
+    assert all(isinstance(a, Action) for a in r1.actions)
+    assert {a.kind for a in r1.actions} <= {
+        "start", "resume", "preempt", "migrate", "finish"}
