@@ -3,9 +3,11 @@
 Reports makespan per policy, median idle-chip fraction, and job execution
 time percentiles — Faabric's chip-granular Granule scheduling vs the
 fixed-slice (k-containers-per-VM) baselines — then sweeps the
-``PlacementEngine`` policies (binpack / spread / locality) and the
-multi-tenant arrival regimes (Poisson arrivals, priority classes,
-backfill) that extend the §6 experiment past all-jobs-at-t=0 FIFO.
+``PlacementEngine`` policies (binpack / spread / locality), a
+mixed-generation (heterogeneous per-host speed) fleet scored through the
+shared ``CostModel``, and the multi-tenant arrival regimes (Poisson
+arrivals, priority classes, backfill) that extend the §6 experiment past
+all-jobs-at-t=0 FIFO.
 """
 from __future__ import annotations
 
@@ -61,6 +63,42 @@ def run(report):
             report(f"arrivals/{regime}/{tag}/mean_wait",
                    round(float(np.mean(r.waited)), 1), "s",
                    "multi-tenant arrivals")
+
+    # ---- heterogeneous fleet: mixed host generations -----------------------
+    # half the 16 hosts are an older generation at s=0.5; policies score
+    # through the shared CostModel T = (W / sum n_h*s_h)(1 + beta_kind*chi),
+    # so locality trades cross-host fragmentation against host speed per
+    # job kind.  Makespans are averaged over 5 trace seeds.
+    speeds = S.hetero_speeds(16, slow_fraction=0.5, slow=0.5)
+    hetero_seeds = range(5)
+    means = {}
+    for policy in ("binpack", "spread", "locality"):
+        runs = [S.Simulator(16, 8, "granular", migrate=True, policy=policy,
+                            speeds=speeds).run(S.mixed_trace(100, seed=s))
+                for s in hetero_seeds]
+        means[policy] = float(np.mean([r.makespan for r in runs]))
+        report(f"hetero/{policy}/mean_makespan", round(means[policy], 1),
+               "s", "mixed-generation fleet, half the hosts at s=0.5")
+        report(f"hetero/{policy}/mean_chi",
+               round(float(np.mean([r.mean_cross_host_fraction()
+                                    for r in runs])), 3), "frac",
+               "cross-host fraction at placement")
+    report("hetero/locality_vs_binpack",
+           round((means["binpack"] - means["locality"])
+                 / means["binpack"] * 100, 2), "% lower makespan",
+           "CostModel-scored locality on a mixed-speed fleet")
+
+    # beta-sensitivity: double the network-bound share (beta 13 jobs
+    # dominate, so co-location pressure rises fleet-wide)
+    net_heavy = ("mpi-network", "mpi-compute", "mpi-network", "omp")
+    for policy in ("binpack", "locality"):
+        runs = [S.Simulator(16, 8, "granular", migrate=True, policy=policy,
+                            speeds=speeds).run(
+                    S.mixed_trace(100, seed=s, kinds=net_heavy))
+                for s in hetero_seeds]
+        report(f"hetero_net_heavy/{policy}/mean_makespan",
+               round(float(np.mean([r.makespan for r in runs])), 1), "s",
+               "mixed-generation fleet, network-heavy job mix")
 
     # ---- priority preemption: high-priority latency vs churn ---------------
     def trace():

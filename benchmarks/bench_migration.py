@@ -18,7 +18,7 @@ import sys
 import textwrap
 
 from repro.core import simulator as S
-from repro.core.scheduler import Allocation, ClusterState
+from repro.core.scheduler import Allocation
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 

@@ -11,16 +11,12 @@ sketch, implemented for real).
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import pickle
 import threading
 import time
 from typing import Any, Dict, List, Optional
-
-import jax
-import numpy as np
 
 from repro.core import diffsync, snapshot as snap_mod
 

@@ -8,9 +8,8 @@ Every assigned architecture gets one file in this package defining an
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Tuple
 
-import jax
 import jax.numpy as jnp
 
 

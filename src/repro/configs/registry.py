@@ -4,7 +4,7 @@ from __future__ import annotations
 import importlib
 from typing import Dict, List
 
-from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, cell_applicable
+from repro.configs.base import ArchConfig, SHAPES, cell_applicable
 
 _MODULES = {
     "granite-moe-1b-a400m": "granite_moe_1b_a400m",

@@ -19,13 +19,12 @@ wrap them in shard_map over a mesh for direct use.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Optional, Sequence, Tuple
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import compat
 from repro.core.compat import shard_map

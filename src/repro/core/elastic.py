@@ -14,7 +14,7 @@ keeping the *global* batch size and the loss trajectory unchanged:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, List, Optional, Sequence
+from typing import Any, Optional, Sequence
 
 import jax
 import numpy as np
@@ -72,7 +72,12 @@ class ElasticPolicy:
     max_world: int = 64
     target_free: int = 0
 
-    def decide(self, world: int, engine: PlacementEngine) -> Optional[int]:
+    def decide(self, world: int, engine: PlacementEngine,
+               kind: Optional[str] = None) -> Optional[int]:
+        """``kind`` is the tenant's job kind: the grow probe runs the
+        engine's placement policy under the same per-kind beta the
+        simulator and migration planner use (``engine.cost_model``), so
+        an elastic grow lands exactly where a trace placement would."""
         budget = world + engine.idle_chips() - self.target_free
         new = self.min_world
         while new * 2 <= min(budget, self.max_world):
@@ -80,7 +85,7 @@ class ElasticPolicy:
         if new == world:
             return None
         if new > world:
-            res = engine.reserve(new - world)
+            res = engine.reserve(new - world, kind=kind)
             if res is None:                 # gang not carveable right now
                 return None
             engine.cancel(res)

@@ -62,9 +62,33 @@ from repro.core import control as ctl
 from repro.core import elastic as elastic_mod
 from repro.core import snapshot as snap_mod
 from repro.core.granule import GranuleGroup
-from repro.core.placement import (Allocation, PlacementEngine,
-                                  PlacementPolicy, PreemptPolicy)
+from repro.core.placement import (Allocation, CostModel, PlacementEngine,
+                                  PlacementPolicy, PreemptPolicy,
+                                  derive_capacities)
 from repro.core.simulator import Job, Simulator, TraceResult
+
+# Relative per-chip speed by device generation, used to auto-detect a
+# mixed-generation pool (unknown kinds count as current-generation 1.0).
+DEVICE_KIND_SPEEDS = {
+    "TPU v5": 1.0, "TPU v4": 0.75, "TPU v3": 0.45, "TPU v2": 0.25,
+}
+
+
+def infer_host_speeds(devices: Sequence[Any], chips_per_host: int
+                      ) -> Optional[List[float]]:
+    """Per-host speed factors for a mixed device pool, or ``None`` for a
+    uniform pool (the homogeneous fast path).  Hosts follow the same
+    consecutive-run layout as ``derive_capacities``; a host's speed is
+    the mean of its devices' generation factors."""
+    kinds = [str(getattr(d, "device_kind", "")) for d in devices]
+    if len(set(kinds)) <= 1:
+        return None
+    speeds, i = [], 0
+    for cap in derive_capacities(len(devices), chips_per_host):
+        factors = [DEVICE_KIND_SPEEDS.get(k, 1.0) for k in kinds[i:i + cap]]
+        speeds.append(float(np.mean(factors)))
+        i += cap
+    return speeds
 
 
 def make_gang_mesh(devices: Sequence[Any], pods: int = 1) -> Mesh:
@@ -108,12 +132,14 @@ class GangHandle:
 
     def __init__(self, fabric: "Fabric", job_id: str, priority: int = 0,
                  pods: int = 1,
-                 policy: Union[str, PlacementPolicy, None] = None):
+                 policy: Union[str, PlacementPolicy, None] = None,
+                 kind: Optional[str] = None):
         self.fabric = fabric
         self.job_id = job_id
         self.priority = priority
         self.pods = pods
         self.policy = policy
+        self.kind = kind            # trace job kind -> per-kind beta
         self.alloc: Optional[Allocation] = None
         self.devices: List[Any] = []
         self.group: Optional[GranuleGroup] = None
@@ -173,7 +199,8 @@ class GangHandle:
         """
         assert self.status == "running"
         engine = self.fabric.engine
-        plans = engine.migration_plan([self.alloc])
+        plans = engine.migration_plan([self.alloc],
+                                      kinds={self.job_id: self.kind})
         if plans:
             _, new_pl = plans[0]
             self.alloc = engine.apply_migration(self.alloc, new_pl)
@@ -203,7 +230,8 @@ class GangHandle:
         old_devices = self.devices
         engine.release(self.alloc)
         self.fabric.reclaim(old_devices)
-        alloc = engine.allocate(self.job_id, new_world, policy=self.policy)
+        alloc = engine.allocate(self.job_id, new_world, policy=self.policy,
+                                kind=self.kind)
         if alloc is None:            # other tenants hold the delta: undo
             self.alloc = engine.bind(self.job_id, old_placement)
             self.devices = self.fabric.claim_exact(old_devices)
@@ -248,7 +276,8 @@ class GangHandle:
         assert self.status == "preempted" and self.snapshot is not None
         if alloc is None:
             alloc = self.fabric.engine.allocate(
-                self.job_id, self.snapshot_world(), policy=self.policy)
+                self.job_id, self.snapshot_world(), policy=self.policy,
+                kind=self.kind)
             if alloc is None:
                 raise RuntimeError("resume: gang not placeable")
         self.attach(alloc)
@@ -286,24 +315,31 @@ class Fabric:
     ``devices``: the concrete jax devices (default: all local devices);
     hosts are consecutive runs of ``chips_per_host`` devices, and the
     ragged last host is carried as a reduced per-host capacity in the
-    engine (no phantom pad job).
+    engine (no phantom pad job) — both derived by the shared
+    ``placement.derive_capacities`` via ``PlacementEngine.for_chips``.
+    A mixed-generation device pool (differing ``device_kind``) is
+    auto-detected into per-host ``speeds``; pass ``speeds`` explicitly
+    to model a mixed fleet on uniform local devices (e.g.
+    ``simulator.hetero_speeds``).
     """
 
     def __init__(self, devices: Optional[Sequence[Any]] = None,
                  chips_per_host: int = 4,
                  policy: Union[str, PlacementPolicy] = "binpack",
-                 preempt: Optional[PreemptPolicy] = None):
+                 preempt: Optional[PreemptPolicy] = None,
+                 speeds: Optional[Sequence[float]] = None,
+                 cost_model: Optional[CostModel] = None):
         self.devices = list(devices if devices is not None
                             else jax.devices())
         assert self.devices, "empty fabric"
         self.chips_per_host = chips_per_host
         self._dev_index = {d: i for i, d in enumerate(self.devices)}
-        n_hosts = -(-len(self.devices) // chips_per_host)
-        capacities = [min(chips_per_host,
-                          len(self.devices) - h * chips_per_host)
-                      for h in range(n_hosts)]
-        self.engine = PlacementEngine(n_hosts, chips_per_host,
-                                      policy=policy, capacities=capacities)
+        if speeds is None:
+            speeds = infer_host_speeds(self.devices, chips_per_host)
+        self.engine = PlacementEngine.for_chips(
+            len(self.devices), chips_per_host, policy=policy,
+            speeds=speeds, cost_model=cost_model)
+        n_hosts = self.engine.hosts
         self.preempt = preempt or PreemptPolicy()
         self.gangs: Dict[str, GangHandle] = {}
         self._free: List[List[Any]] = [
@@ -344,22 +380,24 @@ class Fabric:
     # ---- gang lifecycle ----------------------------------------------------
     def allocate(self, job_id: str, n: int, priority: int = 0,
                  pods: int = 1,
-                 policy: Union[str, PlacementPolicy, None] = None
-                 ) -> Optional[GangHandle]:
-        """Policy-driven gang allocation; None when it does not fit."""
-        alloc = self.engine.allocate(job_id, n, policy=policy)
+                 policy: Union[str, PlacementPolicy, None] = None,
+                 kind: Optional[str] = None) -> Optional[GangHandle]:
+        """Policy-driven gang allocation; None when it does not fit.
+        ``kind`` (trace job kind) keys the CostModel's per-kind beta for
+        this and every later placement decision of the gang."""
+        alloc = self.engine.allocate(job_id, n, policy=policy, kind=kind)
         if alloc is None:
             return None
         handle = GangHandle(self, job_id, priority=priority, pods=pods,
-                            policy=policy)
+                            policy=policy, kind=kind)
         handle.attach(alloc)
         self.gangs[job_id] = handle
         return handle
 
     def bind(self, job_id: str, devices: Sequence[Any], priority: int = 0,
              pods: int = 1,
-             policy: Union[str, PlacementPolicy, None] = None
-             ) -> GangHandle:
+             policy: Union[str, PlacementPolicy, None] = None,
+             kind: Optional[str] = None) -> GangHandle:
         """Adopt an externally-chosen device list (a launch-time gang),
         preserving its rank order."""
         counts: Dict[int, int] = {}
@@ -367,18 +405,19 @@ class Fabric:
             counts[self.host_of(d)] = counts.get(self.host_of(d), 0) + 1
         alloc = self.engine.bind(job_id, sorted(counts.items()))
         handle = GangHandle(self, job_id, priority=priority, pods=pods,
-                            policy=policy)
+                            policy=policy, kind=kind)
         handle.attach(alloc, devices=self.claim_exact(devices))
         self.gangs[job_id] = handle
         return handle
 
     def adopt(self, alloc: Allocation, priority: int = 0, pods: int = 1,
-              handle: Optional[GangHandle] = None) -> GangHandle:
+              handle: Optional[GangHandle] = None,
+              kind: Optional[str] = None) -> GangHandle:
         """Build/re-attach a handle for an allocation the engine already
         holds (the trace runner's event loop owns engine accounting)."""
         if handle is None:
             handle = GangHandle(self, alloc.job_id, priority=priority,
-                                pods=pods)
+                                pods=pods, kind=kind)
         handle.attach(alloc)
         self.gangs[alloc.job_id] = handle
         return handle
@@ -386,12 +425,14 @@ class Fabric:
     def priorities(self) -> Dict[str, int]:
         return {jid: h.priority for jid, h in self.gangs.items()}
 
-    def preemption_plan(self, n: int, priority: int) -> Optional[List[str]]:
+    def preemption_plan(self, n: int, priority: int,
+                        kind: Optional[str] = None) -> Optional[List[str]]:
         """Victims (lower-priority gangs) to evict so an ``n``-chip gang
         at ``priority`` fits — the live counterpart of the simulator's
-        preemption step; the caller checkpoints + requeues them."""
+        preemption step; the caller checkpoints + requeues them.
+        ``kind`` feeds the arrival's per-kind beta into the fit probe."""
         return self.engine.preemption_plan(n, priority, self.priorities(),
-                                           preempt=self.preempt)
+                                           preempt=self.preempt, kind=kind)
 
     # ---- trace execution ---------------------------------------------------
     def run_trace(self, jobs: Sequence[Job],
@@ -420,12 +461,16 @@ class Fabric:
                       migrate: bool = False, backfill: bool = False
                       ) -> TraceResult:
         """Pure-simulation prediction for the same trace on a fabric of
-        this shape (same hosts, capacities, policy) — what ``run_trace``
-        should reproduce, placement-for-placement."""
+        this shape (same hosts, capacities, per-host speeds, cost model,
+        policy) — what ``run_trace`` should reproduce,
+        placement-for-placement."""
         pol = policy or self.engine.default_policy
         engine = PlacementEngine(self.engine.hosts, self.chips_per_host,
                                  policy=pol,
-                                 capacities=list(self.engine.capacities))
+                                 capacities=list(self.engine.capacities),
+                                 speeds=None if self.engine.speeds is None
+                                 else list(self.engine.speeds),
+                                 cost_model=self.engine.cost_model)
         sim = Simulator(engine.hosts, self.chips_per_host, "granular",
                         migrate=migrate, policy=pol, backfill=backfill,
                         preempt=preempt, engine=engine)
@@ -507,7 +552,7 @@ class LiveTraceRunner(Simulator):
             self._record(job.job_id)["resumes_verified"] += 1
         else:
             handle = self.fabric.adopt(rj.alloc, priority=job.priority,
-                                       handle=handle)
+                                       handle=handle, kind=job.kind)
             self.handles[job.job_id] = handle
             wl.bind(handle)
             if wl.state is None:

@@ -17,12 +17,8 @@ from __future__ import annotations
 
 import collections
 import dataclasses
-import itertools
 import threading
-from typing import Any, Dict, List, Optional, Sequence, Tuple
-
-import jax
-import numpy as np
+from typing import Any, Dict, List, Sequence, Tuple
 
 
 @dataclasses.dataclass

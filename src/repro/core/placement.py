@@ -5,20 +5,38 @@ the discrete-event simulator (paper Fig 10/11/14), the live runtime's
 sub-mesh carving / rescale / migrate control-point actions, and the
 scheduler facade in ``core.scheduler``.  The split is:
 
+* ``CostModel`` — the one job-time model every layer consumes::
+
+      T = (W / Σ_h n_h·s_h) · (1 + beta_kind · chi)
+
+  with per-host speed factors ``s_h`` (mixed host generations) and a
+  per-job-kind cross-host penalty ``beta`` calibrated from the paper's
+  Fig 14 microbenchmarks (compute-bound 0.4, network-bound 13.0).
+  Policies rank candidate placements by it, the simulator's job rates
+  integrate it, and the engine's migration/preemption plans cost moves
+  with it — so simulated and live decisions stay placement-for-placement
+  identical.
+
 * ``PlacementPolicy`` — a pure function from a free-chip snapshot
   (``ClusterView``) to a gang placement ``[(host, n_chips)]``.  Shipped
   policies:
 
   - ``binpack``      Faabric's default: greedy most-free-first so the gang
-                     spans as few hosts as possible (the seed behaviour).
-  - ``spread``       round-robin chips over hosts (load balancing).
+                     spans as few hosts as possible (the seed behaviour);
+                     on heterogeneous fleets "most free" is measured in
+                     effective throughput ``free_h·s_h``.
+  - ``spread``       round-robin chips over hosts (load balancing),
+                     throughput-weighted on heterogeneous fleets.
   - ``fixed-slice``  the §6.2 k-containers-per-VM baselines: whole slices
                      of ``slice_size`` chips, never shared between jobs.
-  - ``locality``     scores candidate placements under the simulator's
-                     cost model T = (W/n)(1 + beta*chi) and picks the one
-                     minimising the predicted slowdown, tie-breaking on
-                     chips stranded on touched hosts (best-fit) so large
-                     contiguous blocks survive for later gangs.
+  - ``locality``     scores candidate placements by the full predicted
+                     ``T`` of the cost model and picks the minimiser,
+                     tie-breaking on chips stranded on touched hosts
+                     (best-fit) so large contiguous blocks survive for
+                     later gangs.  On homogeneous fleets ``Σ n_h·s_h``
+                     is constant across candidates, so the score
+                     degenerates to the slowdown ``(1 + beta·chi)``
+                     exactly as before the CostModel refactor.
 
 * ``PlacementEngine`` — owns the mutable cluster state: free-chip
   accounting, gang allocation, preemption-safe reservations (hold chips
@@ -26,8 +44,8 @@ scheduler facade in ``core.scheduler``.  The split is:
   planning at barrier points, and adoption of externally-created
   placements (``bind``, used by the live runtime).  Hosts default to
   ``chips_per_host`` chips each; ``capacities`` overrides per-host chip
-  counts (a ragged last host on the CPU fabric, heterogeneous
-  generations later).
+  counts (a ragged last host on the CPU fabric) and ``speeds`` carries
+  per-host speed factors (mixed host generations).
 
 * ``PreemptPolicy`` — victim selection when a high-priority arrival
   cannot be placed: evict the cheapest set of strictly-lower-priority
@@ -38,7 +56,7 @@ scheduler facade in ``core.scheduler``.  The split is:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import (Dict, List, Mapping, Optional, Sequence, Tuple, Union)
 
 import numpy as np
 
@@ -53,6 +71,118 @@ def placement_cross_host_fraction(placement: Sequence[Tuple[int, int]]
     if n <= 1:
         return 0.0
     return 1.0 - sum((c / n) ** 2 for _, c in placement)
+
+
+def derive_capacities(n_chips: int, chips_per_host: int) -> List[int]:
+    """Per-host chip capacities for a pool of ``n_chips`` devices: hosts
+    are consecutive runs of ``chips_per_host`` chips, and the last host
+    carries the ragged remainder.  The one place the host map is derived
+    — ``Fabric`` and ``PlacementEngine.for_chips`` both use it."""
+    assert n_chips > 0 and chips_per_host > 0
+    hosts = -(-n_chips // chips_per_host)
+    return [min(chips_per_host, n_chips - h * chips_per_host)
+            for h in range(hosts)]
+
+
+# ---------------------------------------------------------------------------
+# Cost model
+# ---------------------------------------------------------------------------
+class CostModel:
+    """The §6 job-time model ``T = (W / Σ_h n_h·s_h)·(1 + beta_kind·chi)``.
+
+    Calibration (paper Fig 14, §6.4):
+
+    ==============  =====  ==========================================
+    job kind        beta   source
+    ==============  =====  ==========================================
+    mpi-compute      0.4   LAMMPS co-located vs 4+4-fragmented = 1.2x
+    mpi-network     13.0   all-to-all fragmented = 7.5x
+    omp              1.0   shared-memory intermediate
+    ==============  =====  ==========================================
+
+    ``speeds`` (per-host factors ``s_h``, 1.0 = current generation) turn
+    the perfect-scaling term ``W/n`` into ``W / Σ_h n_h·s_h``; with no
+    speeds (homogeneous fleet) every method reduces bit-exactly to the
+    pre-heterogeneity formulas.  ``migrate_progress_cap`` is Fig 14's
+    migration-worthwhile heuristic: past this progress fraction the
+    snapshot transfer no longer pays for itself; ``migration_cost_s``
+    is that snapshot-transfer cost (the simulator's MIGRATION_COST_S),
+    which a heterogeneous migration's predicted saving must exceed.
+    """
+
+    DEFAULT_BETAS: Dict[str, float] = {"mpi-compute": 0.4,
+                                       "mpi-network": 13.0, "omp": 1.0}
+
+    def __init__(self, betas: Optional[Mapping[str, float]] = None,
+                 default_beta: float = 0.4,
+                 migrate_progress_cap: float = 0.8,
+                 migration_cost_s: float = 2.0,
+                 preempt_cost_s: float = 2.0):
+        self.betas = dict(self.DEFAULT_BETAS if betas is None else betas)
+        self.default_beta = default_beta
+        self.migrate_progress_cap = migrate_progress_cap
+        self.migration_cost_s = migration_cost_s
+        self.preempt_cost_s = preempt_cost_s
+
+    def beta(self, kind: Optional[str] = None) -> float:
+        """Per-job-kind cross-host penalty; ``default_beta`` when the
+        kind is unknown (e.g. a live gang with no trace kind)."""
+        if kind is None:
+            return self.default_beta
+        return self.betas.get(kind, self.default_beta)
+
+    def slowdown(self, placement: Sequence[Tuple[int, int]],
+                 kind: Optional[str] = None) -> float:
+        """``1 + beta_kind·chi`` for a placement."""
+        return 1.0 + self.beta(kind) * placement_cross_host_fraction(
+            placement)
+
+    def effective_parallelism(self, placement: Sequence[Tuple[int, int]],
+                              speeds: Optional[np.ndarray] = None,
+                              active: Optional[int] = None) -> float:
+        """``Σ_h n_h·s_h`` — chips weighted by host speed.  ``active``
+        caps the working ranks below the allocated chips (an OpenMP job
+        in an over-large container); the speed-weighted sum then scales
+        by the active fraction."""
+        n = sum(c for _, c in placement)
+        if active is None:
+            active = n
+        if speeds is None:
+            return float(active)
+        eff = float(sum(c * float(speeds[h]) for h, c in placement))
+        if active != n and n > 0:
+            eff *= active / n
+        return eff
+
+    def predicted_time(self, work: float,
+                       placement: Sequence[Tuple[int, int]],
+                       kind: Optional[str] = None,
+                       speeds: Optional[np.ndarray] = None,
+                       active: Optional[int] = None) -> float:
+        """``T = (W / Σ_h n_h·s_h)·(1 + beta_kind·chi)``."""
+        eff = self.effective_parallelism(placement, speeds, active)
+        if eff <= 0:
+            return float("inf")
+        return (work / eff) * self.slowdown(placement, kind)
+
+    def score(self, placement: Sequence[Tuple[int, int]],
+              kind: Optional[str] = None,
+              speeds: Optional[np.ndarray] = None) -> float:
+        """Per-unit-work predicted ``T`` — what policies rank candidate
+        placements by (``W`` is constant across candidates, so it drops
+        out of the argmin)."""
+        return self.predicted_time(1.0, placement, kind, speeds)
+
+    def active_workers(self, parallelism: int, alloc_n: int,
+                       shared_memory: bool) -> int:
+        """Working ranks on an allocation: OpenMP threads in one
+        container cap at the container's chips (§6.2); MPI world sizes
+        are fixed at submission."""
+        return min(parallelism, alloc_n) if shared_memory else parallelism
+
+    def migration_worthwhile(self, progress: float) -> bool:
+        """Fig 14: consolidation pays off except near the finish line."""
+        return progress <= self.migrate_progress_cap
 
 
 @dataclasses.dataclass
@@ -77,17 +207,38 @@ class Allocation:
 
 
 class ClusterView:
-    """Read-only free-chip snapshot handed to policies (keeps them pure)."""
+    """Read-only free-chip snapshot handed to policies (keeps them pure).
 
-    __slots__ = ("free", "chips_per_host")
+    ``capacities`` carries per-host chip counts (ragged last host) and
+    ``speeds`` per-host speed factors; ``speeds is None`` means a
+    homogeneous fleet and keeps every policy on its exact pre-CostModel
+    integer code path."""
 
-    def __init__(self, free: np.ndarray, chips_per_host: int):
+    __slots__ = ("free", "chips_per_host", "capacities", "speeds")
+
+    def __init__(self, free: np.ndarray, chips_per_host: int,
+                 capacities: Optional[np.ndarray] = None,
+                 speeds: Optional[np.ndarray] = None):
         self.free = free
         self.chips_per_host = chips_per_host
+        self.capacities = (np.full(len(free), chips_per_host,
+                                   dtype=np.int64)
+                           if capacities is None
+                           else np.asarray(capacities, dtype=np.int64))
+        self.speeds = (None if speeds is None
+                       else np.asarray(speeds, dtype=np.float64))
 
     @property
     def hosts(self) -> int:
         return len(self.free)
+
+    @property
+    def heterogeneous(self) -> bool:
+        """True when per-host speeds actually differ — a uniform-speed
+        fleet (even at s != 1) ranks placements exactly like the
+        homogeneous case, so policies keep the degenerate path."""
+        return self.speeds is not None and bool(
+            (self.speeds != self.speeds[0]).any())
 
     def idle_chips(self) -> int:
         return int(self.free.sum())
@@ -97,18 +248,46 @@ class ClusterView:
 # Policies
 # ---------------------------------------------------------------------------
 class PlacementPolicy:
-    """A pure placement function; the engine commits the result."""
+    """A pure placement function; the engine commits the result.
+
+    ``kind`` is the job kind from the trace (``Job.kind``) so policies
+    that consult the cost model use the same per-job beta as the
+    simulator's rate integration; None falls back to the model default.
+    """
 
     name = "abstract"
     slice_size = 0                          # granular unless overridden
 
-    def place(self, view: ClusterView, n: int) -> Optional[Placement]:
+    def place(self, view: ClusterView, n: int,
+              kind: Optional[str] = None) -> Optional[Placement]:
         raise NotImplementedError
 
+    def with_model(self, model: CostModel) -> "PlacementPolicy":
+        """Bind an engine's cost model.  Policies that score with one
+        return a bound copy (never mutating the shared ``POLICIES``
+        singletons); stateless policies return self.  The engine calls
+        this on every resolved policy so placement and execution always
+        score with the *same* model — the one-model invariant."""
+        return self
 
-def _greedy_most_free(free: np.ndarray, n: int) -> Optional[Placement]:
-    """Most-free-first greedy: the gang spans as few hosts as possible."""
-    order = np.argsort(free)[::-1]
+
+def _host_order(free: np.ndarray,
+                speeds: Optional[np.ndarray] = None) -> np.ndarray:
+    """Hosts by descending free capacity; on heterogeneous fleets by
+    descending effective free throughput ``free_h·s_h``, tie-broken
+    toward faster hosts (so equal-throughput fast hosts are preferred
+    over one big slow host)."""
+    if speeds is None:
+        return np.argsort(free)[::-1]
+    return np.lexsort((speeds, free * speeds))[::-1]
+
+
+def _greedy_most_free(free: np.ndarray, n: int,
+                      speeds: Optional[np.ndarray] = None
+                      ) -> Optional[Placement]:
+    """Most-free-first greedy: the gang spans as few hosts as possible
+    (as few *effective-throughput-ordered* hosts on mixed fleets)."""
+    order = _host_order(free, speeds)
     placement: Placement = []
     remaining = n
     for h in order:
@@ -123,32 +302,42 @@ def _greedy_most_free(free: np.ndarray, n: int) -> Optional[Placement]:
 
 
 class BinpackPolicy(PlacementPolicy):
-    """Faabric's default: fewest hosts via greedy most-free-first."""
+    """Faabric's default: fewest hosts via greedy most-free-first.  On a
+    heterogeneous fleet the greedy order is the cost model's effective
+    throughput ``free_h·s_h`` — the homogeneous case degenerates to the
+    original free-chip order bit-exactly."""
 
     name = "binpack"
 
-    def place(self, view: ClusterView, n: int) -> Optional[Placement]:
+    def place(self, view: ClusterView, n: int,
+              kind: Optional[str] = None) -> Optional[Placement]:
         if n > view.idle_chips():
             return None
-        return _greedy_most_free(view.free, n)
+        speeds = view.speeds if view.heterogeneous else None
+        return _greedy_most_free(view.free, n, speeds)
 
 
 class SpreadPolicy(PlacementPolicy):
-    """Round-robin chips over hosts (load balancing)."""
+    """Round-robin chips over hosts (load balancing); on mixed fleets
+    each chip lands on the host with the most effective free throughput."""
 
     name = "spread"
 
-    def place(self, view: ClusterView, n: int) -> Optional[Placement]:
+    def place(self, view: ClusterView, n: int,
+              kind: Optional[str] = None) -> Optional[Placement]:
         if n > view.idle_chips():
             return None
         counts: Dict[int, int] = {}
         free = view.free.copy()
+        hetero = view.heterogeneous
         remaining = n
         while remaining > 0:
             candidates = np.nonzero(free > 0)[0]
             if candidates.size == 0:
                 return None
-            h = int(candidates[np.argmax(free[candidates])])
+            weight = (free[candidates] * view.speeds[candidates]
+                      if hetero else free[candidates])
+            h = int(candidates[np.argmax(weight)])
             counts[h] = counts.get(h, 0) + 1
             free[h] -= 1
             remaining -= 1
@@ -170,13 +359,15 @@ class FixedSlicePolicy(PlacementPolicy):
         assert slice_size > 0
         self.slice_size = slice_size
 
-    def place(self, view: ClusterView, n: int) -> Optional[Placement]:
+    def place(self, view: ClusterView, n: int,
+              kind: Optional[str] = None) -> Optional[Placement]:
         slice_size = self.slice_size
         n_slices = -(-n // slice_size)
         placement: Dict[int, int] = {}
         need = n_slices
         free = view.free
-        for h in np.argsort(free)[::-1]:
+        speeds = view.speeds if view.heterogeneous else None
+        for h in _host_order(free, speeds):
             while free[h] - placement.get(int(h), 0) >= slice_size \
                     and need > 0:
                 placement[int(h)] = placement.get(int(h), 0) + slice_size
@@ -189,28 +380,53 @@ class FixedSlicePolicy(PlacementPolicy):
 
 
 class LocalityScoredPolicy(PlacementPolicy):
-    """Minimise the predicted cross-host slowdown of the §6 cost model.
+    """Minimise the predicted job time ``T`` of the §6 cost model.
 
-    Candidate placements are scored by the slowdown factor (1 + beta*chi)
-    of T = (W/n)(1 + beta*chi); W/n is identical across candidates so it
-    drops out.  Ties (e.g. every single-host placement has chi = 0) break
-    on chips *stranded* on touched hosts: best-fit keeps large free blocks
+    Candidate placements are scored by the model's per-unit-work ``T``
+    (``CostModel.score``): on a homogeneous fleet ``Σ n_h·s_h`` is the
+    same for every candidate, so the score degenerates to the slowdown
+    factor ``(1 + beta_kind·chi)`` — bit-identical to the pre-CostModel
+    behaviour; on a mixed-generation fleet the score trades cross-host
+    fragmentation against host speed *per job kind* (a network-bound
+    job with beta 13 co-locates on a slow host, a compute-bound job
+    with beta 0.4 splits across the fast generation).  Ties (e.g. every
+    single-host placement of a given speed has chi = 0) break on chips
+    *stranded* on touched hosts: best-fit keeps large free blocks
     intact, so later gangs fragment less — that second-order effect is
-    what lowers the trace-wide mean chi versus binpack's worst-fit choice
-    of the most-free host.
+    what lowers the trace-wide mean chi versus binpack's worst-fit
+    choice of the most-free host.
     """
 
     name = "locality"
 
-    def __init__(self, beta: float = 0.4):
-        self.beta = beta
+    def __init__(self, beta: Optional[float] = None,
+                 cost_model: Optional[CostModel] = None):
+        # an explicitly-configured policy keeps its model through
+        # with_model; only the default construction (the POLICIES
+        # singleton, by-name resolution) is rebindable to an engine's
+        self._custom = cost_model is not None or beta is not None
+        # an explicit beta overrides every kind (the pre-CostModel
+        # semantics: one scalar scored all placements), so the
+        # calibration table is dropped, not merely re-defaulted
+        self.cost_model = cost_model or (
+            CostModel() if beta is None
+            else CostModel(betas={}, default_beta=beta))
+
+    @property
+    def beta(self) -> float:
+        return self.cost_model.default_beta
+
+    def with_model(self, model: CostModel) -> "LocalityScoredPolicy":
+        if self._custom or model is self.cost_model:
+            return self
+        bound = LocalityScoredPolicy(cost_model=model)
+        bound._custom = False           # engine-bound, still rebindable
+        return bound
 
     def _stranded(self, view: ClusterView, placement: Placement) -> int:
         return sum(int(view.free[h]) - c for h, c in placement)
 
-    def place(self, view: ClusterView, n: int) -> Optional[Placement]:
-        if n > view.idle_chips():
-            return None
+    def _candidates(self, view: ClusterView, n: int) -> List[Placement]:
         free = view.free
         candidates: List[Placement] = []
         fits = np.nonzero(free >= n)[0]
@@ -223,10 +439,34 @@ class LocalityScoredPolicy(PlacementPolicy):
         exact = self._greedy_exact_fill(free, n)
         if exact is not None:
             candidates.append(exact)
+        if view.heterogeneous:
+            # speed-aware candidates: the fastest single host that fits,
+            # and the effective-throughput greedy over the fast hosts
+            if fits.size:
+                hf = int(fits[np.argmax(view.speeds[fits])])
+                candidates.append([(hf, n)])
+            fast = _greedy_most_free(free, n, view.speeds)
+            if fast is not None:
+                candidates.append(fast)
+        return candidates
+
+    def place(self, view: ClusterView, n: int,
+              kind: Optional[str] = None) -> Optional[Placement]:
+        if n > view.idle_chips():
+            return None
+        candidates = self._candidates(view, n)
         if not candidates:
             return None
+        if view.heterogeneous:
+            model = self.cost_model
+            return min(candidates, key=lambda p: (
+                model.score(p, kind, view.speeds),
+                self._stranded(view, p)))
+        # homogeneous: Σ n_h·s_h is constant, so T reduces to the
+        # slowdown — the exact pre-CostModel scoring key
+        beta = self.cost_model.beta(kind)
         return min(candidates, key=lambda p: (
-            1.0 + self.beta * placement_cross_host_fraction(p),
+            1.0 + beta * placement_cross_host_fraction(p),
             self._stranded(view, p)))
 
     @staticmethod
@@ -292,6 +532,11 @@ class PreemptPolicy:
     The plan is a pure decision — the caller performs the actual
     checkpoint + release + requeue.
 
+    The fit probe runs the placement policy against the engine's real
+    view (capacities, per-host speeds, the arrival's job kind), so a
+    preemption planned in simulation lands identically on the live
+    fabric.
+
     ``max_victims`` bounds the blast radius of one arrival (0 = unbounded).
     """
 
@@ -299,18 +544,18 @@ class PreemptPolicy:
 
     def plan(self, engine: "PlacementEngine", n: int, priority: int,
              priorities: Dict[str, int],
-             policy: Union[str, PlacementPolicy, None] = None
-             ) -> Optional[List[str]]:
+             policy: Union[str, PlacementPolicy, None] = None,
+             kind: Optional[str] = None) -> Optional[List[str]]:
         """job_ids to evict so an ``n``-chip gang at ``priority`` places;
         ``None`` if no lower-priority victim set suffices, ``[]`` if it
         already fits without eviction."""
-        pol = resolve_policy(policy, engine.default_policy)
+        pol = resolve_policy(policy, engine.default_policy).with_model(
+            engine.cost_model)
         scratch = engine.free.copy()
 
         def fits() -> bool:
-            return pol.place(ClusterView(scratch.copy(),
-                                         engine.chips_per_host),
-                             n) is not None
+            return pol.place(engine.view_with(scratch), n,
+                             kind=kind) is not None
 
         if fits():
             return []
@@ -368,12 +613,17 @@ class Reservation:
 
 class PlacementEngine:
     """Free-chip accounting + policy-driven gang allocation for a cluster
-    of ``hosts`` hosts with ``chips_per_host`` chips each (``capacities``
-    overrides individual hosts, e.g. a ragged last host)."""
+    of ``hosts`` hosts with ``chips_per_host`` chips each.  ``capacities``
+    overrides per-host chip counts (e.g. a ragged last host); ``speeds``
+    carries per-host speed factors for mixed host generations;
+    ``cost_model`` is the shared job-time model policies and plans score
+    against."""
 
     def __init__(self, hosts: int, chips_per_host: int,
                  policy: Union[str, PlacementPolicy] = "binpack",
-                 capacities: Optional[Sequence[int]] = None):
+                 capacities: Optional[Sequence[int]] = None,
+                 speeds: Optional[Sequence[float]] = None,
+                 cost_model: Optional[CostModel] = None):
         self.hosts = hosts
         self.chips_per_host = chips_per_host
         if capacities is None:
@@ -383,15 +633,38 @@ class PlacementEngine:
             self.capacities = np.asarray(capacities, dtype=np.int64)
             assert (self.capacities >= 0).all() \
                 and (self.capacities <= chips_per_host).all()
+        if speeds is None:
+            self.speeds: Optional[np.ndarray] = None
+        else:
+            assert len(speeds) == hosts
+            self.speeds = np.asarray(speeds, dtype=np.float64)
+            assert (self.speeds > 0).all()
+        self.cost_model = cost_model if cost_model is not None \
+            else CostModel()
         self.free = self.capacities.copy()
         self.jobs_on_host: List[set] = [set() for _ in range(hosts)]
-        self.default_policy = resolve_policy(policy)
+        self.default_policy = resolve_policy(policy).with_model(
+            self.cost_model)
         self.allocations: Dict[str, Allocation] = {}
+
+    @classmethod
+    def for_chips(cls, n_chips: int, chips_per_host: int,
+                  **kwargs) -> "PlacementEngine":
+        """Engine for a flat pool of ``n_chips`` devices — host count and
+        the ragged last host come from ``derive_capacities`` (the single
+        shared derivation; ``core.fabric.Fabric`` builds through here)."""
+        caps = derive_capacities(n_chips, chips_per_host)
+        return cls(len(caps), chips_per_host, capacities=caps, **kwargs)
 
     # ---- capacity ----------------------------------------------------------
     @property
     def total_chips(self) -> int:
         return int(self.capacities.sum())
+
+    @property
+    def heterogeneous(self) -> bool:
+        return self.speeds is not None and bool(
+            (self.speeds != self.speeds[0]).any())
 
     def idle_chips(self) -> int:
         return int(self.free.sum())
@@ -399,15 +672,28 @@ class PlacementEngine:
     def idle_fraction(self) -> float:
         return self.idle_chips() / self.total_chips
 
+    def idle_throughput(self) -> float:
+        """Idle capacity in effective (speed-weighted) chips."""
+        if self.speeds is None:
+            return float(self.idle_chips())
+        return float((self.free * self.speeds).sum())
+
     def view(self) -> ClusterView:
-        return ClusterView(self.free.copy(), self.chips_per_host)
+        return self.view_with(self.free)
+
+    def view_with(self, free: np.ndarray) -> ClusterView:
+        """A policy view over an alternative free map (scratch planning)
+        that still carries this engine's capacities and speeds."""
+        return ClusterView(free.copy(), self.chips_per_host,
+                           self.capacities, self.speeds)
 
     # ---- reservation lifecycle ---------------------------------------------
     def reserve(self, n: int,
-                policy: Union[str, PlacementPolicy, None] = None
-                ) -> Optional[Reservation]:
-        pol = resolve_policy(policy, self.default_policy)
-        placement = pol.place(self.view(), n)
+                policy: Union[str, PlacementPolicy, None] = None,
+                kind: Optional[str] = None) -> Optional[Reservation]:
+        pol = resolve_policy(policy, self.default_policy).with_model(
+            self.cost_model)
+        placement = pol.place(self.view(), n, kind=kind)
         if placement is None:
             return None
         for h, c in placement:
@@ -434,9 +720,9 @@ class PlacementEngine:
 
     # ---- allocation ----------------------------------------------------------
     def allocate(self, job_id: str, n: int,
-                 policy: Union[str, PlacementPolicy, None] = None
-                 ) -> Optional[Allocation]:
-        res = self.reserve(n, policy)
+                 policy: Union[str, PlacementPolicy, None] = None,
+                 kind: Optional[str] = None) -> Optional[Allocation]:
+        res = self.reserve(n, policy, kind=kind)
         return None if res is None else self.commit(res, job_id)
 
     def bind(self, job_id: str, placement: Sequence[Tuple[int, int]],
@@ -463,51 +749,89 @@ class PlacementEngine:
     def preemption_plan(self, n: int, priority: int,
                         priorities: Dict[str, int],
                         policy: Union[str, PlacementPolicy, None] = None,
-                        preempt: Optional[PreemptPolicy] = None
-                        ) -> Optional[List[str]]:
+                        preempt: Optional[PreemptPolicy] = None,
+                        kind: Optional[str] = None) -> Optional[List[str]]:
         """Plan victims (see ``PreemptPolicy.plan``) against the live
         allocation table; the caller checkpoints + releases + requeues."""
         return (preempt or PreemptPolicy()).plan(self, n, priority,
-                                                 priorities, policy)
+                                                 priorities, policy,
+                                                 kind=kind)
 
     # ---- migration (defragmentation at barrier points) ------------------------
-    def migration_plan(self, allocs: Sequence[Allocation]
+    def migration_plan(self, allocs: Sequence[Allocation],
+                       kinds: Optional[Mapping[str, str]] = None,
+                       remaining: Optional[Mapping[str, float]] = None
                        ) -> List[Tuple[str, Placement]]:
-        """For each fragmented granular gang, try to consolidate onto
-        fewer hosts using currently-free chips (+ the chips the gang
-        already holds).  Returns [(job_id, new_placement)].
+        """For each granular gang, try to find a better placement using
+        currently-free chips (+ the chips the gang already holds).
+        Returns [(job_id, new_placement)].
+
+        Homogeneous fleet: consolidate fragmented gangs onto fewer hosts
+        (the pre-CostModel behaviour, bit-identical).  Heterogeneous
+        fleet: candidate moves are costed with the engine's ``CostModel``
+        under the gang's job kind (``kinds``), so a gang also migrates
+        onto faster hosts when that lowers its predicted ``T`` — the
+        same criterion the simulator's rate integration uses.
+        ``remaining`` (job_id -> seconds of work left under the current
+        placement) makes that check cost-aware: the predicted saving on
+        the remaining work must exceed ``CostModel.migration_cost_s``
+        (the snapshot transfer the move will pay).  Without it (a
+        caller-initiated live barrier migration) any strict improvement
+        is emitted.
 
         Invariants: slice allocations are never migrated; a plan that
-        frees zero hosts (same host count) is not emitted; plans are
-        committed against a scratch free map so they never double-book
-        chips among themselves.
+        does not strictly improve (fewer hosts / lower predicted T) is
+        not emitted; plans are committed against a scratch free map so
+        they never double-book chips among themselves.
         """
         plans = []
         free = self.free.copy()
+        hetero = self.heterogeneous
+        model, speeds = self.cost_model, self.speeds
         for alloc in allocs:
-            if alloc.slice_size or alloc.fragmentation() <= 1:
+            if alloc.slice_size:
+                continue
+            if not hetero and alloc.fragmentation() <= 1:
                 continue
             held = dict(alloc.placement)
             avail = free.copy()
             for h, c in held.items():
                 avail[h] += c
-            # can the gang fit on fewer hosts?
-            order = np.argsort(avail)[::-1]
-            new_placement: Placement = []
-            remaining = alloc.n
-            for h in order:
-                if avail[h] <= 0 or remaining == 0:
-                    break
-                take = min(int(avail[h]), remaining)
-                new_placement.append((int(h), take))
-                remaining -= take
-            if remaining == 0 and len(new_placement) < alloc.fragmentation():
-                plans.append((alloc.job_id, sorted(new_placement)))
-                # commit against the scratch free map so plans don't overlap
-                for h, c in held.items():
-                    free[h] += c
-                for h, c in new_placement:
-                    free[h] -= c
+            if hetero:
+                kind = (kinds or {}).get(alloc.job_id)
+                current = model.score(alloc.placement, kind, speeds)
+                candidates = [p for p in (
+                    _greedy_most_free(avail, alloc.n, speeds),
+                    _greedy_most_free(avail, alloc.n))
+                    if p is not None and p != alloc.placement]
+                if not candidates:
+                    continue
+                best = min(candidates,
+                           key=lambda p: model.score(p, kind, speeds))
+                best_score = model.score(best, kind, speeds)
+                if best_score >= current - 1e-12:
+                    continue
+                rem = (remaining or {}).get(alloc.job_id)
+                if rem is not None:
+                    # rate scales as 1/score, so the move shrinks the
+                    # remaining time by rem*(1 - best/current); it must
+                    # buy back the snapshot transfer it costs
+                    saving = rem * (1.0 - best_score / current)
+                    if saving <= model.migration_cost_s:
+                        continue
+                new_placement = best
+            else:
+                # can the gang fit on fewer hosts?
+                new_placement = _greedy_most_free(avail, alloc.n)
+                if new_placement is None \
+                        or len(new_placement) >= alloc.fragmentation():
+                    continue
+            plans.append((alloc.job_id, new_placement))
+            # commit against the scratch free map so plans don't overlap
+            for h, c in held.items():
+                free[h] += c
+            for h, c in new_placement:
+                free[h] -= c
         return plans
 
     def apply_migration(self, alloc: Allocation,

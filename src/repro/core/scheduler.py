@@ -29,11 +29,16 @@ __all__ = ["Allocation", "ClusterState"]
 
 
 class ClusterState:
-    """Free-chip accounting for a cluster of identical hosts — a facade
-    over ``PlacementEngine`` keeping the original call signatures."""
+    """Free-chip accounting for a cluster of hosts — a facade over
+    ``PlacementEngine`` keeping the original call signatures.
+    ``capacities``/``speeds`` open the heterogeneous-fleet path (ragged
+    hosts, mixed generations) without changing any caller."""
 
-    def __init__(self, hosts: int, chips_per_host: int):
-        self.engine = PlacementEngine(hosts, chips_per_host)
+    def __init__(self, hosts: int, chips_per_host: int,
+                 capacities: Optional[Sequence[int]] = None,
+                 speeds: Optional[Sequence[float]] = None):
+        self.engine = PlacementEngine(hosts, chips_per_host,
+                                      capacities=capacities, speeds=speeds)
         self.hosts = hosts
         self.chips_per_host = chips_per_host
 
@@ -41,6 +46,14 @@ class ClusterState:
     @property
     def free(self):
         return self.engine.free
+
+    @property
+    def capacities(self):
+        return self.engine.capacities
+
+    @property
+    def speeds(self):
+        return self.engine.speeds
 
     @property
     def jobs_on_host(self):
@@ -56,13 +69,18 @@ class ClusterState:
     def idle_fraction(self) -> float:
         return self.engine.idle_fraction()
 
+    def idle_throughput(self) -> float:
+        return self.engine.idle_throughput()
+
     # ---- allocation ----------------------------------------------------------
     def alloc_granular(self, job_id: str, n: int,
-                       policy: Union[str, PlacementPolicy] = "binpack"
-                       ) -> Optional[Allocation]:
+                       policy: Union[str, PlacementPolicy] = "binpack",
+                       kind: Optional[str] = None) -> Optional[Allocation]:
         """Chip-granular gang allocation under a named placement policy
-        (binpack / spread / locality) or a ``PlacementPolicy`` instance."""
-        return self.engine.allocate(job_id, n, policy=policy)
+        (binpack / spread / locality) or a ``PlacementPolicy`` instance;
+        ``kind`` routes the job's per-kind beta into model-scoring
+        policies."""
+        return self.engine.allocate(job_id, n, policy=policy, kind=kind)
 
     def alloc_slices(self, job_id: str, n_chips: int,
                      slice_size: int) -> Optional[Allocation]:
@@ -75,9 +93,12 @@ class ClusterState:
         self.engine.release(alloc)
 
     # ---- migration (defragmentation at barrier points) ------------------------
-    def migration_plan(self, allocs: Sequence[Allocation]
+    def migration_plan(self, allocs: Sequence[Allocation],
+                       kinds: Optional[dict] = None,
+                       remaining: Optional[dict] = None
                        ) -> List[Tuple[str, List[Tuple[int, int]]]]:
-        return self.engine.migration_plan(allocs)
+        return self.engine.migration_plan(allocs, kinds=kinds,
+                                          remaining=remaining)
 
     def apply_migration(self, alloc: Allocation,
                         new_placement: List[Tuple[int, int]]) -> Allocation:

@@ -7,11 +7,16 @@ against fixed-slice container baselines.  That experiment is hardware-
 independent given a job-time model; we reproduce it with a model calibrated
 from the paper's own microbenchmarks:
 
-* cross-host penalty: T = (W/n) * (1 + beta * chi), with chi the
-  cross-host pair fraction of the gang placement
-  (``Allocation.cross_host_fraction``).  beta is calibrated from Fig 14:
+* job time: the shared ``core.placement.CostModel``
+  T = (W / sum_h n_h*s_h) * (1 + beta_kind * chi), with chi the cross-host
+  pair fraction of the gang placement
+  (``Allocation.cross_host_fraction``), per-host speed factors ``s_h``
+  (mixed host generations — ``hetero_speeds`` builds the half-the-fleet-
+  at-s=0.5 regime), and per-job-kind beta calibrated from Fig 14:
   compute-bound LAMMPS co-located vs 4+4-fragmented = 1.2x  -> beta = 0.4;
-  network-bound all-to-all = 7.5x -> beta = 13.0.
+  network-bound all-to-all = 7.5x -> beta = 13.0.  The same model scores
+  policy candidates, costs migration plans, and integrates job rates, so
+  placement and execution agree by construction.
 * runtime overhead: Faabric's shared-memory (OpenMP) jobs carry a 1.25x
   execution-time factor (paper §6.4: 20–30% WASM floating-point overhead).
 * migration: at barrier control points a fragmented gang may be
@@ -59,13 +64,20 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.control import Action
-from repro.core.placement import (Allocation, FixedSlicePolicy,
+from repro.core.placement import (Allocation, CostModel, FixedSlicePolicy,
                                   PlacementEngine, PlacementPolicy,
                                   PreemptPolicy, resolve_policy)
 
-BETA = {"mpi-compute": 0.4, "mpi-network": 13.0, "omp": 1.0}
+# Fig 14 calibration now lives on core.placement.CostModel (one model for
+# policies, simulator, and the live fabric); kept as a read-only copy for
+# callers that still read the table directly (mutating it has no effect —
+# recalibrate via CostModel(betas=...) instead).
+BETA = dict(CostModel.DEFAULT_BETAS)
 WASM_OVERHEAD_OMP = 1.25          # paper §6.4
 OVERCOMMIT_PENALTY = 1.5          # threads > vCPUs in one container (§6.2)
+# Default calibration of CostModel.migration_cost_s / preempt_cost_s;
+# the event loop charges whatever the engine's model carries, so a
+# custom model keeps the plan filter and the simulated charge in sync.
 MIGRATION_COST_S = 2.0            # snapshot transfer at a barrier point
 PREEMPT_COST_S = 2.0              # snapshot restore when a victim resumes
 SCHED_LATENCY_PER_HOST = 0.004    # centralised scheduler cost (Fig 11)
@@ -91,18 +103,23 @@ class RunningJob:
     last_update: float = 0.0
     eff_parallelism: int = 0
     finish_event: int = -1        # heap token (lazy deletion)
+    model: CostModel = dataclasses.field(default_factory=CostModel)
+    speeds: Optional[np.ndarray] = None      # engine's per-host factors
 
     def rate(self) -> float:
-        """Fraction of work per second under the current placement."""
+        """Fraction of work per second under the current placement —
+        the CostModel's T inverted: speed-weighted parallelism over
+        work·(1 + beta_kind·chi)·runtime overheads."""
         j = self.job
-        chi = self.alloc.cross_host_fraction()
-        overhead = 1.0 + BETA[j.kind] * chi
+        overhead = self.model.slowdown(self.alloc.placement, j.kind)
         runtime = WASM_OVERHEAD_OMP if (
             j.kind == "omp" and self.alloc.slice_size == 0) else 1.0
         if j.parallelism > self.alloc.n:     # overcommitted container
             runtime *= OVERCOMMIT_PENALTY
-        n = self.eff_parallelism
-        return n / (self.job.work * overhead * runtime)
+        eff = self.model.effective_parallelism(
+            self.alloc.placement, self.speeds,
+            active=self.eff_parallelism)
+        return eff / (self.job.work * overhead * runtime)
 
 
 @dataclasses.dataclass
@@ -200,12 +217,16 @@ def _assign_arrivals(jobs: List[Job], seed: int, arrival_rate: float,
 def mixed_trace(n_jobs: int, seed: int, chips_per_host: int = 8,
                 arrival_rate: float = 0.0,
                 priority_classes: Optional[Sequence[Tuple[int, float]]]
-                = None) -> List[Job]:
+                = None,
+                kinds: Sequence[str] = ("mpi-compute", "omp",
+                                        "mpi-network")) -> List[Job]:
     """Interleaved mpi-compute / mpi-network / omp trace — the fragmented
     multi-tenant mix used by the policy-sweep benchmarks.  Arrivals and
     priorities are drawn once over the merged trace, so ``arrival_rate``
-    is the aggregate rate (not per job kind)."""
-    kinds = ("mpi-compute", "omp", "mpi-network")
+    is the aggregate rate (not per job kind).  ``kinds`` reweights the
+    interleave (repeat a kind to double its share) — e.g. the
+    network-heavy beta-sensitivity line of the bench_makespan hetero
+    sweep."""
     per = -(-n_jobs // len(kinds))
     parts = [generate_trace(per, k, seed + i, chips_per_host)
              for i, k in enumerate(kinds)]
@@ -213,6 +234,20 @@ def mixed_trace(n_jobs: int, seed: int, chips_per_host: int = 8,
     for i, j in enumerate(jobs):           # unique ids after interleave
         j.job_id = f"mix-{i}-{j.job_id}"
     return _assign_arrivals(jobs, seed, arrival_rate, priority_classes)
+
+
+def hetero_speeds(hosts: int, slow_fraction: float = 0.5,
+                  slow: float = 0.5, fast: float = 1.0) -> np.ndarray:
+    """Mixed-generation host regime for the trace experiments: the first
+    ``slow_fraction`` of the fleet is an older host generation at
+    per-chip speed ``slow``, the rest run at ``fast`` — e.g. half the
+    hosts at s=0.5.  Feed the result to ``Simulator(speeds=...)``,
+    ``PlacementEngine(speeds=...)`` or ``Fabric(speeds=...)`` so
+    ``generate_trace``/``mixed_trace`` jobs exercise the heterogeneous
+    cost-model path end-to-end."""
+    n_slow = int(round(hosts * slow_fraction))
+    return np.asarray([slow] * n_slow + [fast] * (hosts - n_slow),
+                      dtype=np.float64)
 
 
 class Simulator:
@@ -224,7 +259,9 @@ class Simulator:
                  policy: Union[str, PlacementPolicy] = "binpack",
                  backfill: bool = False,
                  preempt: Union[bool, PreemptPolicy, None] = False,
-                 engine: Optional[PlacementEngine] = None):
+                 engine: Optional[PlacementEngine] = None,
+                 speeds: Optional[Sequence[float]] = None,
+                 cost_model: Optional[CostModel] = None):
         """mode: 'granular' (Faabric) or 'slices' (fixed baseline).
 
         ``policy`` selects the granular placement policy (binpack /
@@ -235,10 +272,14 @@ class Simulator:
         ``preempt`` enables priority preemption for a blocked
         head-of-line job (granular mode only): ``True`` for the default
         ``PreemptPolicy``, or a configured instance.
+        ``speeds`` / ``cost_model`` configure a heterogeneous fleet
+        (per-host speed factors, e.g. ``hetero_speeds``) and the shared
+        job-time model; both land on the built engine.
         ``engine`` adopts an externally-owned (fresh) ``PlacementEngine``
         instead of building one — used by ``core.fabric`` so live
         execution and prediction share one accounting code path; the
-        engine's hosts/capacities override ``hosts``/``chips_per_host``.
+        engine's hosts/capacities/speeds/cost-model override the
+        ``hosts``/``chips_per_host``/``speeds``/``cost_model`` args.
         """
         if mode == "slices":
             pol: PlacementPolicy = FixedSlicePolicy(slice_size)
@@ -248,12 +289,14 @@ class Simulator:
         # engine: an adopted (fabric-owned) engine keeps its own default
         self.policy = resolve_policy(pol)
         if engine is None:
-            engine = PlacementEngine(hosts, chips_per_host, policy=pol)
+            engine = PlacementEngine(hosts, chips_per_host, policy=pol,
+                                     speeds=speeds, cost_model=cost_model)
         else:
             assert engine.idle_chips() == engine.total_chips, \
                 "adopted engine must be idle at trace start"
             hosts = engine.hosts
         self.engine = engine
+        self.model = engine.cost_model
         self.mode = mode
         self.slice_size = slice_size
         self.migrate = migrate and mode == "granular"
@@ -288,17 +331,15 @@ class Simulator:
         if self.mode != "granular" and job.kind == "omp":
             # shared-memory baseline: exactly one container
             return self.engine.allocate(job.job_id, self.slice_size,
-                                        policy=self.policy)
+                                        policy=self.policy, kind=job.kind)
         return self.engine.allocate(job.job_id, job.parallelism,
-                                    policy=self.policy)
+                                    policy=self.policy, kind=job.kind)
 
     def _eff_parallelism(self, job: Job, alloc: Allocation) -> int:
-        if self.mode == "granular":
-            return job.parallelism
-        if job.kind == "omp":
-            # threads overcommit a single container (paper §6.2)
-            return min(job.parallelism, alloc.n)
-        return job.parallelism
+        # threads overcommit a single container (paper §6.2)
+        shared_memory = self.mode != "granular" and job.kind == "omp"
+        return self.model.active_workers(job.parallelism, alloc.n,
+                                         shared_memory)
 
     # ---- main loop ----------------------------------------------------------
     def run(self, jobs: List[Job]) -> TraceResult:
@@ -349,13 +390,14 @@ class Simulator:
             now += self.sched_latency          # centralised scheduler
             rj = RunningJob(job, alloc, start=now, last_update=now,
                             eff_parallelism=self._eff_parallelism(
-                                job, alloc))
+                                job, alloc),
+                            model=self.model, speeds=self.engine.speeds)
             resumed = job.job_id in suspended
             if resumed:
                 # checkpointed progress survives; the snapshot restore
                 # costs like a migration
                 rj.progress = max(0.0, suspended.pop(job.job_id)
-                                  - PREEMPT_COST_S * rj.rate())
+                                  - self.model.preempt_cost_s * rj.rate())
             running[job.job_id] = rj
             if job.job_id not in first_start:
                 first_start[job.job_id] = now
@@ -372,7 +414,7 @@ class Simulator:
             priorities = {jid: r.job.priority for jid, r in running.items()}
             plan = self.engine.preemption_plan(
                 job.parallelism, job.priority, priorities,
-                policy=self.policy, preempt=self.preempt)
+                policy=self.policy, preempt=self.preempt, kind=job.kind)
             if not plan:
                 return False
             nonlocal preemptions
@@ -439,16 +481,23 @@ class Simulator:
             actions.append(Action("finish", {"job": job_id, "t": now}))
             self._on_finish(rj)
             # barrier-point migration: consolidate fragmented gangs
-            # (only gangs with enough remaining work to pay the cost)
+            # (only gangs the cost model says can still pay the
+            # snapshot cost); plans are costed under each gang's kind
             if self.migrate and running:
                 candidates = [r.alloc for r in running.values()
-                              if r.progress <= 0.8]
-                for jid, new_pl in self.engine.migration_plan(candidates):
+                              if self.model.migration_worthwhile(
+                                  r.progress)]
+                kinds = {jid: r.job.kind for jid, r in running.items()}
+                remaining = {jid: max(0.0, 1.0 - r.progress) / r.rate()
+                             for jid, r in running.items()}
+                for jid, new_pl in self.engine.migration_plan(
+                        candidates, kinds=kinds, remaining=remaining):
                     r = running[jid]
                     progress_to(now)
                     r.alloc = self.engine.apply_migration(r.alloc, new_pl)
                     r.progress = max(
-                        0.0, r.progress - MIGRATION_COST_S * r.rate())
+                        0.0,
+                        r.progress - self.model.migration_cost_s * r.rate())
                     migrations += 1
                     actions.append(Action("migrate",
                                           {"job": jid, "t": now,
@@ -472,15 +521,17 @@ class Simulator:
 def run_baselines(jobs: List[Job], hosts: int, chips_per_host: int = 8,
                   migrate: bool = True,
                   policy: Union[str, PlacementPolicy] = "binpack",
-                  backfill: bool = False) -> Dict[str, TraceResult]:
+                  backfill: bool = False,
+                  speeds: Optional[Sequence[float]] = None
+                  ) -> Dict[str, TraceResult]:
     """Faabric vs the paper's fixed-slice baselines (1/2/4/8 ctr per VM)."""
     out = {}
     out["faabric"] = Simulator(hosts, chips_per_host, "granular",
                                migrate=migrate, policy=policy,
-                               backfill=backfill).run(jobs)
+                               backfill=backfill, speeds=speeds).run(jobs)
     for k in (1, 2, 4, 8):
         slice_size = chips_per_host // k
         out[f"{k}-ctr-per-vm"] = Simulator(
             hosts, chips_per_host, "slices", slice_size=slice_size,
-            backfill=backfill).run(jobs)
+            backfill=backfill, speeds=speeds).run(jobs)
     return out

@@ -14,7 +14,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import numpy as np

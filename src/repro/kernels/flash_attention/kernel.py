@@ -16,7 +16,6 @@ diagonal block applies an elementwise mask.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -21,14 +21,12 @@ the device count at first init.  Do not move it.
 """
 import argparse
 import json
-import re
 import subprocess
 import sys
 import time
 from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import SHAPES, ArchConfig, ShapeConfig, cell_applicable
 from repro.configs.registry import ARCH_IDS, get_config

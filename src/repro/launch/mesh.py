@@ -7,7 +7,7 @@ while smoke tests must keep seeing 1 device.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 from jax.sharding import Mesh
 

@@ -12,8 +12,6 @@ Variants per cell:
 import json
 import time
 
-import jax
-
 from repro.configs.base import SHAPES
 from repro.launch import dryrun as dr
 from repro.launch import hloanalysis

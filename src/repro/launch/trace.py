@@ -22,6 +22,7 @@ import jax
 from repro.configs.registry import reduced_config
 from repro.core import simulator as sim
 from repro.core.fabric import Fabric
+from repro.core.placement import derive_capacities
 from repro.data.pipeline import DataConfig
 from repro.optim.adamw import AdamWConfig
 from repro.runtime.gang_workloads import workload_factory
@@ -39,10 +40,19 @@ def main():
     ap.add_argument("--no-preempt", action="store_true")
     ap.add_argument("--train-steps", type=int, default=3)
     ap.add_argument("--serve-tokens", type=int, default=3)
+    ap.add_argument("--host-regime", default="uniform",
+                    choices=["uniform", "mixed-gen"],
+                    help="mixed-gen models half the hosts as an older "
+                         "generation at s=0.5 (CostModel speeds)")
     args = ap.parse_args()
 
+    speeds = None
+    if args.host_regime == "mixed-gen":
+        n_hosts = len(derive_capacities(len(jax.devices()),
+                                        args.chips_per_host))
+        speeds = sim.hetero_speeds(n_hosts)
     fabric = Fabric(chips_per_host=args.chips_per_host,
-                    policy=args.policy)
+                    policy=args.policy, speeds=speeds)
     n_chips = fabric.engine.total_chips
     # mixed train/serve trace sized to the local fabric, two priority
     # classes (9:1 high) — the §2.1 shared-cluster economics, live
@@ -69,6 +79,8 @@ def main():
     print(json.dumps({
         "devices": len(jax.devices()),
         "hosts": fabric.engine.hosts,
+        "host_speeds": (None if fabric.engine.speeds is None
+                        else list(fabric.engine.speeds)),
         "jobs": len(jobs),
         "predicted_order": predicted.finish_order,
         "live_order": live.finish_order,

@@ -18,8 +18,6 @@ import argparse
 import json
 import time
 
-import jax
-
 from repro.configs.registry import ARCH_IDS, get_config, reduced_config
 from repro.data.pipeline import DataConfig
 from repro.optim.adamw import AdamWConfig

@@ -14,8 +14,6 @@ selected on TPU via ``cfg.use_pallas_kernels``.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
-
 import jax
 import jax.numpy as jnp
 

@@ -8,15 +8,15 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.models import transformer as tf
-from repro.models.layers import (fused_unembed_xent, fused_unembed_xent_scan,
-                                 softmax_xent)
+from repro.models.layers import (fused_unembed_xent,
+                                 fused_unembed_xent_scan)
 from repro.optim import adamw
 
 # zamba2's shared attention block uses this sliding window for the

@@ -19,7 +19,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.models.layers import dense_init, matmul
+from repro.models.layers import dense_init
 
 # Tokens are routed within groups of this size, so the dispatch tensor is
 # (G, GROUP, E, C) with C ~ GROUP*top_k*cf/E — keeping it VMEM-friendly.

@@ -13,13 +13,13 @@ expression of the paper's locality principle).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ArchConfig, ShapeConfig
+from repro.configs.base import ArchConfig
 
 
 def dp_axes(mesh: Mesh) -> Tuple[str, ...]:

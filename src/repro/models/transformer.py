@@ -12,7 +12,6 @@ Block state (for decode) is likewise stacked per period-position.
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax

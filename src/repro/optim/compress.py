@@ -13,8 +13,6 @@ paper's (offset, bytes) diff list — plus the new error-feedback residual.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
-
 import jax
 import jax.numpy as jnp
 

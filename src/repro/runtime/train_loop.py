@@ -38,7 +38,7 @@ from repro.core import collectives as coll
 from repro.core import compat
 from repro.core import control as ctl
 from repro.core import elastic as elastic_mod
-from repro.core.fabric import Fabric, GangHandle, make_gang_mesh
+from repro.core.fabric import Fabric, GangHandle
 from repro.data import pipeline as dp
 from repro.models import model as model_mod
 from repro.optim import adamw
@@ -65,6 +65,10 @@ class RuntimeConfig:
     # free-chip-driven elastic policy, consulted at every control point;
     # None = only the explicit rescale_at schedule fires
     elastic: Optional[elastic_mod.ElasticPolicy] = None
+    # trace job kind of this gang (mpi-compute/mpi-network/omp); routes
+    # the per-kind beta of the shared CostModel into elastic grow probes
+    # so they place exactly like a trace placement would
+    job_kind: Optional[str] = None
 
 
 def make_dp_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
@@ -143,7 +147,7 @@ class FaabricTrainRuntime:
                             else self.fabric.devices)
         self.handle: GangHandle = self.fabric.bind(
             job_id, gang_devices, priority=priority, pods=rt.pods,
-            policy=rt.placement_policy)
+            policy=rt.placement_policy, kind=rt.job_kind)
         self.ckpt = CheckpointManager(
             rt.ckpt_dir, job_id=job_id,
             incremental_every=rt.incremental_ckpt_every)
@@ -208,7 +212,8 @@ class FaabricTrainRuntime:
             return min(self.rt.rescale_at[step],
                        world + self.fabric.engine.idle_chips())
         if self.rt.elastic is not None:
-            return self.rt.elastic.decide(world, self.fabric.engine)
+            return self.rt.elastic.decide(world, self.fabric.engine,
+                                          kind=self.rt.job_kind)
         return None
 
     def _recover(self, state, step):

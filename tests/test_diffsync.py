@@ -3,7 +3,6 @@ byte-wise diff protocol — Table 3 merge-op algebra and diff/apply
 invariants (paper §4)."""
 import jax
 import numpy as np
-import pytest
 
 import _hyp_compat as hc
 from repro.core import diffsync as D

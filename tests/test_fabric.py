@@ -72,6 +72,21 @@ def test_engine_ragged_capacities():
     assert eng.idle_chips() == 10
 
 
+def test_infer_host_speeds_uniform_pool_is_homogeneous():
+    from repro.core.fabric import infer_host_speeds
+
+    class Dev:
+        def __init__(self, kind):
+            self.device_kind = kind
+
+    # uniform pool (whatever the generation): no speeds, homogeneous path
+    assert infer_host_speeds([Dev("TPU v4")] * 6, 2) is None
+    # mixed generations: per-host means over the shared host map
+    devs = [Dev("TPU v4")] * 2 + [Dev("TPU v2")] * 2 + [Dev("TPU v4")]
+    speeds = infer_host_speeds(devs, 2)
+    assert speeds == [0.75, 0.25, 0.75]     # ragged last host included
+
+
 # ---------------------------------------------------------------------------
 # GranuleGroup: in-place re-address keeps queues + epoch (paper Fig 8)
 # ---------------------------------------------------------------------------
@@ -280,6 +295,59 @@ def test_shared_fabric_rescale_caps_and_serve_resume_fresh_loop():
             pass
         assert [r.out for r in rebuilt] == ref
         print("fresh-serve-resume-ok")
+    """))
+
+
+def test_hetero_fabric_run_trace_matches_prediction():
+    # mixed-generation fleet acceptance: a Fabric with per-host speeds
+    # (half the hosts at s=0.5) runs a real train/serve trace whose
+    # completion order matches predict_trace under the same
+    # heterogeneous capacities/speeds — and placements favour the fast
+    # generation for the compute-bound gang
+    print(run_sub("""
+        import numpy as np
+        from repro.configs.registry import reduced_config
+        from repro.data.pipeline import DataConfig
+        from repro.optim.adamw import AdamWConfig
+        from repro.core.fabric import Fabric
+        from repro.core.simulator import Job, hetero_speeds
+        from repro.runtime.gang_workloads import workload_factory
+
+        cfg = reduced_config("llama3.2-1b").with_(n_layers=1, vocab=128)
+        dcfg = DataConfig(vocab=128, seq_len=8, global_batch=8)
+        ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+
+        # 8 devices, 2 chips/host -> 4 hosts; hosts 0-1 old generation
+        speeds = hetero_speeds(4, slow_fraction=0.5, slow=0.5)
+        fab = Fabric(chips_per_host=2, policy="locality",
+                     speeds=list(speeds))
+        assert fab.engine.heterogeneous
+        jobs = [
+            Job("train-net", "mpi-network", 4, 120.0, arrival=0.0,
+                priority=0, workload="train"),
+            Job("train-cmp", "mpi-compute", 4, 120.0, arrival=0.0,
+                priority=0, workload="train"),
+            Job("serve-0", "omp", 2, 60.0, arrival=1.0, priority=1,
+                workload="serve"),
+        ]
+        pred = fab.predict_trace(jobs, preempt=True)
+        starts = {a.payload["job"]: a.payload["placement"]
+                  for a in pred.actions if a.kind == "start"}
+        # first-placed network gang takes the fast hosts whole; the
+        # compute gang then splits across the slow generation
+        fast = {h for h, s in enumerate(speeds) if s == 1.0}
+        assert {h for h, _ in starts["train-net"]} <= fast, starts
+        ex = fab.run_trace(jobs, workload_factory(cfg, ocfg, dcfg,
+                                                  train_steps=3,
+                                                  serve_tokens=3),
+                           preempt=True)
+        assert ex.result.finish_order == pred.finish_order, (
+            ex.result.finish_order, pred.finish_order)
+        live_starts = {a.payload["job"]: a.payload["placement"]
+                       for a in ex.result.actions if a.kind == "start"}
+        assert live_starts == starts      # placement-for-placement
+        assert fab.idle_chips() == fab.engine.total_chips
+        print("hetero-trace-ok", ex.result.finish_order)
     """))
 
 

@@ -1,14 +1,19 @@
 """PlacementEngine invariants: migration-plan edge cases, preemption-safe
-reservations, policy behaviour, and the multi-tenant simulator semantics
-(arrival times, priority classes, backfill) built on top of it."""
+reservations, policy behaviour, the shared CostModel (per-host speeds +
+per-job-kind beta), and the multi-tenant simulator semantics (arrival
+times, priority classes, backfill) built on top of it."""
+import hashlib
+
 import numpy as np
 import pytest
 
 from repro.core import simulator as S
 from repro.core.elastic import ElasticPolicy
-from repro.core.placement import (Allocation, BinpackPolicy,
+from repro.core.placement import (BinpackPolicy, CostModel,
                                   FixedSlicePolicy, LocalityScoredPolicy,
-                                  PlacementEngine, resolve_policy)
+                                  PlacementEngine, derive_capacities,
+                                  placement_cross_host_fraction,
+                                  resolve_policy)
 
 
 # ---------------------------------------------------------------------------
@@ -145,6 +150,275 @@ def test_locality_beats_binpack_mean_chi_on_fragmented_trace():
 
 
 # ---------------------------------------------------------------------------
+# CostModel: the one job-time model every layer consumes
+# ---------------------------------------------------------------------------
+def test_cost_model_equation_and_per_kind_beta():
+    m = CostModel()
+    pl = [(0, 4), (1, 4)]
+    chi = placement_cross_host_fraction(pl)
+    assert chi == pytest.approx(0.5)
+    assert m.beta("mpi-network") == 13.0 and m.beta("mpi-compute") == 0.4
+    assert m.beta(None) == m.beta("unknown-kind") == 0.4
+    assert m.slowdown(pl, "omp") == pytest.approx(1.0 + 1.0 * chi)
+    # homogeneous: T = (W/n)(1 + beta*chi)
+    assert m.predicted_time(80.0, pl, "mpi-compute") == pytest.approx(
+        80.0 / 8 * (1 + 0.4 * chi))
+    # mixed generations: the scaling term is speed-weighted sum n_h*s_h
+    speeds = np.array([0.5, 1.0])
+    assert m.effective_parallelism(pl, speeds) == pytest.approx(6.0)
+    assert m.predicted_time(60.0, pl, "omp", speeds) == pytest.approx(
+        60.0 / 6 * (1 + 1.0 * chi))
+    # active-worker cap (OMP overcommit) scales the effective sum
+    assert m.effective_parallelism(pl, speeds, active=4) \
+        == pytest.approx(3.0)
+    assert m.active_workers(16, 8, shared_memory=True) == 8
+    assert m.active_workers(16, 8, shared_memory=False) == 16
+    assert m.migration_worthwhile(0.8) and not m.migration_worthwhile(0.81)
+
+
+def test_derive_capacities_is_the_single_host_map():
+    assert derive_capacities(10, 4) == [4, 4, 2]
+    assert derive_capacities(8, 4) == [4, 4]
+    assert derive_capacities(1, 4) == [1]
+    eng = PlacementEngine.for_chips(10, 4)
+    assert eng.hosts == 3 and list(eng.capacities) == [4, 4, 2]
+    assert eng.total_chips == 10
+    a = eng.allocate("j", 10)
+    assert a is not None and a.n == 10
+    eng.release(a)
+
+
+def test_cluster_view_ragged_capacities_and_locality_exact_fit():
+    eng = PlacementEngine(3, 4, capacities=[4, 4, 2])
+    view = eng.view()
+    assert list(view.capacities) == [4, 4, 2]
+    assert not view.heterogeneous
+    # the ragged 2-chip host is the best fit for a 2-gang: binpack's
+    # most-free-first strands chips on a 4-host instead
+    assert LocalityScoredPolicy().place(view, 2) == [(2, 2)]
+    assert BinpackPolicy().place(view, 2)[0][0] != 2
+    # spanning all ragged hosts still conserves chips
+    a = eng.allocate("j", 10)
+    assert a.n == 10 and eng.idle_chips() == 0
+    eng.release(a)
+    assert eng.idle_chips() == 10
+
+
+def test_locality_stranded_chip_tie_breaking():
+    # free = [4, 4, 3], n = 6: plain greedy takes a 4-host + 2 from the
+    # other 4-host (chunks 4+2, strands 2); exact-fill finishes the
+    # remainder on the best-fit 3-host (same chunks -> equal chi, but
+    # strands only 1).  The stranded tie-break must pick the latter.
+    eng = PlacementEngine(3, 4, capacities=[4, 4, 3])
+    pl = LocalityScoredPolicy().place(eng.view(), 6)
+    assert pl == [(0, 4), (2, 2)]
+
+
+def test_uniform_speeds_keep_the_homogeneous_path():
+    # all hosts at the same (non-1) speed rank placements exactly like
+    # the homogeneous case: `heterogeneous` stays False
+    eng = PlacementEngine(2, 8, speeds=[0.5, 0.5])
+    assert not eng.heterogeneous and not eng.view().heterogeneous
+    assert eng.idle_throughput() == pytest.approx(8.0)
+    het = PlacementEngine(2, 8, speeds=[0.5, 1.0])
+    assert het.heterogeneous and het.view().heterogeneous
+    assert het.idle_throughput() == pytest.approx(12.0)
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous fleets (per-host speeds through the CostModel)
+# ---------------------------------------------------------------------------
+def test_hetero_per_kind_beta_drives_locality_placement():
+    # one big slow-generation host vs two small fast hosts
+    eng = PlacementEngine(3, 8, capacities=[8, 4, 4],
+                          speeds=[0.5, 1.0, 1.0])
+    pol = LocalityScoredPolicy()
+    # network-bound (beta 13): fragmenting costs 7.5x, so co-location on
+    # the slow host wins: T = 1/(8*0.5) = 0.25 < (1+13*0.5)/8 = 0.94
+    assert pol.place(eng.view(), 8, kind="mpi-network") == [(0, 8)]
+    # compute-bound (beta 0.4): the fast split wins:
+    # (1+0.4*0.5)/8 = 0.15 < 0.25
+    assert pol.place(eng.view(), 8, kind="mpi-compute") == [(1, 4), (2, 4)]
+
+
+def test_hetero_binpack_prefers_effective_throughput():
+    eng = PlacementEngine(2, 8, capacities=[8, 6], speeds=[0.5, 1.0])
+    # homogeneous binpack would take the most-free host 0; with speeds
+    # the effective free throughput is 4.0 vs 6.0 -> host 1 first
+    assert BinpackPolicy().place(eng.view(), 6) == [(1, 6)]
+
+
+def test_hetero_migration_moves_gang_to_faster_host():
+    eng = PlacementEngine(2, 4, speeds=[0.5, 1.0])
+    blocker = eng.allocate("b", 4)          # lands on the fast host
+    assert blocker.placement == [(1, 4)]
+    gang = eng.allocate("g", 4)             # only the slow host is left
+    assert gang.placement == [(0, 4)]
+    assert eng.migration_plan([gang]) == []  # fast host still occupied
+    eng.release(blocker)
+    # a single-fragment gang still migrates when predicted T drops 2x
+    plans = eng.migration_plan([gang], kinds={"g": "mpi-compute"})
+    assert plans == [("g", [(1, 4)])]
+    new = eng.apply_migration(gang, plans[0][1])
+    # and once on the fast host there is nothing better: no churn
+    assert eng.migration_plan([new], kinds={"g": "mpi-compute"}) == []
+
+
+def test_custom_cost_model_reaches_resolved_policies():
+    # a by-name policy must score with the ENGINE's model, not the
+    # shared POLICIES singleton's default: with beta("mpi-network")
+    # dropped to 0.5 the fast split beats slow co-location
+    model = CostModel(betas={"mpi-compute": 0.4, "mpi-network": 0.5,
+                             "omp": 1.0})
+    eng = PlacementEngine(3, 8, capacities=[8, 4, 4],
+                          speeds=[0.5, 1.0, 1.0], policy="locality",
+                          cost_model=model)
+    a = eng.allocate("j", 8, kind="mpi-network")
+    assert a.placement == [(1, 4), (2, 4)]   # (1+0.5*0.5)/8 < 1/4
+    # the shared singleton itself is never mutated
+    from repro.core.placement import POLICIES
+    assert POLICIES["locality"].cost_model.beta("mpi-network") == 13.0
+
+
+def test_explicit_policy_instance_keeps_its_own_model():
+    # with_model must NOT override an explicitly-configured policy:
+    # under its softened beta 0.5 the fast split wins for a
+    # network-bound job, even though the engine's default model
+    # (beta 13) would co-locate on the slow host
+    eng = PlacementEngine(3, 8, capacities=[8, 4, 4],
+                          speeds=[0.5, 1.0, 1.0])
+    soft = LocalityScoredPolicy(cost_model=CostModel(
+        betas={"mpi-compute": 0.4, "mpi-network": 0.5, "omp": 1.0}))
+    a = eng.allocate("j", 8, policy=soft, kind="mpi-network")
+    assert a.placement == [(1, 4), (2, 4)]
+    eng.release(a)
+    assert eng.allocate("j2", 8, policy="locality",
+                        kind="mpi-network").placement == [(0, 8)]
+
+
+def test_hetero_migration_is_cost_aware_with_remaining_work():
+    def setup():
+        eng = PlacementEngine(2, 4, speeds=[0.8, 1.0])
+        blocker = eng.allocate("b", 4)          # fast host
+        gang = eng.allocate("g", 4)             # slow host
+        assert gang.placement == [(0, 4)]
+        eng.release(blocker)
+        return eng, gang
+
+    # moving 0.8 -> 1.0 saves 20% of the remaining time; with only 5s
+    # left that is 1s < migration_cost_s = 2s -> not worth the snapshot
+    eng, gang = setup()
+    assert eng.migration_plan([gang], kinds={"g": "mpi-compute"},
+                              remaining={"g": 5.0}) == []
+    # with 100s left the saving is 20s -> migrate
+    eng, gang = setup()
+    assert eng.migration_plan([gang], kinds={"g": "mpi-compute"},
+                              remaining={"g": 100.0}) \
+        == [("g", [(1, 4)])]
+    # no remaining info (live barrier migration): strict improvement
+    eng, gang = setup()
+    assert eng.migration_plan([gang], kinds={"g": "mpi-compute"}) \
+        == [("g", [(1, 4)])]
+
+
+def test_simulator_plumbs_kind_beta_and_speeds_into_rate():
+    speeds = [0.5, 1.0, 1.0]
+
+    def one(kind):
+        eng = PlacementEngine(3, 8, capacities=[8, 4, 4], speeds=speeds,
+                              policy="locality")
+        r = S.Simulator(3, 8, "granular", migrate=False, policy="locality",
+                        engine=eng).run([S.Job("j", kind, 8, 80.0)])
+        start = next(a for a in r.actions if a.kind == "start")
+        return start.payload["placement"], r.makespan
+
+    pl_net, mk_net = one("mpi-network")
+    pl_cmp, mk_cmp = one("mpi-compute")
+    sched = S.SCHED_LATENCY_PER_HOST * 3
+    # placement AND execution rate come from the same model:
+    # network co-located on the slow host: T = 80/(8*0.5) = 20
+    assert pl_net == [(0, 8)]
+    assert mk_net == pytest.approx(20.0 + sched)
+    # compute split over the fast hosts: T = 80*(1+0.4*0.5)/8 = 12
+    assert pl_cmp == [(1, 4), (2, 4)]
+    assert mk_cmp == pytest.approx(12.0 + sched)
+
+
+def test_hetero_speeds_regime_and_locality_beats_binpack_makespan():
+    """Acceptance: on a mixed-generation fleet (half the hosts at s=0.5)
+    the CostModel-scored locality policy beats binpack on mean trace
+    makespan (the bench_makespan hetero sweep, abbreviated)."""
+    speeds = S.hetero_speeds(16, slow_fraction=0.5, slow=0.5)
+    assert list(speeds) == [0.5] * 8 + [1.0] * 8
+    mean = {}
+    for pol in ("binpack", "locality"):
+        mean[pol] = float(np.mean(
+            [S.Simulator(16, 8, "granular", migrate=True, policy=pol,
+                         speeds=speeds).run(
+                             S.mixed_trace(100, seed=s)).makespan
+             for s in range(5)]))
+    assert mean["locality"] < mean["binpack"]
+
+
+def test_preemption_plan_fit_probe_sees_speeds_and_kind():
+    # free after eviction candidates: the fit probe must run under the
+    # hetero view — a network-bound arrival that only fits fragmented
+    # across fast hosts still places (plan exists), and the planned
+    # placement matches what the engine then allocates
+    eng = PlacementEngine(3, 8, capacities=[8, 4, 4],
+                          speeds=[0.5, 1.0, 1.0], policy="locality")
+    eng.allocate("low", 8, kind="mpi-network")      # takes the slow host
+    assert eng.allocations["low"].placement == [(0, 8)]
+    plan = eng.preemption_plan(8, 5, {"low": 0}, kind="mpi-network")
+    assert plan == []        # already fits: the two fast hosts suffice
+    eng.allocate("low2", 8, kind="mpi-compute")     # fast hosts now busy
+    plan = eng.preemption_plan(8, 5, {"low": 0, "low2": 0},
+                               kind="mpi-network")
+    assert plan is not None and len(plan) >= 1
+
+
+# ---------------------------------------------------------------------------
+# homogeneous regression: the CostModel refactor is bit-identical
+# ---------------------------------------------------------------------------
+# Pinned from the pre-CostModel simulator (PR 2 tree) on the same trace:
+# mixed_trace(60, seed=7) on 16 hosts x 8 chips, and an arrivals/
+# priorities/preempt/backfill regime.  Exact float equality on makespan
+# and mean chi, exact migration/preemption counts, exact finish order.
+_HOMOG_PINS = {
+    "binpack": (583.95718216517, 52, "f19fe3ca367a9b08",
+                0.4864879739201528),
+    "spread": (613.1910155134375, 93, "14b0b732a16008b9",
+               0.7543071843621572),
+    "locality": (581.4950504398289, 51, "bce3b29d146c990d",
+                 0.4477878792922707),
+}
+
+
+def _order_sha(result):
+    return hashlib.sha256(
+        ",".join(result.finish_order).encode()).hexdigest()[:16]
+
+
+def test_homogeneous_fleet_bit_identical_to_pre_costmodel_refactor():
+    for pol, (mk, migs, sha, chi) in _HOMOG_PINS.items():
+        r = S.Simulator(16, 8, "granular", policy=pol).run(
+            S.mixed_trace(60, seed=7))
+        assert r.makespan == mk, pol
+        assert r.migrations == migs and _order_sha(r) == sha
+        assert r.mean_cross_host_fraction() == chi
+
+
+def test_homogeneous_arrival_preempt_regime_bit_identical():
+    r = S.Simulator(16, 8, "granular", policy="locality", preempt=True,
+                    backfill=True).run(
+        S.mixed_trace(60, seed=7, arrival_rate=0.3,
+                      priority_classes=[(0, 0.8), (5, 0.2)]))
+    assert r.makespan == 626.7768962475312
+    assert r.migrations == 66 and r.preemptions == 8
+    assert _order_sha(r) == "b53bba2f0bd22744"
+
+
+# ---------------------------------------------------------------------------
 # multi-tenant simulator semantics
 # ---------------------------------------------------------------------------
 def test_arrival_times_are_respected():
@@ -229,3 +503,13 @@ def test_locality_policy_usable_for_elastic_engine():
     a = eng.allocate("gang", 8)
     assert a.fragmentation() == 1
     assert ElasticPolicy(max_world=16).decide(8, eng) == 16
+
+
+def test_elastic_decide_passes_kind_to_the_grow_probe():
+    # the probe reserves under the tenant's kind: on a hetero fleet the
+    # same budget still resolves (placement succeeds either way) and the
+    # kind keyword is accepted end-to-end
+    eng = PlacementEngine(2, 8, speeds=[0.5, 1.0], policy="locality")
+    assert ElasticPolicy(max_world=16).decide(
+        2, eng, kind="mpi-network") == 16
+    assert eng.idle_chips() == 16            # probe reservation cancelled

@@ -1,6 +1,5 @@
 """Substrate tests: data pipeline determinism, optimizer, compression,
 snapshots, checkpoint manager (full + incremental), granule groups."""
-import os
 
 import jax
 import jax.numpy as jnp
