@@ -11,6 +11,9 @@ check:
 quick:
 	PYTHONPATH=src $(PY) -m pytest -q -k "(placement or scheduler or simulator or fabric) and not run_trace and not gangs and not resume and not shared"
 
-# benchmark smoke (the CI bench step)
+# benchmark smoke (the CI bench step): every benchmark at tiny sizes,
+# artifacts to results/SMOKE_*.json, then assert every BENCH_/SMOKE_
+# artifact parses and carries non-empty metrics
 bench-smoke:
-	PYTHONPATH=src:. $(PY) benchmarks/run.py --only bench_makespan
+	PYTHONPATH=src:. $(PY) benchmarks/run.py --tiny
+	$(PY) benchmarks/check_results.py

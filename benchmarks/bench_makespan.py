@@ -16,11 +16,15 @@ import numpy as np
 from repro.core import simulator as S
 
 
-def run(report):
+def run(report, tiny=False):
+    njobs = 24 if tiny else 100
+    hosts_fig10 = 8 if tiny else 32
+    sweep_hosts = 8 if tiny else 16
+    hetero_seeds = range(2) if tiny else range(5)
     for kind, paper_note in (("mpi-compute", "Fig10a mpi"),
                              ("omp", "Fig10b omp")):
-        jobs = S.generate_trace(100, kind, seed=0)
-        res = S.run_baselines(jobs, hosts=32)
+        jobs = S.generate_trace(njobs, kind, seed=0)
+        res = S.run_baselines(jobs, hosts=hosts_fig10)
         fa = res["faabric"].makespan
         for name, r in res.items():
             report(f"makespan/{kind}/{name}", round(r.makespan, 1), "s",
@@ -40,9 +44,9 @@ def run(report):
                paper_note)
 
     # ---- placement-policy sweep on a fragmented mixed trace ----------------
-    jobs = S.mixed_trace(100, seed=7)
+    jobs = S.mixed_trace(njobs, seed=7)
     for policy in ("binpack", "spread", "locality"):
-        r = S.Simulator(16, 8, "granular", migrate=False,
+        r = S.Simulator(sweep_hosts, 8, "granular", migrate=False,
                         policy=policy).run(jobs)
         report(f"policy/{policy}/makespan", round(r.makespan, 1), "s",
                "policy sweep, mixed 100-job trace")
@@ -52,11 +56,12 @@ def run(report):
 
     # ---- arrival regimes: Poisson load, priorities, backfill ---------------
     for rate, regime in ((0.5, "poisson-heavy"), (0.2, "poisson-light")):
-        jobs = S.generate_trace(100, "mpi-compute", seed=3,
+        jobs = S.generate_trace(njobs, "mpi-compute", seed=3,
                                 arrival_rate=rate,
                                 priority_classes=[(0, 0.8), (5, 0.2)])
         for backfill in (False, True):
-            r = S.Simulator(16, 8, "granular", backfill=backfill).run(jobs)
+            r = S.Simulator(sweep_hosts, 8, "granular",
+                            backfill=backfill).run(jobs)
             tag = "backfill" if backfill else "fifo"
             report(f"arrivals/{regime}/{tag}/makespan",
                    round(r.makespan, 1), "s", "multi-tenant arrivals")
@@ -69,12 +74,12 @@ def run(report):
     # through the shared CostModel T = (W / sum n_h*s_h)(1 + beta_kind*chi),
     # so locality trades cross-host fragmentation against host speed per
     # job kind.  Makespans are averaged over 5 trace seeds.
-    speeds = S.hetero_speeds(16, slow_fraction=0.5, slow=0.5)
-    hetero_seeds = range(5)
+    speeds = S.hetero_speeds(sweep_hosts, slow_fraction=0.5, slow=0.5)
     means = {}
     for policy in ("binpack", "spread", "locality"):
-        runs = [S.Simulator(16, 8, "granular", migrate=True, policy=policy,
-                            speeds=speeds).run(S.mixed_trace(100, seed=s))
+        runs = [S.Simulator(sweep_hosts, 8, "granular", migrate=True,
+                            policy=policy, speeds=speeds).run(
+                                S.mixed_trace(njobs, seed=s))
                 for s in hetero_seeds]
         means[policy] = float(np.mean([r.makespan for r in runs]))
         report(f"hetero/{policy}/mean_makespan", round(means[policy], 1),
@@ -92,9 +97,9 @@ def run(report):
     # dominate, so co-location pressure rises fleet-wide)
     net_heavy = ("mpi-network", "mpi-compute", "mpi-network", "omp")
     for policy in ("binpack", "locality"):
-        runs = [S.Simulator(16, 8, "granular", migrate=True, policy=policy,
-                            speeds=speeds).run(
-                    S.mixed_trace(100, seed=s, kinds=net_heavy))
+        runs = [S.Simulator(sweep_hosts, 8, "granular", migrate=True,
+                            policy=policy, speeds=speeds).run(
+                    S.mixed_trace(njobs, seed=s, kinds=net_heavy))
                 for s in hetero_seeds]
         report(f"hetero_net_heavy/{policy}/mean_makespan",
                round(float(np.mean([r.makespan for r in runs])), 1), "s",
@@ -102,12 +107,13 @@ def run(report):
 
     # ---- priority preemption: high-priority latency vs churn ---------------
     def trace():
-        return S.generate_trace(100, "mpi-compute", seed=11,
+        return S.generate_trace(njobs, "mpi-compute", seed=11,
                                 arrival_rate=0.4,
                                 priority_classes=[(0, 0.85), (5, 0.15)])
 
     for preempt in (False, True):
-        r = S.Simulator(16, 8, "granular", preempt=preempt).run(trace())
+        r = S.Simulator(sweep_hosts, 8, "granular",
+                        preempt=preempt).run(trace())
         hi = [j for j in trace() if j.priority > 0]
         ms = r.makespans(hi)
         tag = "preempt" if preempt else "no-preempt"
@@ -118,3 +124,25 @@ def run(report):
                "priority classes")
         report(f"preemption/{tag}/evictions", r.preemptions, "count",
                "checkpoint + requeue + resume")
+
+    # ---- placement-engine micro-benchmark: decisions/sec ------------------
+    # before = the pre-PR loop implementation (reference_loops), after =
+    # the vectorized hot path with cached summaries; full sweep lives in
+    # bench_scheduler_scale
+    from benchmarks import bench_scheduler_scale as BS
+    from repro.core import placement as P
+    micro_hosts = 32 if tiny else 128
+    k_dec = 200 if tiny else 1500
+    eng = P.PlacementEngine(micro_hosts, 8)
+    BS._saturate(eng)
+    with P.reference_loops():
+        before = BS._decision_rate(eng, k_dec)
+    eng = P.PlacementEngine(micro_hosts, 8)
+    BS._saturate(eng)
+    after = BS._decision_rate(eng, k_dec)
+    report(f"engine_decisions_per_sec/{micro_hosts}h/before",
+           round(before, 0), "dec/s", "pre-PR loop hot path")
+    report(f"engine_decisions_per_sec/{micro_hosts}h/after",
+           round(after, 0), "dec/s", "vectorized + cached summaries")
+    report(f"engine_decisions_per_sec/{micro_hosts}h/speedup",
+           round(after / before, 2), "x", "placement hot path")

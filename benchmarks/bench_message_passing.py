@@ -30,15 +30,16 @@ from repro.core.compat import make_mesh, shard_map
 
 mesh = make_mesh((2, 4), ("pod", "data"))
 out = {}
+REPS = __REPS__
 
-def timeit(f, *args, reps=20):
+def timeit(f, *args, reps=REPS):
     r = jax.block_until_ready(f(*args))
     t0 = time.perf_counter()
     for _ in range(reps):
         r = jax.block_until_ready(f(*args))
     return (time.perf_counter() - t0) / reps
 
-n = 1 << 20
+n = 1 << __LOG_N__
 vec = jnp.arange(8 * n, dtype=jnp.float32).reshape(8, n)
 
 # --- p2p ring (collective-permute) ---
@@ -97,11 +98,14 @@ print(json.dumps(out))
 """
 
 
-def run(report):
+def run(report, tiny=False):
     env = dict(os.environ)
     env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     env["PYTHONPATH"] = SRC
-    res = subprocess.run([sys.executable, "-c", textwrap.dedent(_PROG)],
+    prog = textwrap.dedent(_PROG) \
+        .replace("__REPS__", "2" if tiny else "20") \
+        .replace("__LOG_N__", "14" if tiny else "20")
+    res = subprocess.run([sys.executable, "-c", prog],
                          capture_output=True, text=True, env=env,
                          timeout=1200)
     assert res.returncode == 0, res.stderr[-3000:]

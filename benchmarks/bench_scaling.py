@@ -11,8 +11,10 @@ import numpy as np
 from repro.core import simulator as S
 
 
-def run(report):
-    for hosts, njobs in ((16, 50), (32, 100), (64, 200), (128, 400)):
+def run(report, tiny=False):
+    scales = ((8, 16), (16, 32)) if tiny \
+        else ((16, 50), (32, 100), (64, 200), (128, 400))
+    for hosts, njobs in scales:
         jobs = S.generate_trace(njobs, "mpi-compute", seed=hosts)
         res = S.run_baselines(jobs, hosts=hosts)
         fa = res["faabric"]

@@ -1,0 +1,135 @@
+"""Scheduler scalability at 32-256 hosts (Fig 11 + the decentralised fix).
+
+Two measurements:
+
+* **decisions/sec** — raw placement-decision throughput of the engine
+  (reserve/cancel cycles) on a heavily fragmented ~2/3-utilized fleet
+  whose gang sizes span the idle capacity, so placements cross many
+  hosts — the regime where the pre-PR pure-Python fill loops are
+  O(gang x hosts).  The ``reference_loops()`` baseline runs the exact
+  pre-PR implementation (loop fills, per-call policy re-resolution,
+  copied views, per-call summary recomputation); the vectorized engine
+  and the sharded engine run the new hot path.  Also reported: trace
+  *replay* throughput (decisions/sec of a full Simulator run, including
+  migration planning and rate integration) for the same A/B.
+
+* **simulated makespan, centralised vs sharded** — the same mixed trace
+  scheduled by the centralised engine (per-decision latency
+  ``SCHED_LATENCY_PER_HOST * hosts``) and by ``sched="sharded"``
+  (``SCHED_LATENCY_PER_HOST * hosts_per_shard`` + forwarding hops).
+  In the Fig 11 regime (128+ hosts) the centralised scan cost dominates
+  queue-era scheduling and sharding wins the makespan.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import placement as P
+from repro.core import simulator as S
+
+SHARD_HOSTS = 16
+POLICIES = ("binpack", "spread", "locality")
+KINDS = ("mpi-compute", "omp", "mpi-network")
+
+
+def _saturate(engine, seed=0):
+    """Drive the fleet to a fragmented steady state: fill with small
+    gangs, then release a third at random — free chips end up scattered
+    a few per host across the whole fleet."""
+    rng = np.random.default_rng(seed)
+    live, i = [], 0
+    while True:
+        a = engine.allocate(f"warm{i}", int(rng.integers(6, 9)))
+        if a is None:
+            break
+        live.append(a)
+        i += 1
+    rng.shuffle(live)
+    for a in live[: len(live) // 3]:
+        engine.release(a)
+
+
+def _decision_rate(engine, decisions, seed=1):
+    """Placement decisions/sec: reserve+cancel cycles against the
+    fragmented fleet, gang sizes spanning half to most of the idle
+    capacity (placements cross many hosts), policies round-robin."""
+    rng = np.random.default_rng(seed)
+    idle = engine.idle_chips()
+    sizes = rng.integers(max(2, idle // 2), max(3, (9 * idle) // 10),
+                         2048)
+    t0 = time.perf_counter()
+    for j in range(decisions):
+        res = engine.reserve(int(sizes[j % 2048]),
+                             policy=POLICIES[j % 3], kind=KINDS[j % 3])
+        if res is not None:
+            engine.cancel(res)
+    return decisions / (time.perf_counter() - t0)
+
+
+def _replay(hosts, njobs, sched="central"):
+    """Full trace replay: wall-clock scheduling throughput and the
+    simulated makespan under the engine's latency model."""
+    jobs = S.mixed_trace(njobs, seed=hosts, arrival_rate=njobs / 120.0)
+    sim = S.Simulator(hosts, 8, "granular", migrate=True,
+                      policy="locality", backfill=True, sched=sched,
+                      shard_hosts=SHARD_HOSTS)
+    t0 = time.perf_counter()
+    r = sim.run(jobs)
+    wall = time.perf_counter() - t0
+    decisions = sum(1 for a in r.actions
+                    if a.kind in ("start", "resume", "migrate"))
+    return decisions / wall, r.makespan
+
+
+def run(report, tiny=False):
+    scales = (32, 64) if tiny else (32, 64, 128, 256)
+    k_dec = 200 if tiny else 2500
+
+    # ---- decision throughput: pre-PR loops vs vectorized vs sharded ----
+    for hosts in scales:
+        eng = P.PlacementEngine(hosts, 8)
+        _saturate(eng)
+        with P.reference_loops():
+            loop = _decision_rate(eng, k_dec)
+        eng = P.PlacementEngine(hosts, 8)
+        _saturate(eng)
+        vec = _decision_rate(eng, k_dec)
+        eng = P.ShardedPlacementEngine(hosts, 8,
+                                       hosts_per_shard=SHARD_HOSTS)
+        _saturate(eng)
+        shard = _decision_rate(eng, k_dec)
+        report(f"decisions_per_sec/{hosts}h/loop", round(loop, 0),
+               "dec/s", "pre-PR loop implementation")
+        report(f"decisions_per_sec/{hosts}h/vectorized", round(vec, 0),
+               "dec/s", "numpy hot path")
+        report(f"decisions_per_sec/{hosts}h/sharded", round(shard, 0),
+               "dec/s", f"{SHARD_HOSTS}-host shards")
+        report(f"decisions_per_sec/{hosts}h/vectorized_vs_loop",
+               round(vec / loop, 2), "x",
+               "acceptance: >=5x at 128 hosts")
+
+    # ---- end-to-end: replay throughput + centralised vs sharded ----
+    for hosts in scales:
+        njobs = hosts if tiny else hosts * 3
+        with P.reference_loops():
+            loop_dps, _ = _replay(hosts, njobs)
+        vec_dps, mk_central = _replay(hosts, njobs)
+        shard_dps, mk_sharded = _replay(hosts, njobs, sched="sharded")
+        report(f"replay/{hosts}h/decisions_per_sec_loop",
+               round(loop_dps, 0), "dec/s", "pre-PR replay throughput")
+        report(f"replay/{hosts}h/decisions_per_sec_vectorized",
+               round(vec_dps, 0), "dec/s", "vectorized replay")
+        report(f"replay/{hosts}h/speedup",
+               round(vec_dps / loop_dps, 2), "x", "replay wall-clock")
+        report(f"makespan/{hosts}h/central", round(mk_central, 1), "s",
+               "SCHED_LATENCY_PER_HOST * hosts per decision")
+        report(f"makespan/{hosts}h/sharded", round(mk_sharded, 1), "s",
+               f"{SHARD_HOSTS}-host shards + forwarding hops")
+        report(f"makespan/{hosts}h/sharded_win_pct",
+               round((mk_central - mk_sharded) / mk_central * 100, 2),
+               "% lower makespan",
+               "acceptance: sharded beats central at 128/256 (Fig 11)")
+        report(f"replay/{hosts}h/decisions_per_sec_sharded",
+               round(shard_dps, 0), "dec/s", "sharded replay")

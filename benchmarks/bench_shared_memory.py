@@ -29,9 +29,9 @@ def _timeit(fn, reps=3):
     return min(ts)
 
 
-def run(report):
+def run(report, tiny=False):
     rng = np.random.default_rng(0)
-    mb = 64
+    mb = 4 if tiny else 64
     base = rng.normal(size=mb * 2 ** 20 // 4).astype(np.float32)
 
     # dirty-chunk detection throughput (clustered writes: a contiguous 1%

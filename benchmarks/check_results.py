@@ -1,0 +1,45 @@
+"""CI gate: every standardized benchmark artifact in results/ must
+parse as JSON and carry a non-empty ``metrics`` table (schema in
+``benchmarks/run.py``).  Covers both the committed full-size
+``BENCH_*.json`` trajectory and freshly-produced ``SMOKE_*.json``."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def main() -> int:
+    paths = sorted(glob.glob(os.path.join(RESULTS_DIR, "BENCH_*.json"))
+                   + glob.glob(os.path.join(RESULTS_DIR,
+                                            "SMOKE_*.json")))
+    if not paths:
+        print("no BENCH_*/SMOKE_* artifacts found", file=sys.stderr)
+        return 1
+    bad = 0
+    for path in paths:
+        name = os.path.basename(path)
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"FAIL {name}: unreadable ({e})", file=sys.stderr)
+            bad += 1
+            continue
+        metrics = payload.get("metrics")
+        if not isinstance(metrics, dict) or not metrics:
+            print(f"FAIL {name}: empty or missing metrics",
+                  file=sys.stderr)
+            bad += 1
+            continue
+        print(f"ok   {name}: {len(metrics)} metrics "
+              f"(bench={payload.get('bench')}, "
+              f"wall={payload.get('wall_s')}s)")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -7,12 +7,18 @@ trajectory is machine-readable across PRs:
 
     {"bench": str, "schema": 1, "unix_time": float, "wall_s": float,
      "metrics": {name: {"value": num, "unit": str, "note": str}}}
+
+``--tiny`` runs every benchmark at smoke sizes (the CI bench-smoke
+step): artifacts then land as ``results/SMOKE_<name>.json`` so the
+committed full-size ``BENCH_*.json`` trajectory is never clobbered by a
+smoke run, and each smoke artifact is asserted to carry metrics.
 """
 from __future__ import annotations
 
 import argparse
 import csv
 import importlib
+import inspect
 import json
 import os
 import sys
@@ -24,15 +30,18 @@ BENCHES = [
     "bench_shared_memory",    # Fig 12
     "bench_message_passing",  # Fig 13 / Fig 9
     "bench_migration",        # Fig 14
+    "bench_scheduler_scale",  # Fig 11 fix: sharded + vectorized engine
 ]
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 OUT = os.path.join(RESULTS_DIR, "bench.csv")
 
 
-def write_bench_json(bench: str, metrics, wall_s: float) -> str:
+def write_bench_json(bench: str, metrics, wall_s: float,
+                     tiny: bool = False) -> str:
+    prefix = "SMOKE" if tiny else "BENCH"
     path = os.path.join(os.path.abspath(RESULTS_DIR),
-                        f"BENCH_{bench}.json")
+                        f"{prefix}_{bench}.json")
     payload = {
         "bench": bench,
         "schema": 1,
@@ -49,6 +58,8 @@ def write_bench_json(bench: str, metrics, wall_s: float) -> str:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=BENCHES)
+    ap.add_argument("--tiny", action="store_true",
+                    help="smoke sizes; artifacts go to SMOKE_*.json")
     args = ap.parse_args()
     os.makedirs(os.path.abspath(RESULTS_DIR), exist_ok=True)
     rows = []
@@ -69,16 +80,22 @@ def main() -> None:
         current_metrics = []
         mod = importlib.import_module(f"benchmarks.{mod_name}")
         t0 = time.time()
-        mod.run(report)
+        if "tiny" in inspect.signature(mod.run).parameters:
+            mod.run(report, tiny=args.tiny)
+        else:
+            mod.run(report)
         wall = time.time() - t0
         rows.append((mod_name, "bench_wall", round(wall, 1), "s", ""))
-        path = write_bench_json(mod_name, current_metrics, wall)
+        path = write_bench_json(mod_name, current_metrics, wall,
+                                tiny=args.tiny)
+        assert current_metrics, f"{mod_name} reported no metrics"
         print(f"# wrote {path}")
-    with open(OUT, "w", newline="") as f:
-        w = csv.writer(f)
-        w.writerow(["bench", "name", "value", "unit", "paper_ref"])
-        w.writerows(rows)
-    print(f"# wrote {len(rows)} rows to {os.path.abspath(OUT)}")
+    if not args.tiny:
+        with open(OUT, "w", newline="") as f:
+            w = csv.writer(f)
+            w.writerow(["bench", "name", "value", "unit", "paper_ref"])
+            w.writerows(rows)
+        print(f"# wrote {len(rows)} rows to {os.path.abspath(OUT)}")
 
 
 if __name__ == "__main__":

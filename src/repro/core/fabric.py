@@ -64,7 +64,7 @@ from repro.core import snapshot as snap_mod
 from repro.core.granule import GranuleGroup
 from repro.core.placement import (Allocation, CostModel, PlacementEngine,
                                   PlacementPolicy, PreemptPolicy,
-                                  derive_capacities)
+                                  ShardedPlacementEngine, derive_capacities)
 from repro.core.simulator import Job, Simulator, TraceResult
 
 # Relative per-chip speed by device generation, used to auto-detect a
@@ -321,6 +321,11 @@ class Fabric:
     auto-detected into per-host ``speeds``; pass ``speeds`` explicitly
     to model a mixed fleet on uniform local devices (e.g.
     ``simulator.hetero_speeds``).
+    ``shard_hosts`` builds the fabric over a decentralised
+    ``ShardedPlacementEngine`` (host groups of that size) instead of the
+    centralised engine — every gang decision then consults the shard
+    summary index first; with one shard covering the fleet the two are
+    decision-for-decision identical.
     """
 
     def __init__(self, devices: Optional[Sequence[Any]] = None,
@@ -328,7 +333,8 @@ class Fabric:
                  policy: Union[str, PlacementPolicy] = "binpack",
                  preempt: Optional[PreemptPolicy] = None,
                  speeds: Optional[Sequence[float]] = None,
-                 cost_model: Optional[CostModel] = None):
+                 cost_model: Optional[CostModel] = None,
+                 shard_hosts: Optional[int] = None):
         self.devices = list(devices if devices is not None
                             else jax.devices())
         assert self.devices, "empty fabric"
@@ -336,9 +342,15 @@ class Fabric:
         self._dev_index = {d: i for i, d in enumerate(self.devices)}
         if speeds is None:
             speeds = infer_host_speeds(self.devices, chips_per_host)
-        self.engine = PlacementEngine.for_chips(
-            len(self.devices), chips_per_host, policy=policy,
-            speeds=speeds, cost_model=cost_model)
+        if shard_hosts is None:
+            self.engine = PlacementEngine.for_chips(
+                len(self.devices), chips_per_host, policy=policy,
+                speeds=speeds, cost_model=cost_model)
+        else:
+            self.engine = ShardedPlacementEngine.for_chips(
+                len(self.devices), chips_per_host, policy=policy,
+                speeds=speeds, cost_model=cost_model,
+                hosts_per_shard=shard_hosts)
         n_hosts = self.engine.hosts
         self.preempt = preempt or PreemptPolicy()
         self.gangs: Dict[str, GangHandle] = {}
@@ -462,15 +474,11 @@ class Fabric:
                       ) -> TraceResult:
         """Pure-simulation prediction for the same trace on a fabric of
         this shape (same hosts, capacities, per-host speeds, cost model,
-        policy) — what ``run_trace`` should reproduce,
+        policy, and centralised-vs-sharded engine architecture via
+        ``clone_empty``) — what ``run_trace`` should reproduce,
         placement-for-placement."""
         pol = policy or self.engine.default_policy
-        engine = PlacementEngine(self.engine.hosts, self.chips_per_host,
-                                 policy=pol,
-                                 capacities=list(self.engine.capacities),
-                                 speeds=None if self.engine.speeds is None
-                                 else list(self.engine.speeds),
-                                 cost_model=self.engine.cost_model)
+        engine = self.engine.clone_empty()
         sim = Simulator(engine.hosts, self.chips_per_host, "granular",
                         migrate=migrate, policy=pol, backfill=backfill,
                         preempt=preempt, engine=engine)

@@ -52,15 +52,56 @@ scheduler facade in ``core.scheduler``.  The split is:
   gangs (checkpoint + requeue is the *caller's* job — the engine only
   plans).  Used by the simulator's priority traces and by
   ``core.fabric.Fabric`` for live preemption.
+
+* ``ShardedPlacementEngine`` — the decentralised scheduler (Fig 11 fix):
+  the fleet is partitioned into host-group shards; a placement decision
+  consults a cheap per-shard summary index (idle chips, idle
+  throughput, max contiguous free block) and then runs the policy on
+  the chosen shard's O(hosts_per_shard) slice only, forwarding to other
+  shards (counted as ``decision_hops``) when the home shard cannot fit
+  the gang.  With one shard covering the whole fleet every decision is
+  bit-identical to the centralised ``PlacementEngine``.
+
+The placement hot path (host ordering, greedy fills, candidate scoring)
+is vectorized with numpy; the original pure-Python loops survive under
+``reference_loops()`` so parity tests and the scheduler-scale benchmark
+can A/B the exact pre-vectorization behaviour.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import (Dict, List, Mapping, Optional, Sequence, Tuple, Union)
 
 import numpy as np
 
 Placement = List[Tuple[int, int]]          # [(host, n_chips)] sorted
+
+# Default host-group size for the sharded engine: the latency sweet spot
+# in the Fig 11 regime (a 128-host fleet becomes 8 shards of 16).
+DEFAULT_SHARD_HOSTS = 16
+
+# When False, the placement hot path runs the original pre-vectorization
+# implementation: pure-Python per-host/per-chip fill loops, per-call
+# policy re-resolution, copied views, and per-call O(hosts) summary
+# recomputation instead of the incremental counters.  Decisions are
+# bit-identical either way (pinned by tests); the flag exists so
+# bench_scheduler_scale can measure the speedup against the real pre-PR
+# implementation and so a parity failure would be directly bisectable.
+_VECTORIZED = True
+
+
+@contextlib.contextmanager
+def reference_loops():
+    """Run the placement hot path on the pre-vectorization loop
+    implementation (A/B baseline for benchmarks and parity tests)."""
+    global _VECTORIZED
+    prev = _VECTORIZED
+    _VECTORIZED = False
+    try:
+        yield
+    finally:
+        _VECTORIZED = prev
 
 
 def placement_cross_host_fraction(placement: Sequence[Tuple[int, int]]
@@ -71,6 +112,22 @@ def placement_cross_host_fraction(placement: Sequence[Tuple[int, int]]
     if n <= 1:
         return 0.0
     return 1.0 - sum((c / n) ** 2 for _, c in placement)
+
+
+def _chi_batch(placements: Sequence[Sequence[Tuple[int, int]]]
+               ) -> np.ndarray:
+    """Vectorized ``placement_cross_host_fraction`` over a batch: one
+    flattened bincount pass.  Per-candidate accumulation order matches
+    the Python generator sum (flat order), so values are bit-identical."""
+    k = len(placements)
+    sizes = np.array([len(p) for p in placements])
+    chips = np.array([c for p in placements for _, c in p],
+                     dtype=np.float64)
+    seg = np.repeat(np.arange(k), sizes)
+    n = np.bincount(seg, weights=chips, minlength=k)
+    frac_sq = (chips / n[seg]) ** 2
+    return np.where(n > 1, 1.0 - np.bincount(seg, weights=frac_sq,
+                                             minlength=k), 0.0)
 
 
 def derive_capacities(n_chips: int, chips_per_host: int) -> List[int]:
@@ -173,6 +230,37 @@ class CostModel:
         out of the argmin)."""
         return self.predicted_time(1.0, placement, kind, speeds)
 
+    def score_batch(self, placements: Sequence[Sequence[Tuple[int, int]]],
+                    kind: Optional[str] = None,
+                    speeds: Optional[np.ndarray] = None) -> np.ndarray:
+        """Vectorized ``score`` over a batch of candidate placements:
+        one flattened numpy pass over all (host, chips) pairs instead of
+        a Python reduction per candidate.  The per-candidate float
+        operation order matches ``score`` (chi accumulates ``(c/n)**2``
+        terms, then ``(1/eff) * slowdown``), so ranking candidates by
+        either form agrees."""
+        k = len(placements)
+        if k == 0:
+            return np.empty(0, dtype=np.float64)
+        sizes = np.array([len(p) for p in placements])
+        hosts = np.array([h for p in placements for h, _ in p],
+                         dtype=np.int64)
+        chips = np.array([c for p in placements for _, c in p],
+                         dtype=np.float64)
+        seg = np.repeat(np.arange(k), sizes)
+        n = np.bincount(seg, weights=chips, minlength=k)
+        frac_sq = (chips / n[seg]) ** 2
+        chi = np.where(n > 1, 1.0 - np.bincount(seg, weights=frac_sq,
+                                                minlength=k), 0.0)
+        slowdown = 1.0 + self.beta(kind) * chi
+        if speeds is None:
+            eff = n
+        else:
+            eff = np.bincount(seg, weights=chips * speeds[hosts],
+                              minlength=k)
+        safe = np.where(eff > 0, eff, 1.0)
+        return np.where(eff > 0, (1.0 / safe) * slowdown, np.inf)
+
     def active_workers(self, parallelism: int, alloc_n: int,
                        shared_memory: bool) -> int:
         """Working ranks on an allocation: OpenMP threads in one
@@ -212,13 +300,23 @@ class ClusterView:
     ``capacities`` carries per-host chip counts (ragged last host) and
     ``speeds`` per-host speed factors; ``speeds is None`` means a
     homogeneous fleet and keeps every policy on its exact pre-CostModel
-    integer code path."""
+    integer code path.
 
-    __slots__ = ("free", "chips_per_host", "capacities", "speeds")
+    ``hetero`` / ``idle`` / ``idle_eff`` are optional precomputed
+    summaries: the engine maintains them incrementally (commit/release
+    deltas) and passes them in, so the per-decision loop no longer
+    recomputes an O(hosts) reduction per property access.  When absent
+    they are computed lazily, once, on first access."""
+
+    __slots__ = ("free", "chips_per_host", "capacities", "speeds",
+                 "_hetero", "_idle", "_idle_eff")
 
     def __init__(self, free: np.ndarray, chips_per_host: int,
                  capacities: Optional[np.ndarray] = None,
-                 speeds: Optional[np.ndarray] = None):
+                 speeds: Optional[np.ndarray] = None,
+                 hetero: Optional[bool] = None,
+                 idle: Optional[int] = None,
+                 idle_eff: Optional[float] = None):
         self.free = free
         self.chips_per_host = chips_per_host
         self.capacities = (np.full(len(free), chips_per_host,
@@ -227,6 +325,9 @@ class ClusterView:
                            else np.asarray(capacities, dtype=np.int64))
         self.speeds = (None if speeds is None
                        else np.asarray(speeds, dtype=np.float64))
+        self._hetero = hetero
+        self._idle = idle
+        self._idle_eff = idle_eff
 
     @property
     def hosts(self) -> int:
@@ -236,12 +337,25 @@ class ClusterView:
     def heterogeneous(self) -> bool:
         """True when per-host speeds actually differ — a uniform-speed
         fleet (even at s != 1) ranks placements exactly like the
-        homogeneous case, so policies keep the degenerate path."""
-        return self.speeds is not None and bool(
-            (self.speeds != self.speeds[0]).any())
+        homogeneous case, so policies keep the degenerate path.
+        Cached (the answer cannot change for a given view)."""
+        if self._hetero is None:
+            self._hetero = self.speeds is not None and bool(
+                (self.speeds != self.speeds[0]).any())
+        return self._hetero
 
     def idle_chips(self) -> int:
-        return int(self.free.sum())
+        if self._idle is None:
+            self._idle = int(self.free.sum())
+        return self._idle
+
+    def idle_throughput(self) -> float:
+        """Idle capacity in effective (speed-weighted) chips; cached."""
+        if self._idle_eff is None:
+            self._idle_eff = (float(self.idle_chips())
+                              if self.speeds is None
+                              else float((self.free * self.speeds).sum()))
+        return self._idle_eff
 
 
 # ---------------------------------------------------------------------------
@@ -282,11 +396,11 @@ def _host_order(free: np.ndarray,
     return np.lexsort((speeds, free * speeds))[::-1]
 
 
-def _greedy_most_free(free: np.ndarray, n: int,
-                      speeds: Optional[np.ndarray] = None
-                      ) -> Optional[Placement]:
-    """Most-free-first greedy: the gang spans as few hosts as possible
-    (as few *effective-throughput-ordered* hosts on mixed fleets)."""
+def _greedy_most_free_loop(free: np.ndarray, n: int,
+                           speeds: Optional[np.ndarray] = None
+                           ) -> Optional[Placement]:
+    """Pre-vectorization reference: per-host Python loop over the greedy
+    order (kept for ``reference_loops()`` A/B parity + benchmarking)."""
     order = _host_order(free, speeds)
     placement: Placement = []
     remaining = n
@@ -299,6 +413,35 @@ def _greedy_most_free(free: np.ndarray, n: int,
         if remaining == 0:
             break
     return sorted(placement) if remaining == 0 else None
+
+
+def _greedy_most_free(free: np.ndarray, n: int,
+                      speeds: Optional[np.ndarray] = None
+                      ) -> Optional[Placement]:
+    """Most-free-first greedy: the gang spans as few hosts as possible
+    (as few *effective-throughput-ordered* hosts on mixed fleets).
+
+    Vectorized cumulative-sum fill: hosts in greedy order contribute
+    their full free count until the running total covers ``n``; the
+    cutoff host contributes the remainder.  Zero-free hosts sort last in
+    every greedy order (free and free·s are both 0), so the prefix never
+    contains one — bit-identical to the reference loop."""
+    if not _VECTORIZED:
+        return _greedy_most_free_loop(free, n, speeds)
+    order = _host_order(free, speeds)
+    if free[order[0]] >= n:                  # whole gang on the top host
+        return [(int(order[0]), n)]
+    f = free[order]
+    cum = np.cumsum(f)
+    if cum.size == 0 or cum[-1] < n:
+        return None
+    k = int(np.searchsorted(cum, n))
+    take = f[:k + 1]
+    last = n - (int(cum[k - 1]) if k else 0)
+    placement = [(int(h), int(c))
+                 for h, c in zip(order[:k], take[:k])]
+    placement.append((int(order[k]), last))
+    return sorted(placement)
 
 
 class BinpackPolicy(PlacementPolicy):
@@ -317,6 +460,65 @@ class BinpackPolicy(PlacementPolicy):
         return _greedy_most_free(view.free, n, speeds)
 
 
+def _spread_fill_loop(free: np.ndarray, n: int,
+                      speeds: Optional[np.ndarray] = None
+                      ) -> Optional[Placement]:
+    """Pre-vectorization reference: one argmax per chip (kept for
+    ``reference_loops()`` A/B parity + benchmarking, and still the
+    implementation for heterogeneous fleets, where each chip shifts the
+    effective-throughput weights by that host's speed)."""
+    counts: Dict[int, int] = {}
+    avail = free.copy()
+    remaining = n
+    while remaining > 0:
+        candidates = np.nonzero(avail > 0)[0]
+        if candidates.size == 0:
+            return None
+        weight = (avail[candidates] * speeds[candidates]
+                  if speeds is not None else avail[candidates])
+        h = int(candidates[np.argmax(weight)])
+        counts[h] = counts.get(h, 0) + 1
+        avail[h] -= 1
+        remaining -= 1
+    return sorted(counts.items())
+
+
+def _spread_fill(free: np.ndarray, n: int,
+                 speeds: Optional[np.ndarray] = None
+                 ) -> Optional[Placement]:
+    """Round-robin water-filling: each chip goes to the host with the
+    most free chips (lowest index on ties).
+
+    Homogeneous vectorized form: instead of one argmax per chip, whole
+    *levels* are drained at once — with ``k`` hosts at the max level
+    ``m1`` and the next level at ``m2``, the per-chip reference
+    distributes the next ``k*(m1-m2)`` chips as full cycles over those
+    hosts in ascending index order, so ``divmod`` gives each host ``q``
+    chips and the first ``r`` (by index) one extra.  Bit-identical to
+    the reference loop; heterogeneous fleets keep the per-chip loop
+    (each chip moves that host's weight by its own speed factor)."""
+    if not _VECTORIZED or speeds is not None:
+        return _spread_fill_loop(free, n, speeds)
+    if int(free.sum()) < n:
+        return None
+    # closed-form water level: the per-chip process drains every host
+    # above level L, where L is the lowest level whose surplus
+    # S(L) = sum(max(free - L, 0)) still fits in n; the n - S(L)
+    # leftover chips come off the hosts sitting at L (free >= L), one
+    # each in ascending index order — exactly the reference's final
+    # partial cycle.  Levels are bounded by chips_per_host, so the
+    # S scan is a tiny (levels x hosts) broadcast.
+    levels = np.arange(int(free.max()) + 1)
+    surplus = np.clip(free[None, :] - levels[:, None], 0, None).sum(axis=1)
+    lvl = int(np.argmax(surplus <= n))
+    counts = np.clip(free - lvl, 0, None)
+    extra = n - int(surplus[lvl])
+    if extra:
+        at = np.nonzero(free >= max(lvl, 1))[0]
+        counts[at[:extra]] += 1
+    return [(int(h), int(counts[h])) for h in np.nonzero(counts)[0]]
+
+
 class SpreadPolicy(PlacementPolicy):
     """Round-robin chips over hosts (load balancing); on mixed fleets
     each chip lands on the host with the most effective free throughput."""
@@ -327,21 +529,8 @@ class SpreadPolicy(PlacementPolicy):
               kind: Optional[str] = None) -> Optional[Placement]:
         if n > view.idle_chips():
             return None
-        counts: Dict[int, int] = {}
-        free = view.free.copy()
-        hetero = view.heterogeneous
-        remaining = n
-        while remaining > 0:
-            candidates = np.nonzero(free > 0)[0]
-            if candidates.size == 0:
-                return None
-            weight = (free[candidates] * view.speeds[candidates]
-                      if hetero else free[candidates])
-            h = int(candidates[np.argmax(weight)])
-            counts[h] = counts.get(h, 0) + 1
-            free[h] -= 1
-            remaining -= 1
-        return sorted(counts.items())
+        speeds = view.speeds if view.heterogeneous else None
+        return _spread_fill(view.free, n, speeds)
 
 
 class FixedSlicePolicy(PlacementPolicy):
@@ -363,10 +552,30 @@ class FixedSlicePolicy(PlacementPolicy):
               kind: Optional[str] = None) -> Optional[Placement]:
         slice_size = self.slice_size
         n_slices = -(-n // slice_size)
-        placement: Dict[int, int] = {}
-        need = n_slices
         free = view.free
         speeds = view.speeds if view.heterogeneous else None
+        if not _VECTORIZED:
+            return self._place_loop(free, n_slices, speeds)
+        # vectorized: whole slices per host in greedy order, cumulative
+        # cut at n_slices (hosts too small for one slice contribute 0
+        # and are dropped — exactly what the reference loop skips)
+        order = _host_order(free, speeds)
+        slices = free[order] // slice_size
+        cum = np.cumsum(slices)
+        if cum.size == 0 or cum[-1] < n_slices:
+            return None
+        k = int(np.searchsorted(cum, n_slices))
+        take = slices[:k + 1].copy()
+        take[k] = n_slices - (int(cum[k - 1]) if k else 0)
+        return sorted((int(h), int(s) * slice_size)
+                      for h, s in zip(order[:k + 1], take) if s > 0)
+
+    def _place_loop(self, free: np.ndarray, n_slices: int,
+                    speeds: Optional[np.ndarray]) -> Optional[Placement]:
+        """Pre-vectorization reference (``reference_loops()``)."""
+        slice_size = self.slice_size
+        placement: Dict[int, int] = {}
+        need = n_slices
         for h in _host_order(free, speeds):
             while free[h] - placement.get(int(h), 0) >= slice_size \
                     and need > 0:
@@ -436,9 +645,12 @@ class LocalityScoredPolicy(PlacementPolicy):
         greedy = _greedy_most_free(free, n)
         if greedy is not None:
             candidates.append(greedy)
-        exact = self._greedy_exact_fill(free, n)
-        if exact is not None:
-            candidates.append(exact)
+        if not fits.size:
+            # when a single host fits, exact-fill's first probe returns
+            # the same best-fit single-host placement — skip the dup
+            exact = self._greedy_exact_fill(free, n)
+            if exact is not None:
+                candidates.append(exact)
         if view.heterogeneous:
             # speed-aware candidates: the fastest single host that fits,
             # and the effective-throughput greedy over the fast hosts
@@ -454,10 +666,46 @@ class LocalityScoredPolicy(PlacementPolicy):
               kind: Optional[str] = None) -> Optional[Placement]:
         if n > view.idle_chips():
             return None
+        hetero = view.heterogeneous
+        if _VECTORIZED and not hetero:
+            # best-fit short-circuit: when some host fits the whole
+            # gang, every candidate is single-host (chi = 0 for all, so
+            # the score ties) and best-fit strands the fewest chips —
+            # greedy's most-free host can never win the (score,
+            # stranded) key, and exact-fill's first probe *is* the
+            # best-fit host.  Decision-identical to scoring the full
+            # candidate set, without the fills.
+            fits = np.nonzero(view.free >= n)[0]
+            if fits.size:
+                return [(int(fits[np.argmin(view.free[fits])]), n)]
         candidates = self._candidates(view, n)
         if not candidates:
             return None
-        if view.heterogeneous:
+        if _VECTORIZED:
+            # batched scoring: one numpy pass over all candidates'
+            # (host, chips) pairs; per-candidate float operation order
+            # matches the Python reduction (bincount accumulates in
+            # flat order), and the stable lexsort keeps min()'s
+            # first-of-equals tie-break on (score, stranded)
+            if hetero:
+                scores = self.cost_model.score_batch(candidates, kind,
+                                                     view.speeds)
+            else:
+                # the exact pre-CostModel homogeneous key 1 + beta*chi
+                scores = 1.0 + self.cost_model.beta(kind) \
+                    * _chi_batch(candidates)
+            k = len(candidates)
+            sizes = np.array([len(p) for p in candidates])
+            seg = np.repeat(np.arange(k), sizes)
+            hosts = np.array([h for p in candidates for h, _ in p],
+                             dtype=np.int64)
+            chips = np.array([c for p in candidates for _, c in p],
+                             dtype=np.int64)
+            stranded = np.bincount(
+                seg, weights=(view.free[hosts] - chips).astype(
+                    np.float64), minlength=k)
+            return candidates[int(np.lexsort((stranded, scores))[0])]
+        if hetero:                      # reference Python reduction
             model = self.cost_model
             return min(candidates, key=lambda p: (
                 model.score(p, kind, view.speeds),
@@ -470,11 +718,10 @@ class LocalityScoredPolicy(PlacementPolicy):
             self._stranded(view, p)))
 
     @staticmethod
-    def _greedy_exact_fill(free: np.ndarray, n: int) -> Optional[Placement]:
-        """Greedy most-free-first, but finish the remainder on the
-        best-fit host (smallest free count that still covers it) — same
-        chi as plain greedy when the chunk multiset matches, strictly
-        fewer stranded chips otherwise."""
+    def _greedy_exact_fill_loop(free: np.ndarray,
+                                n: int) -> Optional[Placement]:
+        """Pre-vectorization reference (``reference_loops()``): one
+        full-array scan per host drained."""
         avail = free.copy()
         placement: Placement = []
         remaining = n
@@ -492,6 +739,42 @@ class LocalityScoredPolicy(PlacementPolicy):
             placement.append((h, take))
             avail[h] = 0
             remaining -= take
+        return sorted(placement)
+
+    @staticmethod
+    def _greedy_exact_fill(free: np.ndarray, n: int) -> Optional[Placement]:
+        """Greedy most-free-first, but finish the remainder on the
+        best-fit host (smallest free count that still covers it) — same
+        chi as plain greedy when the chunk multiset matches, strictly
+        fewer stranded chips otherwise.
+
+        Vectorized: the reference drains hosts in stable most-free
+        order (repeated argmax = descending free, ascending index on
+        ties) until some host covers the remainder, so the cut point is
+        the first prefix position whose host already fits what is left
+        — one cumulative-sum comparison instead of a scan per host."""
+        if not _VECTORIZED:
+            return LocalityScoredPolicy._greedy_exact_fill_loop(free, n)
+        order = np.argsort(-free, kind="stable")
+        f = free[order]
+        cum = np.cumsum(f)
+        rem = n - (cum - f)                  # remainder before each step
+        cond = f >= rem
+        if not cond.any():
+            return None                      # total free < n
+        k = int(np.argmax(cond))
+        rem_k = int(rem[k])
+        # best-fit finisher: f[k:] is descending, so the untaken hosts
+        # that still fit rem_k form a prefix; the smallest fitting value
+        # m sits at the prefix end, and (stable sort = ascending index
+        # within a value run) the lowest-index host with value m is the
+        # run's first position at or past k
+        cut = int(np.searchsorted(-f[k:], -rem_k, side="right"))
+        m = int(f[k + cut - 1])
+        start = int(np.searchsorted(-f, -m, side="left"))
+        finisher = int(order[max(k, start)])
+        placement = [(int(order[i]), int(f[i])) for i in range(k)]
+        placement.append((finisher, rem_k))
         return sorted(placement)
 
 
@@ -646,6 +929,24 @@ class PlacementEngine:
         self.default_policy = resolve_policy(policy).with_model(
             self.cost_model)
         self.allocations: Dict[str, Allocation] = {}
+        # resolved-and-model-bound policies, cached per engine: the old
+        # path re-ran resolve_policy(...).with_model(...) on every
+        # decision, constructing a fresh bound LocalityScoredPolicy each
+        # time the by-name singleton met a non-default model
+        self._policy_cache: Dict[Union[str, int],
+                                 Tuple[object, PlacementPolicy]] = {}
+        # incrementally-maintained free-chip summaries (commit/release
+        # deltas through _take/_give) — the per-decision loop never
+        # recomputes an O(hosts) reduction for these
+        self._hetero = self.speeds is not None and bool(
+            (self.speeds != self.speeds[0]).any())
+        self._idle_chips = int(self.free.sum())
+        self._idle_eff = (float(self._idle_chips) if self.speeds is None
+                          else float((self.free * self.speeds).sum()))
+        # forwarding hops of the last placement decision (always 0 for
+        # the centralised engine; ShardedPlacementEngine counts the
+        # shards a decision consulted beyond its home shard)
+        self.decision_hops = 0
 
     @classmethod
     def for_chips(cls, n_chips: int, chips_per_host: int,
@@ -663,42 +964,159 @@ class PlacementEngine:
 
     @property
     def heterogeneous(self) -> bool:
-        return self.speeds is not None and bool(
-            (self.speeds != self.speeds[0]).any())
+        return self._hetero
+
+    @property
+    def sched_hosts(self) -> int:
+        """Hosts one scheduling decision scans — the centralised
+        engine's Fig 11 latency term (the sharded engine overrides this
+        with its per-shard host count)."""
+        return self.hosts
 
     def idle_chips(self) -> int:
-        return int(self.free.sum())
+        return self._idle_chips
 
     def idle_fraction(self) -> float:
-        return self.idle_chips() / self.total_chips
+        return self._idle_chips / self.total_chips
 
     def idle_throughput(self) -> float:
-        """Idle capacity in effective (speed-weighted) chips."""
-        if self.speeds is None:
-            return float(self.idle_chips())
-        return float((self.free * self.speeds).sum())
+        """Idle capacity in effective (speed-weighted) chips —
+        incrementally maintained, not recomputed per call."""
+        return self._idle_eff
 
     def view(self) -> ClusterView:
-        return self.view_with(self.free)
+        """Policy view over the live free map.  No copy: views are
+        read-only by the policy contract (policies copy before they
+        mutate), and the engine only moves chips after ``place``
+        returns — so the hot path skips an O(hosts) copy per decision."""
+        return ClusterView(self.free, self.chips_per_host,
+                           self.capacities, self.speeds,
+                           hetero=self._hetero, idle=self._idle_chips,
+                           idle_eff=self._idle_eff)
 
     def view_with(self, free: np.ndarray) -> ClusterView:
         """A policy view over an alternative free map (scratch planning)
         that still carries this engine's capacities and speeds."""
-        return ClusterView(free.copy(), self.chips_per_host,
-                           self.capacities, self.speeds)
+        return ClusterView(free, self.chips_per_host,
+                           self.capacities, self.speeds,
+                           hetero=self._hetero)
+
+    def clone_empty(self) -> "PlacementEngine":
+        """A fresh, idle engine of the same shape (hosts, capacities,
+        speeds, policy, cost model) — what ``Fabric.predict_trace``
+        simulates against so prediction and live execution share one
+        accounting configuration."""
+        return type(self)(self.hosts, self.chips_per_host,
+                          policy=self.default_policy,
+                          capacities=list(self.capacities),
+                          speeds=None if self.speeds is None
+                          else list(self.speeds),
+                          cost_model=self.cost_model)
+
+    # ---- free-map mutation (the one place chips move) ----------------------
+    def _take(self, placement: Sequence[Tuple[int, int]]) -> None:
+        """Move chips out of the free pool, maintaining the incremental
+        summaries.  Every mutation path (reserve/bind/apply_migration)
+        funnels through here so subclasses can track shard summaries.
+        Conservation is asserted per touched host — O(gang), replacing
+        the old O(hosts) full-map scans on the per-decision path.  Wide
+        placements (a spread gang touches ~n hosts) take the fancy-index
+        path; short ones stay on the cheaper scalar loop.  Fancy
+        indexing applies ONE update per index, so a placement that
+        repeats a host (never policy-emitted, but ``bind`` adopts
+        external placements) must take the scalar loop instead."""
+        if len(placement) > 4 \
+                and len({h for h, _ in placement}) == len(placement):
+            hs = np.array([h for h, _ in placement], dtype=np.int64)
+            cs = np.array([c for _, c in placement], dtype=np.int64)
+            self.free[hs] -= cs
+            assert (self.free[hs] >= 0).all(), "host oversubscribed"
+            self._idle_chips -= int(cs.sum())
+            if self.speeds is not None:
+                self._idle_eff -= float((cs * self.speeds[hs]).sum())
+            else:
+                self._idle_eff = float(self._idle_chips)
+            return
+        taken = 0
+        for h, c in placement:
+            self.free[h] -= c
+            assert self.free[h] >= 0, f"host {h} oversubscribed"
+            taken += c
+            if self.speeds is not None:
+                self._idle_eff -= c * float(self.speeds[h])
+        self._idle_chips -= taken
+        if self.speeds is None:
+            self._idle_eff = float(self._idle_chips)
+
+    def _give(self, placement: Sequence[Tuple[int, int]]) -> None:
+        """Return chips to the free pool (inverse of ``_take``; same
+        unique-host requirement for the fancy-index path)."""
+        if len(placement) > 4 \
+                and len({h for h, _ in placement}) == len(placement):
+            hs = np.array([h for h, _ in placement], dtype=np.int64)
+            cs = np.array([c for _, c in placement], dtype=np.int64)
+            self.free[hs] += cs
+            assert (self.free[hs] <= self.capacities[hs]).all(), \
+                "host over-freed"
+            self._idle_chips += int(cs.sum())
+            if self.speeds is not None:
+                self._idle_eff += float((cs * self.speeds[hs]).sum())
+            else:
+                self._idle_eff = float(self._idle_chips)
+            return
+        given = 0
+        for h, c in placement:
+            self.free[h] += c
+            assert self.free[h] <= self.capacities[h], \
+                f"host {h} over-freed"
+            given += c
+            if self.speeds is not None:
+                self._idle_eff += c * float(self.speeds[h])
+        self._idle_chips += given
+        if self.speeds is None:
+            self._idle_eff = float(self._idle_chips)
+
+    def _resolve(self, policy: Union[str, PlacementPolicy, None]
+                 ) -> PlacementPolicy:
+        """Resolved policy bound to this engine's cost model, cached
+        (one ``with_model`` bind per distinct policy per engine instead
+        of one per decision)."""
+        if policy is None:
+            return self.default_policy
+        key = policy if isinstance(policy, str) else id(policy)
+        hit = self._policy_cache.get(key)
+        if hit is not None and (hit[0] is policy or hit[0] == policy):
+            return hit[1]
+        pol = resolve_policy(policy, self.default_policy).with_model(
+            self.cost_model)
+        self._policy_cache[key] = (policy, pol)
+        return pol
 
     # ---- reservation lifecycle ---------------------------------------------
     def reserve(self, n: int,
                 policy: Union[str, PlacementPolicy, None] = None,
                 kind: Optional[str] = None) -> Optional[Reservation]:
-        pol = resolve_policy(policy, self.default_policy).with_model(
-            self.cost_model)
-        placement = pol.place(self.view(), n, kind=kind)
+        if _VECTORIZED:
+            if n > self._idle_chips:
+                # no policy can place n chips with fewer idle (every
+                # placement draws at least n from the free pool), so a
+                # blocked-queue probe fails before building a view
+                return None
+            pol = self._resolve(policy)
+            view = self.view()
+        else:
+            # pre-PR decision path (reference_loops): re-resolve + bind
+            # the policy, copy the view, recompute summaries per access
+            pol = resolve_policy(policy, self.default_policy).with_model(
+                self.cost_model)
+            view = ClusterView(self.free.copy(), self.chips_per_host,
+                               self.capacities, self.speeds)
+        placement = pol.place(view, n, kind=kind)
         if placement is None:
             return None
-        for h, c in placement:
-            self.free[h] -= c
-        assert (self.free >= 0).all()
+        self._take(placement)
+        if not _VECTORIZED:
+            assert (self.free >= 0).all()
         return Reservation(placement, slice_size=pol.slice_size)
 
     def commit(self, res: Reservation, job_id: str) -> Allocation:
@@ -714,9 +1132,7 @@ class PlacementEngine:
     def cancel(self, res: Reservation) -> None:
         assert not res.settled, "reservation already settled"
         res.settled = True
-        for h, c in res.placement:
-            self.free[h] += c
-        assert (self.free <= self.capacities).all()
+        self._give(res.placement)       # per-host conservation asserts
 
     # ---- allocation ----------------------------------------------------------
     def allocate(self, job_id: str, n: int,
@@ -732,18 +1148,17 @@ class PlacementEngine:
         for h, c in placement:
             assert 0 < c <= self.free[h], \
                 f"bind over-subscribes host {h}: {c} > {self.free[h]}"
-            self.free[h] -= c
             self.jobs_on_host[h].add(job_id)
+        self._take(placement)
         alloc = Allocation(job_id, sorted(placement), slice_size=slice_size)
         self.allocations[job_id] = alloc
         return alloc
 
     def release(self, alloc: Allocation) -> None:
-        for h, c in alloc.placement:
-            self.free[h] += c
+        for h, _ in alloc.placement:
             self.jobs_on_host[h].discard(alloc.job_id)
+        self._give(alloc.placement)     # per-host conservation asserts
         self.allocations.pop(alloc.job_id, None)
-        assert (self.free <= self.capacities).all()
 
     # ---- preemption -----------------------------------------------------------
     def preemption_plan(self, n: int, priority: int,
@@ -786,62 +1201,365 @@ class PlacementEngine:
         """
         plans = []
         free = self.free.copy()
-        hetero = self.heterogeneous
-        model, speeds = self.cost_model, self.speeds
         for alloc in allocs:
-            if alloc.slice_size:
-                continue
-            if not hetero and alloc.fragmentation() <= 1:
-                continue
-            held = dict(alloc.placement)
-            avail = free.copy()
-            for h, c in held.items():
-                avail[h] += c
-            if hetero:
-                kind = (kinds or {}).get(alloc.job_id)
-                current = model.score(alloc.placement, kind, speeds)
-                candidates = [p for p in (
-                    _greedy_most_free(avail, alloc.n, speeds),
-                    _greedy_most_free(avail, alloc.n))
-                    if p is not None and p != alloc.placement]
-                if not candidates:
-                    continue
+            new_placement = self._plan_move(
+                free, alloc, alloc.placement, self.heterogeneous,
+                self.speeds, (kinds or {}).get(alloc.job_id),
+                (remaining or {}).get(alloc.job_id))
+            if new_placement is not None:
+                plans.append((alloc.job_id, new_placement))
+        return plans
+
+    def _plan_move(self, free: np.ndarray, alloc: Allocation,
+                   placement: Placement, hetero: bool,
+                   speeds: Optional[np.ndarray], kind: Optional[str],
+                   rem: Optional[float]) -> Optional[Placement]:
+        """Plan one gang's move against the scratch ``free`` map (shared
+        across the whole planning pass so plans never double-book) and
+        commit the winning plan into it.  ``free``/``placement``/
+        ``speeds`` share a coordinate space — global for the centralised
+        engine, a shard slice (with local host indices) for shard-local
+        planning — so a shard decision only touches its own O(shard)
+        state.  Returns the new placement, or None to stay put.
+
+        Scratch mutation in place of the old per-gang ``free.copy()``:
+        the gang's held chips are added before planning and removed
+        again when no plan is emitted — O(gang) instead of O(hosts) per
+        candidate gang (``reference_loops()`` restores the pre-PR
+        per-gang copy for A/B benchmarking)."""
+        if alloc.slice_size:
+            return None
+        if not hetero and len(placement) <= 1:
+            return None
+        model = self.cost_model
+        avail = free if _VECTORIZED else free.copy()
+        for h, c in placement:                # gang's own chips count
+            avail[h] += c
+        new_placement: Optional[Placement] = None
+        if hetero:
+            current = model.score(placement, kind, speeds)
+            candidates = [p for p in (
+                _greedy_most_free(avail, alloc.n, speeds),
+                _greedy_most_free(avail, alloc.n))
+                if p is not None and p != placement]
+            if candidates:
                 best = min(candidates,
                            key=lambda p: model.score(p, kind, speeds))
                 best_score = model.score(best, kind, speeds)
-                if best_score >= current - 1e-12:
-                    continue
-                rem = (remaining or {}).get(alloc.job_id)
-                if rem is not None:
+                if best_score < current - 1e-12:
                     # rate scales as 1/score, so the move shrinks the
                     # remaining time by rem*(1 - best/current); it must
                     # buy back the snapshot transfer it costs
-                    saving = rem * (1.0 - best_score / current)
-                    if saving <= model.migration_cost_s:
-                        continue
-                new_placement = best
-            else:
-                # can the gang fit on fewer hosts?
-                new_placement = _greedy_most_free(avail, alloc.n)
-                if new_placement is None \
-                        or len(new_placement) >= alloc.fragmentation():
-                    continue
-            plans.append((alloc.job_id, new_placement))
-            # commit against the scratch free map so plans don't overlap
-            for h, c in held.items():
+                    if rem is None or rem * (1.0 - best_score / current) \
+                            > model.migration_cost_s:
+                        new_placement = best
+        else:
+            # can the gang fit on fewer hosts?
+            cand = _greedy_most_free(avail, alloc.n)
+            if cand is not None and len(cand) < len(placement):
+                new_placement = cand
+        if new_placement is None:             # stay put: undo the credit
+            if avail is free:
+                for h, c in placement:
+                    free[h] -= c
+            return None
+        if avail is free:                     # commit into the scratch
+            for h, c in new_placement:
+                free[h] -= c
+        else:
+            for h, c in placement:
                 free[h] += c
             for h, c in new_placement:
                 free[h] -= c
-        return plans
+        return new_placement
 
     def apply_migration(self, alloc: Allocation,
                         new_placement: Sequence[Tuple[int, int]]
                         ) -> Allocation:
         self.release(alloc)
-        for h, c in new_placement:
-            self.free[h] -= c
+        for h, _ in new_placement:
             self.jobs_on_host[h].add(alloc.job_id)
-        assert (self.free >= 0).all()
+        self._take(new_placement)       # per-host conservation asserts
         new = Allocation(alloc.job_id, sorted(new_placement))
         self.allocations[alloc.job_id] = new
         return new
+
+
+# ---------------------------------------------------------------------------
+# Sharded engine (decentralised scheduling, the Fig 11 fix)
+# ---------------------------------------------------------------------------
+class _ShardScope:
+    """Engine-like facade over one shard for ``PreemptPolicy.plan``:
+    shard-slice free map, shard-local allocation table (local host
+    indices), shard-slice policy views.  Victim ids come back unchanged,
+    so a shard-local plan drops straight into the caller's checkpoint +
+    requeue path."""
+
+    def __init__(self, engine: "ShardedPlacementEngine", shard: int):
+        lo, hi = engine.shard_bounds[shard]
+        self._engine = engine
+        self._shard = shard
+        self._lo, self._hi = lo, hi
+        self.free = engine.free[lo:hi]
+        self.default_policy = engine.default_policy
+        self.cost_model = engine.cost_model
+        self.allocations = {
+            a.job_id: Allocation(a.job_id,
+                                 [(h - lo, c) for h, c in a.placement],
+                                 slice_size=a.slice_size)
+            for a in engine.allocations.values()
+            if engine.shard_of_gang(a) == shard}
+
+    def view_with(self, free: np.ndarray) -> ClusterView:
+        e, lo, hi = self._engine, self._lo, self._hi
+        return ClusterView(free, e.chips_per_host, e.capacities[lo:hi],
+                           None if e.speeds is None else e.speeds[lo:hi],
+                           hetero=e.shard_hetero[self._shard])
+
+
+class ShardedPlacementEngine(PlacementEngine):
+    """Decentralised placement: the fleet is partitioned into host-group
+    shards of ``hosts_per_shard`` consecutive hosts (ragged last shard),
+    and a placement decision touches O(chips_needed + shards) state
+    instead of O(hosts):
+
+    1. the *summary index* — per-shard idle chips, idle (speed-weighted)
+       throughput, and max contiguous free block, all maintained
+       incrementally on commit/release — picks candidate shards:
+       shards that could co-locate the gang on one host first, then by
+       idle throughput (binpack's most-free-first, at shard granularity);
+    2. the policy runs on the chosen shard's O(hosts_per_shard) slice
+       only; a miss *forwards* to the next candidate shard
+       (``decision_hops`` counts the extra shards consulted — the
+       simulator charges them as forwarding latency);
+    3. a gang no single shard can hold is *split*: shards contribute
+       greedily in summary order, each placing its part locally.
+
+    Accounting stays global (one free map, one allocation table), so
+    release / bind / reservations / ``apply_migration`` are inherited
+    unchanged and consumers see the exact ``PlacementEngine`` interface.
+    ``migration_plan`` and ``preemption_plan`` run shard-locally for
+    gangs inside one shard, with an explicit cross-shard escalation
+    path (global planning) for gangs or arrivals that span shards.
+
+    With a single shard covering the whole fleet every decision —
+    placement, migration, preemption — is bit-identical to the
+    centralised engine, and ``decision_hops`` stays 0.
+    """
+
+    def __init__(self, hosts: int, chips_per_host: int,
+                 hosts_per_shard: int = DEFAULT_SHARD_HOSTS, **kwargs):
+        super().__init__(hosts, chips_per_host, **kwargs)
+        assert hosts_per_shard > 0
+        self.hosts_per_shard = min(hosts_per_shard, hosts)
+        self.shard_bounds: List[Tuple[int, int]] = [
+            (lo, min(lo + self.hosts_per_shard, hosts))
+            for lo in range(0, hosts, self.hosts_per_shard)]
+        self.n_shards = len(self.shard_bounds)
+        self._shard_of = np.repeat(np.arange(self.n_shards),
+                                   [hi - lo for lo, hi
+                                    in self.shard_bounds])
+        # summary index: incrementally maintained on every _take/_give
+        self._shard_idle = np.array(
+            [int(self.free[lo:hi].sum()) for lo, hi in self.shard_bounds],
+            dtype=np.int64)
+        self._shard_eff = np.array(
+            [float(self._shard_idle[s]) if self.speeds is None
+             else float((self.free[lo:hi] * self.speeds[lo:hi]).sum())
+             for s, (lo, hi) in enumerate(self.shard_bounds)])
+        self._shard_max = np.array(
+            [int(self.free[lo:hi].max()) for lo, hi in self.shard_bounds],
+            dtype=np.int64)
+        self._shard_dirty = np.zeros(self.n_shards, dtype=bool)
+        self.shard_hetero = [
+            self.speeds is not None and bool(
+                (self.speeds[lo:hi] != self.speeds[lo]).any())
+            for lo, hi in self.shard_bounds]
+
+    @property
+    def sched_hosts(self) -> int:
+        """One decision scans one shard, not the fleet — the latency
+        term the simulator's ``sched="sharded"`` mode charges."""
+        return self.hosts_per_shard
+
+    def clone_empty(self) -> "ShardedPlacementEngine":
+        return ShardedPlacementEngine(
+            self.hosts, self.chips_per_host,
+            hosts_per_shard=self.hosts_per_shard,
+            policy=self.default_policy, capacities=list(self.capacities),
+            speeds=None if self.speeds is None else list(self.speeds),
+            cost_model=self.cost_model)
+
+    # ---- summary index ------------------------------------------------------
+    def _take(self, placement: Sequence[Tuple[int, int]]) -> None:
+        super()._take(placement)
+        self._shard_delta(placement, -1)
+
+    def _give(self, placement: Sequence[Tuple[int, int]]) -> None:
+        super()._give(placement)
+        self._shard_delta(placement, +1)
+
+    def _shard_delta(self, placement: Sequence[Tuple[int, int]],
+                     sign: int) -> None:
+        for h, c in placement:
+            s = int(self._shard_of[h])
+            self._shard_idle[s] += sign * c
+            if self.speeds is not None:
+                self._shard_eff[s] += sign * c * float(self.speeds[h])
+            else:
+                self._shard_eff[s] = float(self._shard_idle[s])
+            self._shard_dirty[s] = True
+
+    def _shard_max_free(self) -> np.ndarray:
+        """Max contiguous free block per shard (lazily refreshed for
+        shards whose free map moved since the last read)."""
+        for s in np.nonzero(self._shard_dirty)[0]:
+            lo, hi = self.shard_bounds[int(s)]
+            self._shard_max[s] = int(self.free[lo:hi].max())
+        self._shard_dirty[:] = False
+        return self._shard_max
+
+    def shard_of_gang(self, alloc: Allocation) -> Optional[int]:
+        """The shard an allocation lives in, or None when it spans."""
+        shards = {int(self._shard_of[h]) for h, _ in alloc.placement}
+        return shards.pop() if len(shards) == 1 else None
+
+    def _shard_view(self, shard: int) -> ClusterView:
+        lo, hi = self.shard_bounds[shard]
+        return ClusterView(self.free[lo:hi], self.chips_per_host,
+                           self.capacities[lo:hi],
+                           None if self.speeds is None
+                           else self.speeds[lo:hi],
+                           hetero=self.shard_hetero[shard],
+                           idle=int(self._shard_idle[shard]),
+                           idle_eff=float(self._shard_eff[shard]))
+
+    # ---- placement ----------------------------------------------------------
+    def reserve(self, n: int,
+                policy: Union[str, PlacementPolicy, None] = None,
+                kind: Optional[str] = None) -> Optional[Reservation]:
+        pol = self._resolve(policy)
+        self.decision_hops = 0
+        if n > self._idle_chips:
+            return None
+        consults = 0
+        placement: Optional[Placement] = None
+        # home shard first, then forward: shards that can co-locate the
+        # gang on one host, then by idle throughput (summary index only
+        # — no shard state is touched until the policy runs)
+        fits_host = self._shard_max_free() >= n
+        candidates = np.nonzero(self._shard_idle >= n)[0]
+        if candidates.size:
+            order = candidates[np.lexsort(
+                (-self._shard_eff[candidates],
+                 ~fits_host[candidates]))]
+            for s in order:
+                lo, _ = self.shard_bounds[int(s)]
+                local = pol.place(self._shard_view(int(s)), n, kind=kind)
+                consults += 1
+                if local is not None:
+                    placement = sorted((h + lo, c) for h, c in local)
+                    break
+        if placement is None:
+            placement, split_consults = self._split_place(pol, n, kind)
+            consults += split_consults
+            if placement is None:
+                return None
+        self.decision_hops = consults - 1
+        self._take(placement)           # per-host conservation asserts
+        return Reservation(placement, slice_size=pol.slice_size)
+
+    def _split_place(self, pol: PlacementPolicy, n: int,
+                     kind: Optional[str]
+                     ) -> Tuple[Optional[Placement], int]:
+        """Cross-shard split for a gang no single shard can hold:
+        shards contribute greedily in idle-throughput order, each
+        placing its part through the policy on its own slice."""
+        order = np.nonzero(self._shard_idle > 0)[0]
+        order = order[np.lexsort((-self._shard_eff[order],))]
+        parts: Placement = []
+        remaining = n
+        consults = 0
+        for s in order:
+            lo, _ = self.shard_bounds[int(s)]
+            take = min(int(self._shard_idle[s]), remaining)
+            view = self._shard_view(int(s))
+            local = None
+            while take > 0:
+                local = pol.place(view, take, kind=kind)
+                if local is not None:
+                    break
+                take -= 1           # slice policies may need fewer chips
+            consults += 1
+            if local is None:
+                continue
+            parts.extend((h + lo, c) for h, c in local)
+            remaining -= sum(c for _, c in local)
+            if remaining <= 0:
+                break
+        if remaining > 0:
+            return None, consults
+        return sorted(parts), consults
+
+    # ---- preemption ---------------------------------------------------------
+    def preemption_plan(self, n: int, priority: int,
+                        priorities: Dict[str, int],
+                        policy: Union[str, PlacementPolicy, None] = None,
+                        preempt: Optional[PreemptPolicy] = None,
+                        kind: Optional[str] = None) -> Optional[List[str]]:
+        """Shard-local victim planning: each shard (by idle throughput)
+        plans against its own gangs and fit-probes its own slice, so the
+        arrival lands entirely inside the shard that evicts for it.
+        When no single shard can host the arrival even with evictions,
+        the plan *escalates* cross-shard: the centralised planner runs
+        over the global table (victims and placement may then span
+        shards)."""
+        pp = preempt or PreemptPolicy()
+        caps = np.array([int(self.capacities[lo:hi].sum())
+                         for lo, hi in self.shard_bounds])
+        order = np.nonzero(caps >= n)[0]
+        order = order[np.lexsort((-self._shard_eff[order],))]
+        for s in order:
+            scope = _ShardScope(self, int(s))
+            local_pri = {jid: priorities.get(jid, 0)
+                         for jid in scope.allocations}
+            plan = pp.plan(scope, n, priority, local_pri, policy,
+                           kind=kind)
+            if plan is not None:
+                return plan
+        return super().preemption_plan(n, priority, priorities,
+                                       policy=policy, preempt=pp,
+                                       kind=kind)
+
+    # ---- migration ----------------------------------------------------------
+    def migration_plan(self, allocs: Sequence[Allocation],
+                       kinds: Optional[Mapping[str, str]] = None,
+                       remaining: Optional[Mapping[str, float]] = None
+                       ) -> List[Tuple[str, Placement]]:
+        """Shard-local defragmentation: a gang inside one shard is
+        re-planned against that shard's slice only (moves never leave
+        the shard); a gang already spanning shards escalates to global
+        planning.  One global scratch map keeps shard-local and
+        escalated plans from double-booking each other."""
+        plans = []
+        free = self.free.copy()
+        for alloc in allocs:
+            shard = self.shard_of_gang(alloc)
+            kind = (kinds or {}).get(alloc.job_id)
+            rem = (remaining or {}).get(alloc.job_id)
+            if shard is None:                 # spans shards: escalate
+                new = self._plan_move(free, alloc, alloc.placement,
+                                      self.heterogeneous, self.speeds,
+                                      kind, rem)
+            else:
+                lo, hi = self.shard_bounds[shard]
+                local = [(h - lo, c) for h, c in alloc.placement]
+                new = self._plan_move(
+                    free[lo:hi], alloc, local, self.shard_hetero[shard],
+                    None if self.speeds is None else self.speeds[lo:hi],
+                    kind, rem)
+                if new is not None:
+                    new = [(h + lo, c) for h, c in new]
+            if new is not None:
+                plans.append((alloc.job_id, new))
+        return plans

@@ -23,7 +23,8 @@ from __future__ import annotations
 from typing import List, Optional, Sequence, Tuple, Union
 
 from repro.core.placement import (Allocation, FixedSlicePolicy,
-                                  PlacementEngine, PlacementPolicy)
+                                  PlacementEngine, PlacementPolicy,
+                                  ShardedPlacementEngine)
 
 __all__ = ["Allocation", "ClusterState"]
 
@@ -32,13 +33,23 @@ class ClusterState:
     """Free-chip accounting for a cluster of hosts — a facade over
     ``PlacementEngine`` keeping the original call signatures.
     ``capacities``/``speeds`` open the heterogeneous-fleet path (ragged
-    hosts, mixed generations) without changing any caller."""
+    hosts, mixed generations) without changing any caller;
+    ``shard_hosts`` runs the facade over the decentralised
+    ``ShardedPlacementEngine`` (host groups of that size) — same
+    signatures, O(shard) decisions."""
 
     def __init__(self, hosts: int, chips_per_host: int,
                  capacities: Optional[Sequence[int]] = None,
-                 speeds: Optional[Sequence[float]] = None):
-        self.engine = PlacementEngine(hosts, chips_per_host,
-                                      capacities=capacities, speeds=speeds)
+                 speeds: Optional[Sequence[float]] = None,
+                 shard_hosts: Optional[int] = None):
+        if shard_hosts is None:
+            self.engine = PlacementEngine(hosts, chips_per_host,
+                                          capacities=capacities,
+                                          speeds=speeds)
+        else:
+            self.engine = ShardedPlacementEngine(
+                hosts, chips_per_host, hosts_per_shard=shard_hosts,
+                capacities=capacities, speeds=speeds)
         self.hosts = hosts
         self.chips_per_host = chips_per_host
 

@@ -23,7 +23,12 @@ from the paper's own microbenchmarks:
   consolidated; cost = snapshot transfer (Fig 14: worth it except >80%
   progress for compute-bound jobs).
 * centralised-scheduler latency: a per-decision cost proportional to the
-  host count (reproduces the 128-VM degradation of Fig 11).
+  host count one decision scans, charged once per scheduling pass
+  (reproduces the 128-VM degradation of Fig 11).  ``sched="sharded"``
+  runs the ``ShardedPlacementEngine``: a decision scans one host-group
+  shard (``SCHED_LATENCY_PER_HOST * hosts_per_shard``) plus
+  ``SCHED_FORWARD_HOP_S`` per shard the summary index forwarded it to —
+  the decentralised fix the paper leaves open.
 
 Every placement goes through ``core.placement.PlacementEngine`` — the same
 code path the live runtime uses — under a selectable policy (binpack /
@@ -63,10 +68,13 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.core import placement as placement_mod
 from repro.core.control import Action
-from repro.core.placement import (Allocation, CostModel, FixedSlicePolicy,
+from repro.core.placement import (DEFAULT_SHARD_HOSTS, Allocation,
+                                  CostModel, FixedSlicePolicy,
                                   PlacementEngine, PlacementPolicy,
-                                  PreemptPolicy, resolve_policy)
+                                  PreemptPolicy, ShardedPlacementEngine,
+                                  resolve_policy)
 
 # Fig 14 calibration now lives on core.placement.CostModel (one model for
 # policies, simulator, and the live fabric); kept as a read-only copy for
@@ -81,6 +89,11 @@ OVERCOMMIT_PENALTY = 1.5          # threads > vCPUs in one container (§6.2)
 MIGRATION_COST_S = 2.0            # snapshot transfer at a barrier point
 PREEMPT_COST_S = 2.0              # snapshot restore when a victim resumes
 SCHED_LATENCY_PER_HOST = 0.004    # centralised scheduler cost (Fig 11)
+# sharded scheduling (the Fig 11 fix): one decision scans one shard
+# (SCHED_LATENCY_PER_HOST * hosts_per_shard) and pays this much per
+# forwarding hop — a summary-index lookup + RPC to a peer shard, far
+# cheaper than scanning the peer's hosts
+SCHED_FORWARD_HOP_S = 0.002
 
 
 @dataclasses.dataclass
@@ -105,11 +118,21 @@ class RunningJob:
     finish_event: int = -1        # heap token (lazy deletion)
     model: CostModel = dataclasses.field(default_factory=CostModel)
     speeds: Optional[np.ndarray] = None      # engine's per-host factors
+    _rate: Optional[float] = None            # cache; placement-invariant
 
     def rate(self) -> float:
         """Fraction of work per second under the current placement —
         the CostModel's T inverted: speed-weighted parallelism over
-        work·(1 + beta_kind·chi)·runtime overheads."""
+        work·(1 + beta_kind·chi)·runtime overheads.
+
+        The value only changes when the placement does, so it is cached
+        and invalidated by ``invalidate_rate()`` on migration — the
+        event loop integrates progress for every running job at every
+        event, and the old per-call recomputation dominated large-fleet
+        replays (``reference_loops()`` restores it for A/B benchmarks).
+        """
+        if self._rate is not None and placement_mod._VECTORIZED:
+            return self._rate
         j = self.job
         overhead = self.model.slowdown(self.alloc.placement, j.kind)
         runtime = WASM_OVERHEAD_OMP if (
@@ -119,7 +142,11 @@ class RunningJob:
         eff = self.model.effective_parallelism(
             self.alloc.placement, self.speeds,
             active=self.eff_parallelism)
-        return eff / (self.job.work * overhead * runtime)
+        self._rate = eff / (self.job.work * overhead * runtime)
+        return self._rate
+
+    def invalidate_rate(self) -> None:
+        self._rate = None
 
 
 @dataclasses.dataclass
@@ -261,7 +288,9 @@ class Simulator:
                  preempt: Union[bool, PreemptPolicy, None] = False,
                  engine: Optional[PlacementEngine] = None,
                  speeds: Optional[Sequence[float]] = None,
-                 cost_model: Optional[CostModel] = None):
+                 cost_model: Optional[CostModel] = None,
+                 sched: str = "central",
+                 shard_hosts: Optional[int] = None):
         """mode: 'granular' (Faabric) or 'slices' (fixed baseline).
 
         ``policy`` selects the granular placement policy (binpack /
@@ -275,11 +304,18 @@ class Simulator:
         ``speeds`` / ``cost_model`` configure a heterogeneous fleet
         (per-host speed factors, e.g. ``hetero_speeds``) and the shared
         job-time model; both land on the built engine.
+        ``sched`` selects the scheduler architecture: 'central' (one
+        engine scanning every host — the Fig 11 degradation) or
+        'sharded' (``ShardedPlacementEngine`` over host groups of
+        ``shard_hosts``; a decision scans one shard and pays
+        ``SCHED_FORWARD_HOP_S`` per forwarding hop).
         ``engine`` adopts an externally-owned (fresh) ``PlacementEngine``
         instead of building one — used by ``core.fabric`` so live
         execution and prediction share one accounting code path; the
-        engine's hosts/capacities/speeds/cost-model override the
-        ``hosts``/``chips_per_host``/``speeds``/``cost_model`` args.
+        engine's hosts/capacities/speeds/cost-model — and its
+        centralised-vs-sharded architecture — override the
+        ``hosts``/``chips_per_host``/``speeds``/``cost_model``/``sched``
+        args.
         """
         if mode == "slices":
             pol: PlacementPolicy = FixedSlicePolicy(slice_size)
@@ -289,12 +325,19 @@ class Simulator:
         # engine: an adopted (fabric-owned) engine keeps its own default
         self.policy = resolve_policy(pol)
         if engine is None:
-            engine = PlacementEngine(hosts, chips_per_host, policy=pol,
-                                     speeds=speeds, cost_model=cost_model)
+            if sched == "sharded":
+                engine = ShardedPlacementEngine(
+                    hosts, chips_per_host,
+                    hosts_per_shard=shard_hosts or DEFAULT_SHARD_HOSTS,
+                    policy=pol, speeds=speeds, cost_model=cost_model)
+            else:
+                assert sched == "central", f"unknown sched mode {sched!r}"
+                engine = PlacementEngine(hosts, chips_per_host,
+                                         policy=pol, speeds=speeds,
+                                         cost_model=cost_model)
         else:
             assert engine.idle_chips() == engine.total_chips, \
                 "adopted engine must be idle at trace start"
-            hosts = engine.hosts
         self.engine = engine
         self.model = engine.cost_model
         self.mode = mode
@@ -308,7 +351,10 @@ class Simulator:
             self.preempt = None
         self.barrier_interval = barrier_interval
         self.backfill = backfill
-        self.sched_latency = SCHED_LATENCY_PER_HOST * hosts
+        # per-decision scheduler latency: the host count one decision
+        # scans — the whole fleet for a centralised engine, one shard
+        # for a sharded one (+ forwarding hops charged per decision)
+        self.sched_latency = SCHED_LATENCY_PER_HOST * engine.sched_hosts
 
     # ---- live-execution hooks (no-ops; see core.fabric) --------------------
     def _on_start(self, rj: RunningJob, resumed: bool) -> None:
@@ -373,9 +419,19 @@ class Simulator:
         pending_arrivals = {j.job_id: j for j in arrivals}
 
         def progress_to(t: float):
-            for rj in running.values():
-                rj.progress += rj.rate() * (t - rj.last_update)
-                rj.last_update = t
+            # runs for every running job at every event: read the
+            # cached per-placement rate directly (reference mode keeps
+            # the pre-PR per-call recomputation)
+            if placement_mod._VECTORIZED:
+                for rj in running.values():
+                    r = rj._rate
+                    rj.progress += (r if r is not None else rj.rate()) \
+                        * (t - rj.last_update)
+                    rj.last_update = t
+            else:
+                for rj in running.values():
+                    rj.progress += rj.rate() * (t - rj.last_update)
+                    rj.last_update = t
 
         def schedule_finish(rj: RunningJob):
             nonlocal token
@@ -386,8 +442,6 @@ class Simulator:
             heapq.heappush(heap, (t_fin, token, FINISH, rj.job.job_id))
 
         def start_job(job: Job, alloc: Allocation):
-            nonlocal now
-            now += self.sched_latency          # centralised scheduler
             rj = RunningJob(job, alloc, start=now, last_update=now,
                             eff_parallelism=self._eff_parallelism(
                                 job, alloc),
@@ -433,6 +487,15 @@ class Simulator:
             return True
 
         def pump_queue():
+            # one scheduling pass: the per-decision scan latency accrues
+            # ONCE per pump (decisions in a pass share one scan of the
+            # fleet/shard state), not once per queued job — the old
+            # per-start bump compounded under a deep backlog and pushed
+            # the clock far past queued finish events.  Forwarding hops
+            # (sharded engine) are genuinely serial per decision and are
+            # charged per started job.
+            nonlocal now
+            charged = False
             i = 0
             while i < len(queue):
                 job = queue[i]
@@ -445,6 +508,10 @@ class Simulator:
                         break
                     i += 1                     # backfill past blocked head
                     continue
+                if not charged:
+                    now += self.sched_latency
+                    charged = True
+                now += SCHED_FORWARD_HOP_S * self.engine.decision_hops
                 start_job(queue.pop(i), alloc)
             idle_samples.append((now, self.engine.idle_fraction()))
 
@@ -487,14 +554,17 @@ class Simulator:
                 candidates = [r.alloc for r in running.values()
                               if self.model.migration_worthwhile(
                                   r.progress)]
-                kinds = {jid: r.job.kind for jid, r in running.items()}
-                remaining = {jid: max(0.0, 1.0 - r.progress) / r.rate()
-                             for jid, r in running.items()}
+                kinds = {a.job_id: running[a.job_id].job.kind
+                         for a in candidates}
+                remaining = {
+                    a.job_id: max(0.0, 1.0 - running[a.job_id].progress)
+                    / running[a.job_id].rate() for a in candidates}
                 for jid, new_pl in self.engine.migration_plan(
                         candidates, kinds=kinds, remaining=remaining):
                     r = running[jid]
                     progress_to(now)
                     r.alloc = self.engine.apply_migration(r.alloc, new_pl)
+                    r.invalidate_rate()        # placement changed
                     r.progress = max(
                         0.0,
                         r.progress - self.model.migration_cost_s * r.rate())

@@ -44,6 +44,14 @@ def main():
                     choices=["uniform", "mixed-gen"],
                     help="mixed-gen models half the hosts as an older "
                          "generation at s=0.5 (CostModel speeds)")
+    ap.add_argument("--sched", default="central",
+                    choices=["central", "sharded"],
+                    help="scheduler architecture: one engine scanning "
+                         "every host, or host-group shards with summary-"
+                         "index forwarding (the Fig 11 fix)")
+    ap.add_argument("--shard-hosts", type=int, default=None,
+                    help="hosts per shard for --sched sharded "
+                         "(default: placement.DEFAULT_SHARD_HOSTS)")
     args = ap.parse_args()
 
     speeds = None
@@ -51,8 +59,13 @@ def main():
         n_hosts = len(derive_capacities(len(jax.devices()),
                                         args.chips_per_host))
         speeds = sim.hetero_speeds(n_hosts)
+    shard_hosts = None
+    if args.sched == "sharded":
+        from repro.core.placement import DEFAULT_SHARD_HOSTS
+        shard_hosts = args.shard_hosts or DEFAULT_SHARD_HOSTS
     fabric = Fabric(chips_per_host=args.chips_per_host,
-                    policy=args.policy, speeds=speeds)
+                    policy=args.policy, speeds=speeds,
+                    shard_hosts=shard_hosts)
     n_chips = fabric.engine.total_chips
     # mixed train/serve trace sized to the local fabric, two priority
     # classes (9:1 high) — the §2.1 shared-cluster economics, live
@@ -79,6 +92,9 @@ def main():
     print(json.dumps({
         "devices": len(jax.devices()),
         "hosts": fabric.engine.hosts,
+        "sched": args.sched,
+        "shard_hosts": (None if shard_hosts is None
+                        else fabric.engine.hosts_per_shard),
         "host_speeds": (None if fabric.engine.speeds is None
                         else list(fabric.engine.speeds)),
         "jobs": len(jobs),

@@ -351,6 +351,57 @@ def test_hetero_fabric_run_trace_matches_prediction():
     """))
 
 
+def test_sharded_fabric_run_trace_matches_prediction():
+    # acceptance: a Fabric built over a ShardedPlacementEngine executes
+    # a real trace whose completion order matches predict_trace (the
+    # clone keeps the sharded architecture), and a single-shard fabric
+    # is placement-for-placement identical to the centralised one
+    print(run_sub("""
+        from repro.core.fabric import Fabric
+        from repro.core.placement import ShardedPlacementEngine
+        from repro.core.simulator import Job
+        from repro.configs.registry import reduced_config
+        from repro.data.pipeline import DataConfig
+        from repro.optim.adamw import AdamWConfig
+        from repro.runtime.gang_workloads import workload_factory
+
+        cfg = reduced_config("llama3.2-1b").with_(n_layers=1, vocab=128)
+        dcfg = DataConfig(vocab=128, seq_len=8, global_batch=8)
+        ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+        jobs = [
+            Job("train-low", "mpi-compute", 6, 300.0, arrival=0.0,
+                priority=0, workload="train"),
+            Job("serve-0", "omp", 2, 120.0, arrival=0.0, priority=1,
+                workload="serve"),
+            Job("train-hi", "mpi-compute", 6, 150.0, arrival=3.0,
+                priority=5, workload="train"),
+        ]
+        # 8 devices, 2 chips/host -> 4 hosts in 2 shards of 2
+        fab = Fabric(chips_per_host=2, shard_hosts=2)
+        assert isinstance(fab.engine, ShardedPlacementEngine)
+        assert fab.engine.n_shards == 2
+        pred = fab.predict_trace(jobs, preempt=True)
+        assert pred.preemptions >= 1
+        ex = fab.run_trace(jobs, workload_factory(cfg, ocfg, dcfg,
+                                                  train_steps=3,
+                                                  serve_tokens=3),
+                           preempt=True)
+        assert ex.result.finish_order == pred.finish_order, (
+            ex.result.finish_order, pred.finish_order)
+        assert ex.result.preemptions == pred.preemptions
+        assert fab.idle_chips() == fab.engine.total_chips
+        print("sharded-trace-ok", ex.result.finish_order)
+
+        # single shard covering the fleet == centralised, live
+        one = Fabric(chips_per_host=2, shard_hosts=4)
+        central = Fabric(chips_per_host=2)
+        p1 = one.predict_trace(jobs, preempt=True)
+        p2 = central.predict_trace(jobs, preempt=True)
+        assert p1.actions == p2.actions
+        print("single-shard-parity-ok")
+    """))
+
+
 def test_run_trace_preempts_and_matches_simulator_prediction():
     # the acceptance trace: >=2 priority classes, a preemption with
     # bit-exact resume, a concurrent train+serve pair, and live per-job

@@ -166,6 +166,62 @@ def test_preemption_conserves_chips_and_work():
     assert res.makespan < base.makespan * 1.5
 
 
+def test_idle_cdf_backlogged_only_both_ways():
+    # samples: backlog era up to drain at t=10, then a long idle tail
+    res = S.TraceResult(
+        makespan=100.0, exec_times=[], migrations=0, waited=[],
+        idle_samples=[(0.0, 0.2), (5.0, 0.4), (10.0, 0.3),
+                      (50.0, 0.9), (100.0, 1.0)],
+        queue_drain_time=10.0)
+    backlog = res.idle_cdf(backlogged_only=True)
+    full = res.idle_cdf(backlogged_only=False)
+    # the backlog-era CDF only sees fragmentation-waste samples
+    assert backlog.max() <= 0.4 and set(np.unique(backlog)) \
+        <= {0.2, 0.3, 0.4}
+    # the full CDF is dominated by the drain-down tail
+    assert full.max() == 1.0
+    assert np.median(full) > np.median(backlog)
+    # degenerate shapes: no drain recorded -> backlogged == full;
+    # a single sample collapses to that value; empty -> [0.0]
+    res.queue_drain_time = 0.0
+    assert np.array_equal(res.idle_cdf(True), res.idle_cdf(False))
+    one = S.TraceResult(makespan=1.0, exec_times=[], migrations=0,
+                        waited=[], idle_samples=[(0.0, 0.7)])
+    assert list(one.idle_cdf()) == [0.7]
+    empty = S.TraceResult(makespan=0.0, exec_times=[], migrations=0,
+                          waited=[], idle_samples=[])
+    assert list(empty.idle_cdf()) == [0.0]
+    # drain before every sample: the guard falls back to the first
+    # sample instead of an empty CDF
+    late = S.TraceResult(makespan=9.0, exec_times=[], migrations=0,
+                         waited=[],
+                         idle_samples=[(5.0, 0.5), (9.0, 0.8)],
+                         queue_drain_time=1.0)
+    assert list(late.idle_cdf(True)) == [0.5]
+
+
+def test_queue_order_deterministic_under_equal_priority_and_arrival():
+    """Equal priority + equal arrival time must resolve by submission
+    order — on a one-host cluster the start order IS the job order, and
+    repeated runs are identical."""
+    jobs = [S.Job(f"j{i}", "mpi-compute", 8, 80.0, arrival=0.0,
+                  priority=3) for i in range(6)]
+    r1 = S.Simulator(1, 8, "granular").run(list(jobs))
+    starts = [a.payload["job"] for a in r1.actions if a.kind == "start"]
+    assert starts == [f"j{i}" for i in range(6)]
+    assert r1.finish_order == starts
+    r2 = S.Simulator(1, 8, "granular").run(list(jobs))
+    assert r1.finish_order == r2.finish_order \
+        and r1.makespan == r2.makespan
+    # same ties arriving *late* (one arrival event carrying equal
+    # priority/arrival) also resolve by submission order
+    late = [S.Job(f"k{i}", "mpi-compute", 8, 80.0, arrival=2.0,
+                  priority=3) for i in range(4)]
+    r3 = S.Simulator(1, 8, "granular").run(list(late))
+    starts = [a.payload["job"] for a in r3.actions if a.kind == "start"]
+    assert starts == [f"k{i}" for i in range(4)]
+
+
 def test_preemption_deterministic_and_actions_shared_vocabulary():
     jobs = lambda: S.mixed_trace(30, seed=5, arrival_rate=0.3,
                                  priority_classes=[(0, 0.7), (3, 0.3)])

@@ -1,0 +1,297 @@
+"""Sharded placement engine + vectorized hot path (PR 4).
+
+Three pillars:
+
+* loop parity — the numpy fill/scoring paths are bit-identical to the
+  preserved pre-PR Python loops (``reference_loops``), pinned both at
+  the primitive level (randomized) and action-for-action on traces;
+* single-shard parity — ``ShardedPlacementEngine`` over one shard
+  covering the fleet reproduces the centralised engine bit-identically
+  (placements AND trace Action logs) for binpack/spread/locality;
+* sharded behaviour — shard-local decisions, forwarding hops, cross-
+  shard split, shard-local preemption/migration with escalation, and
+  the once-per-pump scheduler-latency model.
+"""
+import numpy as np
+import pytest
+
+from repro.core import placement as P
+from repro.core import simulator as S
+from repro.core.placement import (BinpackPolicy, FixedSlicePolicy,
+                                  LocalityScoredPolicy, PlacementEngine,
+                                  ShardedPlacementEngine, SpreadPolicy,
+                                  reference_loops)
+
+
+# ---------------------------------------------------------------------------
+# vectorized == reference loops
+# ---------------------------------------------------------------------------
+def test_fill_primitives_match_reference_loops():
+    rng = np.random.default_rng(0)
+    for trial in range(400):
+        hosts = int(rng.integers(1, 40))
+        cap = int(rng.integers(1, 12))
+        free = rng.integers(0, cap + 1, hosts)
+        n = int(rng.integers(1, max(2, free.sum() + 3)))
+        speeds = (rng.choice([0.5, 0.75, 1.0], hosts)
+                  if trial % 3 == 0 else None)
+        view = P.ClusterView(free, cap, np.full(hosts, cap), speeds)
+        for pol in (BinpackPolicy(), SpreadPolicy(),
+                    LocalityScoredPolicy(), FixedSlicePolicy(2)):
+            kind = ("omp", "mpi-network", "mpi-compute")[trial % 3]
+            a = pol.place(view, n, kind=kind)
+            with reference_loops():
+                b = pol.place(P.ClusterView(free, cap,
+                                            np.full(hosts, cap), speeds),
+                              n, kind=kind)
+            assert a == b, (pol.name, free.tolist(), n, speeds)
+
+
+def test_trace_actions_match_reference_loops():
+    """End-to-end: an arrivals/priorities/preempt/backfill trace under
+    the vectorized hot path is action-for-action identical to the
+    pre-PR loop implementation."""
+    def run(pol):
+        return S.Simulator(16, 8, "granular", policy=pol, migrate=True,
+                           preempt=True, backfill=True).run(
+            S.mixed_trace(60, seed=7, arrival_rate=0.3,
+                          priority_classes=[(0, 0.8), (5, 0.2)]))
+
+    for pol in ("binpack", "spread", "locality"):
+        a = run(pol)
+        with reference_loops():
+            b = run(pol)
+        assert a.actions == b.actions and a.makespan == b.makespan, pol
+
+
+def test_score_batch_matches_scalar_score():
+    m = P.CostModel()
+    rng = np.random.default_rng(1)
+    for trial in range(100):
+        hosts = int(rng.integers(2, 20))
+        speeds = rng.choice([0.5, 1.0], hosts) if trial % 2 else None
+        pls = []
+        for _ in range(int(rng.integers(1, 5))):
+            k = int(rng.integers(1, min(4, hosts) + 1))
+            hs = rng.choice(hosts, k, replace=False)
+            pls.append(sorted((int(h), int(rng.integers(1, 8)))
+                              for h in hs))
+        batch = m.score_batch(pls, "omp", speeds)
+        assert np.allclose(batch, [m.score(p, "omp", speeds)
+                                   for p in pls], rtol=1e-12)
+        assert np.allclose(P._chi_batch(pls),
+                           [P.placement_cross_host_fraction(p)
+                            for p in pls], rtol=1e-12)
+
+
+def test_bind_with_repeated_host_keeps_accounting_consistent():
+    # fancy indexing applies one update per index: a >4-entry external
+    # placement that repeats a host must still account every entry
+    eng = PlacementEngine(8, 8)
+    a = eng.bind("dup", [(0, 3), (0, 3), (1, 1), (2, 1), (3, 1)])
+    assert eng.free[0] == 2
+    assert eng.idle_chips() == int(eng.free.sum()) == 64 - 9
+    eng.release(a)
+    assert eng.idle_chips() == eng.total_chips
+    # and over-subscribing via duplicates still trips the assert
+    with pytest.raises(AssertionError):
+        eng.bind("over", [(0, 5), (0, 5), (1, 1), (2, 1), (3, 1)])
+
+
+def test_incremental_summaries_track_free_map():
+    rng = np.random.default_rng(2)
+    eng = ShardedPlacementEngine(12, 8, hosts_per_shard=4,
+                                 speeds=[0.5] * 6 + [1.0] * 6)
+    allocs = {}
+    for i in range(200):
+        if allocs and rng.random() < 0.45:
+            jid = sorted(allocs)[int(rng.integers(len(allocs)))]
+            eng.release(allocs.pop(jid))
+        else:
+            a = eng.allocate(f"j{i}", int(rng.integers(1, 20)),
+                             policy=("binpack", "spread",
+                                     "locality")[i % 3])
+            if a is not None:
+                allocs[a.job_id] = a
+        assert eng.idle_chips() == int(eng.free.sum())
+        assert eng.idle_throughput() == pytest.approx(
+            float((eng.free * eng.speeds).sum()))
+        for s, (lo, hi) in enumerate(eng.shard_bounds):
+            assert eng._shard_idle[s] == eng.free[lo:hi].sum()
+    for a in allocs.values():
+        eng.release(a)
+    assert eng.idle_chips() == eng.total_chips
+
+
+# ---------------------------------------------------------------------------
+# single-shard parity (acceptance): sharded == centralised, bit-exact
+# ---------------------------------------------------------------------------
+def test_single_shard_engine_decisions_bit_identical():
+    rng = np.random.default_rng(3)
+    for speeds in (None, [0.5] * 8 + [1.0] * 8):
+        c = PlacementEngine(16, 8, policy="locality", speeds=speeds)
+        s = ShardedPlacementEngine(16, 8, hosts_per_shard=16,
+                                   policy="locality", speeds=speeds)
+        live = {}
+        for i in range(250):
+            if live and rng.random() < 0.4:
+                jid = sorted(live)[int(rng.integers(len(live)))]
+                ac, as_ = live.pop(jid)
+                c.release(ac), s.release(as_)
+            else:
+                n = int(rng.integers(1, 20))
+                pol = ("binpack", "spread", "locality")[i % 3]
+                kind = ("mpi-compute", "omp", "mpi-network")[i % 3]
+                ac = c.allocate(f"j{i}", n, policy=pol, kind=kind)
+                as_ = s.allocate(f"j{i}", n, policy=pol, kind=kind)
+                assert (ac is None) == (as_ is None)
+                if ac is not None:
+                    assert ac.placement == as_.placement
+                    assert s.decision_hops == 0
+                    live[f"j{i}"] = (ac, as_)
+            pri = {j: 0 for j in live}
+            assert c.preemption_plan(10, 5, pri) \
+                == s.preemption_plan(10, 5, pri)
+            kinds = {j: "mpi-network" for j in live}
+            pc = c.migration_plan([a for a, _ in live.values()], kinds,
+                                  {j: 50.0 for j in live})
+            ps = s.migration_plan([a for _, a in live.values()], kinds,
+                                  {j: 50.0 for j in live})
+            assert pc == ps
+            assert np.array_equal(c.free, s.free)
+
+
+def test_single_shard_trace_actions_bit_identical():
+    """Acceptance: one shard covering the whole fleet produces
+    bit-identical trace Action logs to the centralised engine for every
+    granular policy on the standard mixed trace."""
+    jobs = S.mixed_trace(60, seed=7)
+    for pol in ("binpack", "spread", "locality"):
+        central = S.Simulator(16, 8, "granular", policy=pol,
+                              migrate=True).run(list(jobs))
+        sharded = S.Simulator(16, 8, "granular", policy=pol,
+                              migrate=True, sched="sharded",
+                              shard_hosts=16).run(list(jobs))
+        assert sharded.actions == central.actions, pol
+        assert sharded.makespan == central.makespan
+
+
+# ---------------------------------------------------------------------------
+# sharded behaviour
+# ---------------------------------------------------------------------------
+def test_sharded_placement_stays_shard_local_and_forwards():
+    eng = ShardedPlacementEngine(32, 8, hosts_per_shard=8)
+    a = eng.allocate("a", 12)
+    assert {h // 8 for h, _ in a.placement} == {0}
+    assert eng.decision_hops == 0
+    blockers = [eng.allocate(f"b{s}", 60, policy="spread")
+                for s in (1, 2, 3)]
+    assert all(b is not None for b in blockers)
+    # 52 chips only fit shard 0 now — the summary index routes there
+    big = eng.allocate("big", 52)
+    assert {h // 8 for h, _ in big.placement} == {0}
+    # idle: shard0 = 0, shards 1-3 = 4 each -> a 10-gang must split
+    split = eng.allocate("split", 10)
+    assert len({h // 8 for h, _ in split.placement}) > 1
+    assert split.n == 10 and eng.decision_hops >= 1
+
+
+def test_sharded_split_conserves_and_releases():
+    eng = ShardedPlacementEngine(24, 8, hosts_per_shard=8)
+    gangs = [eng.allocate(f"g{i}", 30) for i in range(6)]
+    assert all(g is not None for g in gangs)
+    assert eng.idle_chips() == 24 * 8 - 180
+    for g in gangs:
+        eng.release(g)
+    assert eng.idle_chips() == eng.total_chips
+    assert list(eng._shard_idle) == [64, 64, 64]
+
+
+def test_sharded_preemption_shard_local_then_escalates():
+    eng = ShardedPlacementEngine(16, 8, hosts_per_shard=8)
+    eng.allocate("low-a", 60)          # fills most of shard 0
+    eng.allocate("low-b", 60)          # fills most of shard 1
+    pri = {"low-a": 0, "low-b": 0}
+    # one shard's eviction suffices: plan stays shard-local (1 victim)
+    plan = eng.preemption_plan(60, 5, pri)
+    assert plan is not None and len(plan) == 1
+    # an arrival bigger than any shard escalates cross-shard
+    plan = eng.preemption_plan(100, 5, pri)
+    assert plan is not None and set(plan) == {"low-a", "low-b"}
+    # nothing outranked -> no plan anywhere
+    assert eng.preemption_plan(60, 0, pri) is None
+
+
+def test_sharded_migration_shard_local_with_escalation():
+    eng = ShardedPlacementEngine(6, 8, hosts_per_shard=2)
+    frag = eng.bind("frag", [(0, 2), (1, 2)])     # inside shard 0
+    cross = eng.bind("cross", [(3, 2), (4, 2)])   # spans shards 1-2
+    plans = dict(eng.migration_plan([frag, cross]))
+    # shard-local gang consolidates inside its own shard
+    assert len(plans["frag"]) == 1
+    assert {h // 2 for h, _ in plans["frag"]} == {0}
+    # the cross-shard gang escalates to global planning and consolidates
+    assert len(plans["cross"]) == 1
+    eng.apply_migration(frag, plans["frag"])
+    eng.apply_migration(cross, plans["cross"])
+    assert eng.idle_chips() == eng.total_chips - 8
+
+
+def test_sharded_simulator_latency_model():
+    # single shard == centralised latency; small shards cut the
+    # per-decision term to hosts_per_shard and add forwarding hops
+    jobs = [S.Job(f"j{i}", "mpi-compute", 8, 80.0) for i in range(4)]
+    central = S.Simulator(32, 8, "granular").run(list(jobs))
+    sharded = S.Simulator(32, 8, "granular", sched="sharded",
+                          shard_hosts=8).run(list(jobs))
+    lat_c = S.SCHED_LATENCY_PER_HOST * 32
+    lat_s = S.SCHED_LATENCY_PER_HOST * 8
+    # all four jobs start in the first pump: one latency charge each
+    assert central.makespan == pytest.approx(80.0 / 8 + lat_c)
+    assert sharded.makespan == pytest.approx(80.0 / 8 + lat_s)
+    assert sharded.makespan < central.makespan
+
+
+def test_sharded_beats_central_makespan_at_scale():
+    """The Fig 11 fix, in miniature: at 128 hosts the centralised
+    per-decision scan cost dominates queue-era scheduling; sharding
+    cuts it and the simulated makespan drops."""
+    jobs = S.mixed_trace(256, seed=128, arrival_rate=2.0)
+    central = S.Simulator(128, 8, "granular", policy="binpack",
+                          migrate=False).run(list(jobs))
+    sharded = S.Simulator(128, 8, "granular", policy="binpack",
+                          migrate=False, sched="sharded",
+                          shard_hosts=16).run(list(jobs))
+    assert sharded.makespan < central.makespan
+
+
+# ---------------------------------------------------------------------------
+# once-per-pump scheduler latency (the monotone-clock fix)
+# ---------------------------------------------------------------------------
+def test_deep_backlog_latency_accrues_once_per_pump():
+    """A deep t=0 backlog that fits concurrently is one scheduling
+    pass: every gang starts after a single latency charge, and the
+    makespan no longer compounds per queued job (the pre-fix behaviour
+    charged k * latency for the k-th job of the pump)."""
+    hosts, k = 64, 64
+    jobs = [S.Job(f"j{i}", "mpi-compute", 8, 80.0) for i in range(k)]
+    res = S.Simulator(hosts, 8, "granular", migrate=False).run(jobs)
+    lat = S.SCHED_LATENCY_PER_HOST * hosts
+    starts = [a.payload["t"] for a in res.actions if a.kind == "start"]
+    assert len(starts) == k
+    assert all(t == pytest.approx(lat) for t in starts)
+    # one host each (chi = 0): exec = 80/8 = 10s; the pre-fix makespan
+    # would have compounded to ~k*lat + 10
+    assert res.makespan == pytest.approx(10.0 + lat)
+    assert res.makespan < 10.0 + 2 * lat
+
+
+def test_blocked_queue_pumps_do_not_charge_latency():
+    # a pump that places nothing must not move the clock
+    jobs = [S.Job("big", "mpi-compute", 8, 80.0),
+            S.Job("blocked", "mpi-compute", 8, 160.0)]
+    res = S.Simulator(1, 8, "granular").run(jobs)
+    lat = S.SCHED_LATENCY_PER_HOST * 1
+    # second job starts right after the first finishes + one charge
+    t2 = [a.payload["t"] for a in res.actions if a.kind == "start"][1]
+    assert t2 == pytest.approx(80.0 / 8 + 2 * lat)
