@@ -1,0 +1,178 @@
+"""Fleet churn: makespan inflation vs reclaim rate, drain deadlines,
+and the checkpoint-cadence sweep (core.fleet).
+
+Three measurements on a saturated (queue-dominated) mixed arrival
+trace, each averaged over three churn-schedule seeds:
+
+* **makespan inflation vs reclaim rate** — the spot-heavy regime
+  (Poisson lease reclaims with like-for-like rejoins) at increasing
+  disruption rates, central vs sharded: how much a churning fleet costs
+  against the churn-free baseline, and whether the decentralised
+  engine's shard-local decisions absorb churn better.
+
+* **drain-deadline length** — the same reclaim wave with 0..30 s drain
+  windows: a longer warning converts checkpoint-rollback *recoveries*
+  (lost work) into graceful *evacuations* (a migration charge).
+
+* **checkpoint-interval sweep** (Young/Daly) — under a hard-failure
+  wave (no drain warning), sweep the periodic checkpoint cadence:
+  checkpoint too often and the ``CostModel.checkpoint_cost_s`` overhead
+  inflates every gang; too rarely and each failure rolls a gang far
+  back (``TraceResult.lost_work_s`` grows monotonically with the
+  interval).  The makespan optimum is interior, and
+  ``fleet.optimal_checkpoint_interval`` (tau* = sqrt(2·delta·MTBF), fed
+  by ``churn_mtbf``) lands near it.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import fleet as F
+from repro.core import simulator as S
+
+SHARD_HOSTS = 16
+SEEDS = (11, 19, 31)
+# fleet config stamped into results/BENCH_bench_churn.json by run.py
+FLEET = {"hosts": 32, "chips_per_host": 8,
+         "sched": ["central", "sharded"], "shard_hosts": SHARD_HOSTS,
+         "policy": "binpack", "regimes": list(F.CHURN_REGIMES),
+         "schedule_seeds": list(SEEDS)}
+
+
+def _sim(hosts, sched="central", ckpt=None):
+    return S.Simulator(hosts, 8, "granular", migrate=True,
+                       policy="binpack", sched=sched,
+                       shard_hosts=SHARD_HOSTS,
+                       checkpoint_interval=ckpt)
+
+
+def _fail_schedule(hosts, horizon, seed, rate, cph=8, rejoin=4.0):
+    """Hard-failure wave: Poisson host failures (no drain warning) over
+    the upper half of the fleet, each replaced by a like-for-like join
+    a lease-turnaround later — the regime the checkpoint-cadence sweep
+    needs (reclaims would evacuate gracefully and lose nothing)."""
+    rng = np.random.default_rng([seed, 41])
+    removable = list(range((hosts + 1) // 2, hosts))
+    rng.shuffle(removable)
+    events, t = [], 0.0
+    while removable:
+        t += float(rng.exponential(1.0 / rate))
+        if t >= horizon:
+            break
+        k = min(len(removable), int(rng.integers(1, 3)))
+        hs = sorted(removable.pop() for _ in range(k))
+        events.append(F.FleetEvent(t, "fail", hosts=hs))
+        events.append(F.FleetEvent(t + rejoin, "join",
+                                   capacities=[cph] * k))
+    return events
+
+
+def _mean_over_seeds(sim_fn, jobs, make_events):
+    mks, recs, evs, losts, ovhs = [], [], [], [], []
+    for seed in SEEDS:
+        sim = sim_fn()
+        r = sim.run(list(jobs), fleet_events=make_events(seed))
+        assert len(r.finish_order) == len(jobs), "jobs stranded"
+        mks.append(r.makespan)
+        recs.append(r.recoveries)
+        evs.append(r.evacuations)
+        losts.append(r.lost_work_s)
+        # the quantity Young/Daly minimises: gang-seconds paused for
+        # checkpoint saves + gang-seconds rolled back at failures
+        n_ckpt = sum(1 for a in r.actions if a.kind == "checkpoint")
+        ovhs.append(n_ckpt * sim.model.checkpoint_cost_s
+                    + r.lost_work_s)
+    return (float(np.mean(mks)), float(np.mean(recs)),
+            float(np.mean(evs)), float(np.mean(losts)),
+            float(np.mean(ovhs)))
+
+
+def run(report, tiny=False):
+    hosts = 12 if tiny else 32
+    njobs = 40 if tiny else 160
+    # queue-dominated: arrivals outpace service, so reclaimed capacity
+    # and rolled-back work genuinely extend the critical path
+    jobs = S.mixed_trace(njobs, seed=5, chips_per_host=8,
+                         arrival_rate=njobs / 150.0)
+    base = {sched: _sim(hosts, sched).run(list(jobs))
+            for sched in ("central", "sharded")}
+    horizon = base["central"].makespan
+    for sched in ("central", "sharded"):
+        report(f"baseline/makespan_{sched}",
+               round(base[sched].makespan, 1), "s", "churn-free")
+
+    # ---- makespan inflation vs reclaim rate (spot-heavy) ----
+    rates = (0.01, 0.04) if tiny else (0.005, 0.01, 0.02, 0.04)
+    for rate in rates:
+        for sched in ("central", "sharded"):
+            mk, rec, ev, lost, _ = _mean_over_seeds(
+                lambda: _sim(hosts, sched), jobs,
+                lambda seed: F.churn_schedule(
+                    "spot-heavy", hosts, 8, horizon, seed=seed,
+                    rate=rate, drain_s=5.0))
+            infl = (mk - base[sched].makespan) \
+                / base[sched].makespan * 100.0
+            report(f"reclaim_rate/{rate}/inflation_pct_{sched}",
+                   round(infl, 2), "% makespan",
+                   f"mean over {len(SEEDS)} schedules, 5s drains")
+            if sched == "central":
+                report(f"reclaim_rate/{rate}/recoveries", round(rec, 1),
+                       "jobs", "requeued from checkpoint")
+                report(f"reclaim_rate/{rate}/evacuations", round(ev, 1),
+                       "gangs", "graceful drain moves")
+                report(f"reclaim_rate/{rate}/lost_work_s",
+                       round(lost, 1), "s", "work rolled back")
+
+    # ---- drain-deadline length: recoveries -> evacuations ----
+    drains = (0.0, 8.0) if tiny else (0.0, 2.0, 8.0, 30.0)
+    rate = 0.02
+    for drain_s in drains:
+        mk, rec, ev, _, _ = _mean_over_seeds(
+            lambda: _sim(hosts), jobs,
+            lambda seed: F.churn_schedule(
+                "spot-heavy", hosts, 8, horizon, seed=seed + 2,
+                rate=rate, drain_s=drain_s))
+        infl = (mk - base["central"].makespan) \
+            / base["central"].makespan * 100.0
+        report(f"drain_s/{drain_s}/inflation_pct", round(infl, 2),
+               "% makespan", f"reclaim rate {rate}/s")
+        report(f"drain_s/{drain_s}/evacuations", round(ev, 1),
+               "gangs", "graceful moves (longer drains -> more)")
+        report(f"drain_s/{drain_s}/recoveries", round(rec, 1),
+               "jobs", "hard rollbacks (longer drains -> fewer)")
+
+    # ---- checkpoint-interval sweep (Young/Daly) ----
+    fail_rate = 0.04
+    taus = (4.0, 16.0, 64.0) if tiny else (2.0, 4.0, 8.0, 16.0, 32.0,
+                                           64.0, 128.0)
+    best_tau, best_ovh = None, float("inf")
+    for tau in taus:
+        mk, rec, _, lost, ovh = _mean_over_seeds(
+            lambda: _sim(hosts, ckpt=tau), jobs,
+            lambda seed: _fail_schedule(hosts, horizon, seed + 6,
+                                        fail_rate))
+        report(f"ckpt_interval/{tau}/makespan", round(mk, 1),
+               "s", f"~{round(rec)} failures/run")
+        report(f"ckpt_interval/{tau}/lost_work_s", round(lost, 1),
+               "s", "rolled back at failures (monotone in tau)")
+        report(f"ckpt_interval/{tau}/overhead_s", round(ovh, 1),
+               "s", "checkpoint pauses + lost work (the Young/Daly "
+                    "objective)")
+        if ovh < best_ovh:
+            best_tau, best_ovh = tau, ovh
+    mk, _, _, lost, ovh = _mean_over_seeds(
+        lambda: _sim(hosts), jobs,
+        lambda seed: _fail_schedule(hosts, horizon, seed + 6,
+                                    fail_rate))
+    report("ckpt_interval/none/makespan", round(mk, 1), "s",
+           "failures roll back to job start")
+    report("ckpt_interval/none/overhead_s", round(ovh, 1), "s",
+           "pure lost work: worse than every swept cadence")
+    report("ckpt_interval/best_tau", best_tau, "s",
+           "acceptance: interior optimum (edges of the sweep lose)")
+    events = _fail_schedule(hosts, horizon, SEEDS[0] + 6, fail_rate)
+    mtbf = F.churn_mtbf(events, horizon, hosts=hosts)
+    tau_star = F.optimal_checkpoint_interval(mtbf,
+                                             checkpoint_cost_s=0.5)
+    report("ckpt_interval/young_daly_tau", round(tau_star, 1), "s",
+           f"sqrt(2*delta*MTBF), MTBF={round(mtbf, 1)}s")

@@ -5,8 +5,13 @@ one benchmark; results land in results/bench.csv plus one standardized
 ``results/BENCH_<name>.json`` per benchmark (schema below) so the perf
 trajectory is machine-readable across PRs:
 
-    {"bench": str, "schema": 1, "unix_time": float, "wall_s": float,
+    {"bench": str, "schema": 2, "unix_time": float, "wall_s": float,
+     "git_sha": str, "fleet": {...},
      "metrics": {name: {"value": num, "unit": str, "note": str}}}
+
+``git_sha`` is the commit the numbers were measured at and ``fleet``
+the benchmark module's ``FLEET`` dict (hosts / chips-per-host /
+scheduler config), so an artifact is attributable without the CSV.
 
 ``--tiny`` runs every benchmark at smoke sizes (the CI bench-smoke
 step): artifacts then land as ``results/SMOKE_<name>.json`` so the
@@ -21,6 +26,7 @@ import importlib
 import inspect
 import json
 import os
+import subprocess
 import sys
 import time
 
@@ -31,22 +37,44 @@ BENCHES = [
     "bench_message_passing",  # Fig 13 / Fig 9
     "bench_migration",        # Fig 14
     "bench_scheduler_scale",  # Fig 11 fix: sharded + vectorized engine
+    "bench_churn",            # fleet churn: reclaim/fail + Young/Daly
 ]
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
 OUT = os.path.join(RESULTS_DIR, "bench.csv")
 
 
+def git_sha() -> str:
+    """Short SHA of the commit the numbers were measured at, with a
+    ``-dirty`` marker when the working tree has uncommitted changes."""
+    cwd = os.path.dirname(os.path.abspath(__file__))
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10, cwd=cwd)
+        sha = out.stdout.strip()
+        if not sha:
+            return "unknown"
+        status = subprocess.run(
+            ["git", "status", "--porcelain"],
+            capture_output=True, text=True, timeout=10, cwd=cwd)
+        return sha + ("-dirty" if status.stdout.strip() else "")
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
 def write_bench_json(bench: str, metrics, wall_s: float,
-                     tiny: bool = False) -> str:
+                     tiny: bool = False, fleet=None) -> str:
     prefix = "SMOKE" if tiny else "BENCH"
     path = os.path.join(os.path.abspath(RESULTS_DIR),
                         f"{prefix}_{bench}.json")
     payload = {
         "bench": bench,
-        "schema": 1,
+        "schema": 2,
         "unix_time": time.time(),
         "wall_s": round(wall_s, 2),
+        "git_sha": git_sha(),
+        "fleet": dict(fleet or {}),
         "metrics": {name: {"value": value, "unit": unit, "note": note}
                     for name, value, unit, note in metrics},
     }
@@ -87,7 +115,8 @@ def main() -> None:
         wall = time.time() - t0
         rows.append((mod_name, "bench_wall", round(wall, 1), "s", ""))
         path = write_bench_json(mod_name, current_metrics, wall,
-                                tiny=args.tiny)
+                                tiny=args.tiny,
+                                fleet=getattr(mod, "FLEET", None))
         assert current_metrics, f"{mod_name} reported no metrics"
         print(f"# wrote {path}")
     if not args.tiny:

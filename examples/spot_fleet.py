@@ -1,0 +1,98 @@
+"""Spot fleet end-to-end: a train+serve tenant mix rides out a
+spot-reclaim wave — the serving gang drains *gracefully* off its
+reclaimed host (live evacuation, zero lost requests), the training gang
+loses its host to a hard failure and recovers *bit-exactly* from its
+last snapshot, and a replacement host leases in from the spare pool
+(core.fleet + the rFaaS-style reclaimable-executor story).
+
+Run:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python examples/spot_fleet.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs.registry import reduced_config
+from repro.core.fabric import Fabric
+from repro.core.fleet import FleetEvent
+from repro.core.simulator import Job
+from repro.data.pipeline import DataConfig
+from repro.optim.adamw import AdamWConfig
+from repro.runtime.gang_workloads import workload_factory
+
+
+def main():
+    cfg = reduced_config("llama3.2-1b").with_(n_layers=1, vocab=128)
+    dcfg = DataConfig(vocab=128, seq_len=8, global_batch=8, seed=0)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+
+    devs = jax.devices()
+    assert len(devs) >= 8, "run with host_platform_device_count=8"
+    # 3 leased hosts of 2 chips; one spare host staged for the rejoin
+    fabric = Fabric(devices=devs[:6], chips_per_host=2,
+                    spares=devs[6:8])
+    print(f"fabric: {fabric.engine.hosts} hosts x 2 chips, "
+          f"{len(fabric.spares)} spare chips staged")
+
+    serve_tokens = 4
+    jobs = [
+        Job("serve-0", "omp", 2, 150.0, arrival=0.0, priority=1,
+            workload="serve"),
+        Job("train-0", "mpi-compute", 2, 180.0, arrival=0.0,
+            workload="train"),
+    ]
+    # the spot wave: the serve gang's host is lease-reclaimed with a
+    # drain window (graceful), the train gang's host hard-fails with no
+    # warning, and a replacement host joins from the spares
+    wave = [
+        FleetEvent(5.0, "reclaim", hosts=[2], drain_s=20.0),
+        FleetEvent(8.0, "fail", hosts=[1]),
+        FleetEvent(12.0, "join", capacities=[2]),
+    ]
+
+    predicted = fabric.predict_trace(jobs, preempt=True,
+                                     fleet_events=wave,
+                                     checkpoint_interval=4.0)
+    ex = fabric.run_trace(
+        jobs, workload_factory(cfg, ocfg, dcfg, train_steps=4,
+                               serve_tokens=serve_tokens),
+        preempt=True, fleet_events=wave, checkpoint_interval=4.0)
+    res = ex.result
+
+    print("churn events:", [(a.kind, a.payload.get("hosts"))
+                            for a in res.actions
+                            if a.kind in ("drain", "evacuate",
+                                          "host-fail", "recover",
+                                          "join", "retire")])
+    assert res.actions == predicted.actions, \
+        "live churn diverged from the simulator's prediction"
+    assert res.evacuations >= 1, "serve gang should drain gracefully"
+    assert res.recoveries >= 1, "train gang should recover from snapshot"
+    assert set(res.finish_order) == {j.job_id for j in jobs}
+
+    # zero lost serve requests: every request decoded its full budget,
+    # and the serve gang was never rolled back
+    serve = ex.live["serve-0"]
+    outputs = serve["final_metrics"]["outputs"]
+    assert all(len(o) == serve_tokens for o in outputs), outputs
+    assert serve.get("failures", 0) == 0
+    print(f"serve-0 drained gracefully: {len(outputs)} requests x "
+          f"{serve_tokens} tokens, zero lost ({outputs})")
+
+    train = ex.live["train-0"]
+    assert train.get("failures", 0) >= 1
+    assert train["resumes_verified"] >= 1
+    print(f"train-0 survived the hard failure: "
+          f"{train['failures']} failure(s), "
+          f"{train['resumes_verified']} bit-exact resume(s), "
+          f"final loss {train['final_metrics']['loss']:.4f}")
+    print("spot wave survived: completion order", res.finish_order,
+          "makespan", round(res.makespan, 1), "s ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -35,6 +35,18 @@ live runtime:
   placement code path, the live per-job completion order is directly
   comparable with the simulated prediction for the same trace.
 
+* **Fleet churn, live** (``core.fleet``): hosts lease in and out under
+  running gangs.  A ``join`` pulls staged spare devices into the pool;
+  a ``reclaim`` drains hosts — affected gangs move through the shared
+  evacuation planner (the ``GangHandle.migrate`` machinery: live
+  reshard + in-place re-address) — and a hard ``fail`` drops a gang's
+  devices mid-run: the gang falls back to its *last checkpoint
+  snapshot* (``GangHandle.checkpoint`` / the trace runner's periodic
+  ``checkpoint_interval``) and later resumes bit-exactly
+  (fingerprint-verified) through the same preemption-resume machinery.
+  ``Fabric.fail_hosts`` / ``Fabric.reclaim_hosts`` expose the same
+  semantics to direct (non-trace) drivers.
+
 Workload protocol (implemented by ``runtime.gang_workloads``): a gang's
 payload is any object with
 
@@ -145,6 +157,9 @@ class GangHandle:
         self.group: Optional[GranuleGroup] = None
         self.mesh: Optional[Mesh] = None
         self.snapshot: Optional[snap_mod.Snapshot] = None
+        # the periodic checkpoint a hard host failure falls back to
+        # (kept separate from ``snapshot``, which preempt/resume consume)
+        self.last_checkpoint: Optional[snap_mod.Snapshot] = None
         self.status = "created"     # created|running|preempted|released
         self.control: Optional[ctl.ControlPointRunner] = None
         self.epoch_log: List[Dict[str, Any]] = []
@@ -188,7 +203,20 @@ class GangHandle:
             return []
         return self.control.on_step(step, step_time, len(self.devices))
 
-    # ---- migrate -----------------------------------------------------------
+    # ---- migrate / evacuate ------------------------------------------------
+    def _move_to(self, state: Any, new_devices: List[Any],
+                 log_kind: str) -> Any:
+        """Live placement move: reshard state onto ``new_devices`` and
+        re-address the group in place (queues + epoch survive)."""
+        state, _ = elastic_mod.reshard_gang(state, new_devices)
+        self.devices = new_devices
+        self.group.readdress([(self.fabric.host_of(d), d)
+                              for d in new_devices])
+        self.mesh = make_gang_mesh(new_devices, self.pods)
+        self.epoch_log.append({"kind": log_kind,
+                               "epoch": self.group.epoch})
+        return state
+
     def migrate(self, state: Any) -> Tuple[Any, bool]:
         """Barrier-point live migration (paper §3.3, Fig 8).
 
@@ -209,14 +237,21 @@ class GangHandle:
         else:
             new_devices = self.devices[1:] + self.devices[:1]
         changed = new_devices != self.devices
-        state, _ = elastic_mod.reshard_gang(state, new_devices)
-        self.devices = new_devices
-        self.group.readdress([(self.fabric.host_of(d), d)
-                              for d in new_devices])
-        self.mesh = make_gang_mesh(new_devices, self.pods)
-        self.epoch_log.append({"kind": "migrate",
-                               "epoch": self.group.epoch})
+        state = self._move_to(state, new_devices, "migrate")
         return state, changed
+
+    def evacuate(self, state: Any,
+                 new_placement: Sequence[Tuple[int, int]]) -> Any:
+        """Apply a drain-evacuation plan (``evacuation_plan``): engine
+        move + live reshard through the migrate machinery.  The vacated
+        draining-host chips retire on release; their devices never
+        return to the pool."""
+        assert self.status == "running"
+        self.alloc = self.fabric.engine.apply_migration(self.alloc,
+                                                        new_placement)
+        self.fabric.reclaim(self.devices)     # draining devices dropped
+        new_devices = self.fabric.claim(new_placement)
+        return self._move_to(state, new_devices, "evacuate")
 
     # ---- rescale -----------------------------------------------------------
     def rescale(self, state: Any, new_world: int) -> Any:
@@ -247,6 +282,41 @@ class GangHandle:
         self.epoch_log.append({"kind": "rescale", "to": new_world,
                                "epoch": self.group.epoch})
         return state
+
+    # ---- checkpoint / fail (fleet churn) ------------------------------------
+    def checkpoint(self, state: Any, step: int) -> snap_mod.Snapshot:
+        """Periodic checkpoint: snapshot the gang's state to host memory
+        without releasing anything — the rollback point a hard host
+        failure falls back to (``fail``)."""
+        self.last_checkpoint = snap_mod.take(self.job_id, step, state)
+        self.epoch_log.append(
+            {"kind": "checkpoint", "step": step,
+             "fingerprint": self.last_checkpoint.fingerprint})
+        return self.last_checkpoint
+
+    def fail(self, dead_hosts: Sequence[int]) -> snap_mod.Snapshot:
+        """A host under this gang hard-failed: the live state is gone.
+        Surviving devices return to the pool (dead/draining ones are
+        dropped by ``Fabric.reclaim``), and the gang becomes
+        ``preempted`` with its *last checkpoint* as the resume snapshot
+        — ``resume`` then restores it bit-exactly on a fresh placement.
+        Engine accounting is already settled by
+        ``PlacementEngine.fail_hosts``; the caller requeues the job."""
+        assert self.status == "running"
+        assert self.last_checkpoint is not None, \
+            f"{self.job_id}: host failed before any checkpoint was taken"
+        dead = {int(h) for h in dead_hosts}
+        survivors = [d for d in self.devices
+                     if self.fabric.host_of(d) not in dead]
+        self.fabric.reclaim(survivors)
+        self.devices = []
+        self.alloc = None
+        self.snapshot = self.last_checkpoint
+        self.status = "preempted"
+        self.epoch_log.append(
+            {"kind": "fail", "step": self.last_checkpoint.step,
+             "fingerprint": self.last_checkpoint.fingerprint})
+        return self.snapshot
 
     # ---- preempt / resume ---------------------------------------------------
     def preempt(self, state: Any, step: int,
@@ -334,7 +404,9 @@ class Fabric:
                  preempt: Optional[PreemptPolicy] = None,
                  speeds: Optional[Sequence[float]] = None,
                  cost_model: Optional[CostModel] = None,
-                 shard_hosts: Optional[int] = None):
+                 shard_hosts: Union[int, str, None] = None,
+                 steal_budget: int = 0,
+                 spares: Optional[Sequence[Any]] = None):
         self.devices = list(devices if devices is not None
                             else jax.devices())
         assert self.devices, "empty fabric"
@@ -350,17 +422,30 @@ class Fabric:
             self.engine = ShardedPlacementEngine.for_chips(
                 len(self.devices), chips_per_host, policy=policy,
                 speeds=speeds, cost_model=cost_model,
-                hosts_per_shard=shard_hosts)
-        n_hosts = self.engine.hosts
+                hosts_per_shard=shard_hosts, steal_budget=steal_budget)
         self.preempt = preempt or PreemptPolicy()
         self.gangs: Dict[str, GangHandle] = {}
-        self._free: List[List[Any]] = [
-            self.devices[h * chips_per_host:(h + 1) * chips_per_host]
-            for h in range(n_hosts)]
+        # device -> host map (explicit: joined hosts and ragged hosts
+        # break the old index//chips_per_host arithmetic) and per-host
+        # free pools, both laid out by the engine's capacity runs
+        self._dev_host: Dict[Any, int] = {}
+        self._free: List[List[Any]] = []
+        i = 0
+        for h, cap in enumerate(self.engine.capacities):
+            group = self.devices[i:i + int(cap)]
+            i += int(cap)
+            for d in group:
+                self._dev_host[d] = h
+            self._free.append(group)
+        # fleet churn: staged spare devices (future joins draw from
+        # them) and hosts whose devices must never re-enter the pool
+        self.spares: List[Any] = list(spares or [])
+        self._draining_hosts: set = set()
+        self._retired_hosts: set = set()
 
     # ---- device pool -------------------------------------------------------
     def host_of(self, device: Any) -> int:
-        return self._dev_index[device] // self.chips_per_host
+        return self._dev_host[device]
 
     def claim(self, placement: Sequence[Tuple[int, int]]) -> List[Any]:
         """Take the lowest-indexed free devices matching an engine
@@ -381,13 +466,126 @@ class Fabric:
         return list(devices)
 
     def reclaim(self, devices: Sequence[Any]) -> None:
+        doomed = self._draining_hosts | self._retired_hosts
         for d in devices:
-            self._free[self.host_of(d)].append(d)
+            h = self.host_of(d)
+            if h in doomed:
+                continue              # the provider has these back
+            self._free[h].append(d)
         for pool in self._free:
             pool.sort(key=self._dev_index.__getitem__)
 
     def idle_chips(self) -> int:
         return self.engine.idle_chips()
+
+    # ---- fleet churn (pool side; engine accounting via core.fleet) ---------
+    def take_spares(self, n: int) -> List[Any]:
+        """Draw ``n`` staged spare devices for a join event."""
+        assert len(self.spares) >= n, \
+            f"join needs {n} spare devices, {len(self.spares)} staged"
+        taken, self.spares = self.spares[:n], self.spares[n:]
+        return taken
+
+    def _pool_add_hosts(self, devices: Sequence[Any],
+                        capacities: Sequence[int]) -> None:
+        """Append joined devices as new host pools (engine indices were
+        already assigned by ``PlacementEngine.add_hosts``)."""
+        assert sum(capacities) == len(devices)
+        base = len(self.devices)
+        for j, d in enumerate(devices):
+            self._dev_index[d] = base + j
+        self.devices.extend(devices)
+        i = 0
+        for cap in capacities:
+            h = len(self._free)
+            group = list(devices[i:i + int(cap)])
+            i += int(cap)
+            for d in group:
+                self._dev_host[d] = h
+            self._free.append(group)
+        assert len(self._free) == self.engine.hosts, \
+            "pool and engine host maps diverged"
+
+    def join_hosts(self, devices: Sequence[Any]) -> List[int]:
+        """Lease new hosts into a live fabric (direct, non-trace API):
+        engine capacity + device pool in one move.  Devices group into
+        ``chips_per_host`` runs (ragged last host allowed).  Joiners'
+        generation factors are inferred like the constructor's
+        ``infer_host_speeds``: an older-generation host joining a
+        uniform fleet re-opens the heterogeneous cost-model path at its
+        speed relative to the incumbent generation."""
+        caps = derive_capacities(len(devices), self.chips_per_host)
+        kinds = [str(getattr(d, "device_kind", "")) for d in devices]
+        new_speeds, i = [], 0
+        for cap in caps:
+            new_speeds.append(float(np.mean(
+                [DEVICE_KIND_SPEEDS.get(k, 1.0)
+                 for k in kinds[i:i + cap]])))
+            i += cap
+        if self.engine.speeds is not None:
+            # engine already carries absolute generation factors
+            speeds: Optional[List[float]] = new_speeds
+        else:
+            # uniform speedless fleet runs at relative 1.0; scale the
+            # joiners against the incumbent generation and only
+            # materialise speeds when they actually differ
+            base_kinds = {str(getattr(d, "device_kind", ""))
+                          for d in self.devices}
+            base = (DEVICE_KIND_SPEEDS.get(next(iter(base_kinds)), 1.0)
+                    if len(base_kinds) == 1 else 1.0)
+            rel = [s / base for s in new_speeds]
+            speeds = (None if all(abs(r - 1.0) < 1e-9 for r in rel)
+                      else rel)
+        new_idx = self.engine.add_hosts(caps, speeds=speeds)
+        self._pool_add_hosts(list(devices), caps)
+        return new_idx
+
+    def mark_draining(self, hosts: Sequence[int]) -> None:
+        """Pool side of a lease reclaim: free devices on the hosts go
+        back to the provider now; gang devices follow as they leave
+        (``reclaim`` drops them)."""
+        for h in hosts:
+            h = int(h)
+            self._free[h] = []
+            self._draining_hosts.add(h)
+
+    def fail_hosts_pool(self, hosts: Sequence[int]) -> None:
+        """Pool side of a host failure/retirement: the hosts' devices
+        are gone for good."""
+        for h in hosts:
+            h = int(h)
+            self._free[h] = []
+            self._retired_hosts.add(h)
+            self._draining_hosts.discard(h)
+
+    def fail_hosts(self, hosts: Sequence[int]) -> List[str]:
+        """Hard host failure against live gangs (direct, non-trace API):
+        engine accounting drops the dead chips, each affected gang falls
+        back to its last checkpoint snapshot (status ``preempted``).
+        Returns the failed job_ids; the caller resumes each via
+        ``GangHandle.resume`` (bit-exact, fingerprint-verified)."""
+        failed = self.engine.fail_hosts(hosts)
+        self.fail_hosts_pool(hosts)
+        dead = {int(h) for h in hosts}
+        for jid in failed:
+            handle = self.gangs.get(jid)
+            if handle is not None and handle.status == "running":
+                handle.fail(dead)
+        return failed
+
+    def reclaim_hosts(self, hosts: Sequence[int]
+                      ) -> Tuple[List[Tuple[str, Any]], List[str]]:
+        """Begin a live lease reclaim (direct, non-trace API): the hosts
+        drain, and the evacuation planner proposes moves for affected
+        gangs.  Returns ``(plans, stranded)``; the caller — who owns
+        each gang's state pytree — applies every plan with
+        ``GangHandle.evacuate(state, placement)`` and, when the drain
+        deadline passes, retires the hosts with ``fail_hosts``."""
+        self.engine.drain_hosts(hosts)
+        self.mark_draining(hosts)
+        kinds = {jid: g.kind for jid, g in self.gangs.items()
+                 if g.kind is not None}
+        return self.engine.evacuation_plan(hosts, kinds=kinds)
 
     # ---- gang lifecycle ----------------------------------------------------
     def allocate(self, job_id: str, n: int, priority: int = 0,
@@ -451,38 +649,53 @@ class Fabric:
                   workload_factory: Callable[[Job], GangWorkload],
                   policy: Union[str, PlacementPolicy, None] = None,
                   preempt: Union[bool, PreemptPolicy] = True,
-                  migrate: bool = False, backfill: bool = False
+                  migrate: bool = False, backfill: bool = False,
+                  fleet_events: Optional[Sequence[Any]] = None,
+                  checkpoint_interval: Optional[float] = None
                   ) -> "TraceExecution":
         """Execute an arrival-time trace — Poisson arrivals, priority
         classes, preemption — against real concurrent gangs on this
         fabric.  Scheduling runs on the simulator's virtual clock; gang
-        steps are real jax computations.  See ``LiveTraceRunner``."""
+        steps are real jax computations.  ``fleet_events`` interleaves
+        fleet churn (``core.fleet``): joins draw staged ``spares``,
+        reclaims drain and evacuate live gangs, hard failures roll gangs
+        back to their last real snapshot; ``checkpoint_interval`` sets
+        the periodic live-checkpoint cadence.  See ``LiveTraceRunner``."""
         assert not self.gangs, "run_trace requires an idle fabric"
         runner = LiveTraceRunner(self, workload_factory,
                                  policy=policy or self.engine.default_policy,
                                  preempt=preempt, migrate=migrate,
-                                 backfill=backfill)
+                                 backfill=backfill,
+                                 checkpoint_interval=checkpoint_interval)
         t0 = time.time()
-        result = runner.run(list(jobs))
+        try:
+            result = runner.run(list(jobs), fleet_events=fleet_events)
+        finally:
+            # hand the steal-budget lifecycle back to direct callers
+            # (the runner's event loop owned it during the trace)
+            self.engine.external_budget_reset = False
         return TraceExecution(result=result, live=dict(runner.records),
                               wall_s=time.time() - t0)
 
     def predict_trace(self, jobs: Sequence[Job],
                       policy: Union[str, PlacementPolicy, None] = None,
                       preempt: Union[bool, PreemptPolicy] = True,
-                      migrate: bool = False, backfill: bool = False
+                      migrate: bool = False, backfill: bool = False,
+                      fleet_events: Optional[Sequence[Any]] = None,
+                      checkpoint_interval: Optional[float] = None
                       ) -> TraceResult:
         """Pure-simulation prediction for the same trace on a fabric of
         this shape (same hosts, capacities, per-host speeds, cost model,
         policy, and centralised-vs-sharded engine architecture via
         ``clone_empty``) — what ``run_trace`` should reproduce,
-        placement-for-placement."""
+        placement-for-placement, churn schedule and all."""
         pol = policy or self.engine.default_policy
         engine = self.engine.clone_empty()
         sim = Simulator(engine.hosts, self.chips_per_host, "granular",
                         migrate=migrate, policy=pol, backfill=backfill,
-                        preempt=preempt, engine=engine)
-        return sim.run(list(jobs))
+                        preempt=preempt, engine=engine,
+                        checkpoint_interval=checkpoint_interval)
+        return sim.run(list(jobs), fleet_events=fleet_events)
 
 
 @dataclasses.dataclass
@@ -519,16 +732,26 @@ class LiveTraceRunner(Simulator):
                  workload_factory: Callable[[Job], GangWorkload],
                  policy: Union[str, PlacementPolicy] = "binpack",
                  preempt: Union[bool, PreemptPolicy] = True,
-                 migrate: bool = False, backfill: bool = False):
+                 migrate: bool = False, backfill: bool = False,
+                 checkpoint_interval: Optional[float] = None):
         super().__init__(fabric.engine.hosts, fabric.chips_per_host,
                          "granular", migrate=migrate, policy=policy,
                          backfill=backfill, preempt=preempt,
-                         engine=fabric.engine)
+                         engine=fabric.engine,
+                         checkpoint_interval=checkpoint_interval)
         self.fabric = fabric
         self.factory = workload_factory
         self.workloads: Dict[str, GangWorkload] = {}
         self.handles: Dict[str, GangHandle] = {}
         self.records: Dict[str, Dict[str, Any]] = {}
+        # set per run(): with churn possible, every gang start takes a
+        # baseline snapshot so a hard failure always has a rollback point
+        self._churn = checkpoint_interval is not None
+
+    def run(self, jobs, fleet_events=None):
+        self._churn = bool(fleet_events) \
+            or self.checkpoint_interval is not None
+        return super().run(jobs, fleet_events=fleet_events)
 
     def _record(self, job_id: str) -> Dict[str, Any]:
         return self.records.setdefault(
@@ -553,9 +776,13 @@ class LiveTraceRunner(Simulator):
         handle = self.handles.get(job.job_id)
         if resumed:
             assert handle is not None and handle.status == "preempted"
-            state, _ = handle.resume(alloc=rj.alloc)   # bit-exact restore
+            state, step = handle.resume(alloc=rj.alloc)  # bit-exact restore
             self.fabric.gangs[job.job_id] = handle
             wl.state = state
+            # a recovery resume rolls the data cursor back to the
+            # checkpointed step (a preemption resume restored the
+            # suspension step: a no-op there)
+            wl.steps_done = step
             wl.bind(handle)
             self._record(job.job_id)["resumes_verified"] += 1
         else:
@@ -566,6 +793,10 @@ class LiveTraceRunner(Simulator):
             if wl.state is None:
                 wl.init_state(handle)
         self._record(job.job_id)["workload"] = type(wl).__name__
+        if self._churn:
+            # baseline rollback point: matches the simulator's
+            # ckpt_progress = progress-at-start bookkeeping
+            handle.checkpoint(wl.state, wl.steps_done)
         self._step_gang(job.job_id)    # gangs make real progress at start
 
     def _on_advance(self, now: float) -> None:
@@ -610,3 +841,40 @@ class LiveTraceRunner(Simulator):
         self.fabric.gangs.pop(job_id, None)
         rec = self._record(job_id)
         rec["final_metrics"] = rec.pop("metrics", {})
+
+    # ---- fleet-churn hooks (core.fleet events, live) -----------------------
+    def _on_join(self, ev, new_hosts) -> None:
+        # engine capacity is already in (the loop's FleetController);
+        # back the new hosts with staged spare devices
+        caps = [int(c) for c in ev.capacities]
+        devices = self.fabric.take_spares(sum(caps))
+        self.fabric._pool_add_hosts(devices, caps)
+
+    def _on_drain(self, ev) -> None:
+        self.fabric.mark_draining(ev.hosts)
+
+    def _on_hosts_down(self, hosts) -> None:
+        self.fabric.fail_hosts_pool(hosts)
+
+    def _on_checkpoint(self, rj) -> None:
+        job_id = rj.job.job_id
+        wl = self.workloads[job_id]
+        snap = self.handles[job_id].checkpoint(wl.state, wl.steps_done)
+        rec = self._record(job_id)
+        rec["checkpoints"] = rec.get("checkpoints", 0) + 1
+        rec["last_ckpt_fingerprint"] = snap.fingerprint
+
+    def _on_fail(self, rj, hosts) -> None:
+        # the gang's host died: live state is gone; fall back to the
+        # last real snapshot (engine accounting already settled by
+        # fail_hosts; the loop requeues the job and the resumed start
+        # restores bit-exactly via handle.resume)
+        job_id = rj.job.job_id
+        handle = self.handles[job_id]
+        wl = self.workloads[job_id]
+        handle.fail(hosts)
+        self.fabric.gangs.pop(job_id, None)
+        wl.state = None               # lives in the snapshot until resume
+        wl.steps_done = handle.snapshot.step
+        rec = self._record(job_id)
+        rec["failures"] = rec.get("failures", 0) + 1

@@ -66,11 +66,24 @@ The placement hot path (host ordering, greedy fills, candidate scoring)
 is vectorized with numpy; the original pure-Python loops survive under
 ``reference_loops()`` so parity tests and the scheduler-scale benchmark
 can A/B the exact pre-vectorization behaviour.
+
+**Fleet churn** (``core.fleet`` drives it): the host set is no longer
+immutable after construction.  ``add_hosts`` leases new hosts into the
+fleet, ``drain_hosts`` begins a lease reclaim (the host takes no new
+placements; its free chips are returned to the provider immediately and
+held chips follow as gangs leave), ``fail_hosts`` is a hard failure
+(every gang touching a failed host loses its allocation — the caller
+requeues it from its last checkpoint), and ``evacuation_plan`` plans
+moves off doomed hosts (the graceful-drain path, applied through the
+same ``apply_migration`` machinery as barrier migration).  With no
+churn (``draining`` never set, host count constant) every decision is
+bit-identical to the pre-churn engine — pinned by tests.
 """
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import math
 from typing import (Dict, List, Mapping, Optional, Sequence, Tuple, Union)
 
 import numpy as np
@@ -80,6 +93,19 @@ Placement = List[Tuple[int, int]]          # [(host, n_chips)] sorted
 # Default host-group size for the sharded engine: the latency sweet spot
 # in the Fig 11 regime (a 128-host fleet becomes 8 shards of 16).
 DEFAULT_SHARD_HOSTS = 16
+
+
+def auto_shard_hosts(hosts: int) -> int:
+    """Adaptive shard size: ``hosts_per_shard ~ sqrt(2 * hosts)``.
+
+    One decision pays ``O(hosts_per_shard)`` to scan its shard plus
+    ``O(hosts / hosts_per_shard)`` summary-index entries when it has to
+    forward — the sum is minimised at the square root, and the factor 2
+    calibrates the optimum to the Fig 11 sweet spot measured in the
+    scheduler-scale benchmark (128 hosts -> 16-host shards).  The
+    sharded engine recomputes this as churn changes the live host count
+    when built with ``hosts_per_shard="auto"``."""
+    return max(2, min(hosts, int(round(math.sqrt(2.0 * hosts)))))
 
 # When False, the placement hot path runs the original pre-vectorization
 # implementation: pure-Python per-host/per-chip fill loops, per-call
@@ -174,12 +200,18 @@ class CostModel:
                  default_beta: float = 0.4,
                  migrate_progress_cap: float = 0.8,
                  migration_cost_s: float = 2.0,
-                 preempt_cost_s: float = 2.0):
+                 preempt_cost_s: float = 2.0,
+                 checkpoint_cost_s: float = 0.5):
         self.betas = dict(self.DEFAULT_BETAS if betas is None else betas)
         self.default_beta = default_beta
         self.migrate_progress_cap = migrate_progress_cap
         self.migration_cost_s = migration_cost_s
         self.preempt_cost_s = preempt_cost_s
+        # periodic-checkpoint cost (a snapshot save, cheaper than the
+        # cross-host transfer of migration_cost_s): what the simulator
+        # charges per checkpoint under a checkpoint_interval policy and
+        # the delta feeding the Young/Daly optimum in core.fleet
+        self.checkpoint_cost_s = checkpoint_cost_s
 
     def beta(self, kind: Optional[str] = None) -> float:
         """Per-job-kind cross-host penalty; ``default_beta`` when the
@@ -835,9 +867,17 @@ class PreemptPolicy:
         pol = resolve_policy(policy, engine.default_policy).with_model(
             engine.cost_model)
         scratch = engine.free.copy()
+        # victims' chips on a draining host are being reclaimed by the
+        # provider — they never count toward the fit probe (churn-free
+        # fleets skip the mask entirely: bit-identical pre-churn path)
+        drain = getattr(engine, "draining", None)
+        if drain is not None and not drain.any():
+            drain = None
 
         def fits() -> bool:
-            return pol.place(engine.view_with(scratch), n,
+            probe = scratch if drain is None else np.where(drain, 0,
+                                                           scratch)
+            return pol.place(engine.view_with(probe), n,
                              kind=kind) is not None
 
         if fits():
@@ -947,6 +987,11 @@ class PlacementEngine:
         # the centralised engine; ShardedPlacementEngine counts the
         # shards a decision consulted beyond its home shard)
         self.decision_hops = 0
+        # fleet churn (core.fleet): hosts being lease-reclaimed take no
+        # new placements and retire chips as gangs leave; _any_draining
+        # keeps every churn-free hot path on its exact pre-churn code
+        self.draining = np.zeros(hosts, dtype=bool)
+        self._any_draining = False
 
     @classmethod
     def for_chips(cls, n_chips: int, chips_per_host: int,
@@ -977,7 +1022,8 @@ class PlacementEngine:
         return self._idle_chips
 
     def idle_fraction(self) -> float:
-        return self._idle_chips / self.total_chips
+        total = self.total_chips        # shrinks under fleet churn
+        return self._idle_chips / total if total else 0.0
 
     def idle_throughput(self) -> float:
         """Idle capacity in effective (speed-weighted) chips —
@@ -1048,9 +1094,30 @@ class PlacementEngine:
         if self.speeds is None:
             self._idle_eff = float(self._idle_chips)
 
+    def _retire_draining(self, placement: Sequence[Tuple[int, int]]
+                         ) -> Sequence[Tuple[int, int]]:
+        """Chips returned on a draining host go back to the *provider*,
+        not the free pool: the host's capacity shrinks to its remaining
+        usage (when it hits 0 the lease is fully surrendered).  Returns
+        the entries that still free normally.  Only called when some
+        host is draining, so churn-free paths never pay for it."""
+        live: List[Tuple[int, int]] = []
+        for h, c in placement:
+            if self.draining[h]:
+                self.capacities[h] -= c
+                assert self.capacities[h] >= 0, f"host {h} over-retired"
+            else:
+                live.append((h, c))
+        return live
+
     def _give(self, placement: Sequence[Tuple[int, int]]) -> None:
         """Return chips to the free pool (inverse of ``_take``; same
-        unique-host requirement for the fancy-index path)."""
+        unique-host requirement for the fancy-index path).  Chips landing
+        on a draining host are retired instead (``_retire_draining``)."""
+        if self._any_draining:
+            placement = self._retire_draining(placement)
+            if not placement:
+                return
         if len(placement) > 4 \
                 and len({h for h, _ in placement}) == len(placement):
             hs = np.array([h for h, _ in placement], dtype=np.int64)
@@ -1201,11 +1268,12 @@ class PlacementEngine:
         """
         plans = []
         free = self.free.copy()
+        drain = self.draining if self._any_draining else None
         for alloc in allocs:
             new_placement = self._plan_move(
                 free, alloc, alloc.placement, self.heterogeneous,
                 self.speeds, (kinds or {}).get(alloc.job_id),
-                (remaining or {}).get(alloc.job_id))
+                (remaining or {}).get(alloc.job_id), draining=drain)
             if new_placement is not None:
                 plans.append((alloc.job_id, new_placement))
         return plans
@@ -1213,7 +1281,9 @@ class PlacementEngine:
     def _plan_move(self, free: np.ndarray, alloc: Allocation,
                    placement: Placement, hetero: bool,
                    speeds: Optional[np.ndarray], kind: Optional[str],
-                   rem: Optional[float]) -> Optional[Placement]:
+                   rem: Optional[float],
+                   draining: Optional[np.ndarray] = None
+                   ) -> Optional[Placement]:
         """Plan one gang's move against the scratch ``free`` map (shared
         across the whole planning pass so plans never double-book) and
         commit the winning plan into it.  ``free``/``placement``/
@@ -1233,7 +1303,13 @@ class PlacementEngine:
             return None
         model = self.cost_model
         avail = free if _VECTORIZED else free.copy()
-        for h, c in placement:                # gang's own chips count
+        # gang's own chips count — except chips on a draining host,
+        # which are being reclaimed and must not be re-planned onto
+        # (a draining host's free is already 0, so nothing else can
+        # land there either); churn-free fleets pass draining=None
+        cred = placement if draining is None else [
+            (h, c) for h, c in placement if not draining[h]]
+        for h, c in cred:
             avail[h] += c
         new_placement: Optional[Placement] = None
         if hetero:
@@ -1260,14 +1336,14 @@ class PlacementEngine:
                 new_placement = cand
         if new_placement is None:             # stay put: undo the credit
             if avail is free:
-                for h, c in placement:
+                for h, c in cred:
                     free[h] -= c
             return None
         if avail is free:                     # commit into the scratch
             for h, c in new_placement:
                 free[h] -= c
         else:
-            for h, c in placement:
+            for h, c in cred:
                 free[h] += c
             for h, c in new_placement:
                 free[h] -= c
@@ -1283,6 +1359,166 @@ class PlacementEngine:
         new = Allocation(alloc.job_id, sorted(new_placement))
         self.allocations[alloc.job_id] = new
         return new
+
+    # ---- fleet churn (leased hosts come and go; see core.fleet) -------------
+    def alive_hosts(self) -> int:
+        """Hosts still holding capacity (leased and not fully retired) —
+        what adaptive shard sizing scales against."""
+        return int((self.capacities > 0).sum())
+
+    # True when a scheduling loop (the simulator's queue pump) owns the
+    # steal-budget lifecycle; False = direct use, where each decision
+    # resets its own budget (a per-decision cap) so a one-shot caller
+    # can never be starved by budget a past decision spent
+    external_budget_reset = False
+
+    def reset_steal_budget(self) -> None:
+        """Per-scheduling-pass budget reset (a no-op here; the sharded
+        engine caps cross-shard split/escalation attempts per pump)."""
+
+    def add_hosts(self, capacities: Sequence[int],
+                  speeds: Optional[Sequence[float]] = None) -> List[int]:
+        """Lease new hosts into the fleet (a FleetEvent ``join``).
+
+        New hosts append at the end of the index space (retired host
+        slots are never reused, so existing placements keep their
+        coordinates).  ``speeds`` carries the new hosts' generation
+        factors; when either side of the fleet has speeds the other is
+        padded at 1.0.  Returns the new host indices."""
+        caps = np.asarray(list(capacities), dtype=np.int64)
+        assert len(caps) > 0 and (caps > 0).all() \
+            and (caps <= self.chips_per_host).all()
+        k = len(caps)
+        new_idx = list(range(self.hosts, self.hosts + k))
+        if speeds is not None or self.speeds is not None:
+            old = (self.speeds if self.speeds is not None
+                   else np.ones(self.hosts, dtype=np.float64))
+            new = (np.asarray(list(speeds), dtype=np.float64)
+                   if speeds is not None
+                   else np.ones(k, dtype=np.float64))
+            assert len(new) == k and (new > 0).all()
+            self.speeds = np.concatenate([old, new])
+        self.capacities = np.concatenate([self.capacities, caps])
+        self.free = np.concatenate([self.free, caps])
+        self.draining = np.concatenate(
+            [self.draining, np.zeros(k, dtype=bool)])
+        self.jobs_on_host.extend(set() for _ in range(k))
+        self.hosts += k
+        self._idle_chips += int(caps.sum())
+        if self.speeds is None:
+            self._idle_eff = float(self._idle_chips)
+        else:
+            self._idle_eff += float(
+                (caps * self.speeds[new_idx]).sum())
+            self._hetero = bool((self.speeds != self.speeds[0]).any())
+        return new_idx
+
+    def drain_hosts(self, hosts: Sequence[int]) -> None:
+        """Begin a lease reclaim (a FleetEvent ``reclaim``): the hosts
+        take no new placements (their free chips are surrendered to the
+        provider immediately; capacity shrinks to current usage) and
+        chips later freed on them retire instead of re-entering the
+        pool.  Gangs still running there are the caller's problem:
+        ``evacuation_plan`` for the graceful path, ``fail_hosts`` when
+        the drain deadline expires."""
+        for h in hosts:
+            h = int(h)
+            if self.draining[h]:
+                continue
+            f = int(self.free[h])
+            if f:
+                self._take([(h, f)])     # leaves the idle summaries
+            self.capacities[h] -= f
+            self.draining[h] = True
+        self._any_draining = bool(self.draining.any())
+
+    def fail_hosts(self, hosts: Sequence[int]) -> List[str]:
+        """Hard host failure (a FleetEvent ``fail``, or a drain deadline
+        expiring): every gang touching a failed host loses its whole
+        allocation — chips on surviving hosts return to the pool, chips
+        on the failed hosts vanish, and the host's capacity drops to 0
+        (the slot stays, dead, so indices never shift).  Returns the
+        job_ids that lost chips; the caller requeues each from its last
+        checkpoint (the Faasm-style snapshot recovery path)."""
+        dead = {int(h) for h in hosts}
+        victims = [a for a in self.allocations.values()
+                   if any(h in dead for h, _ in a.placement)]
+        for a in victims:
+            for h, _ in a.placement:
+                self.jobs_on_host[h].discard(a.job_id)
+            survivors = [(h, c) for h, c in a.placement
+                         if h not in dead]
+            if survivors:
+                self._give(survivors)    # draining hosts retire instead
+            self.allocations.pop(a.job_id)
+        for h in dead:
+            f = int(self.free[h])
+            if f:
+                self._take([(h, f)])
+            self.capacities[h] = 0
+            self.draining[h] = False
+        self._any_draining = bool(self.draining.any())
+        return [a.job_id for a in victims]
+
+    def evacuation_plan(self, hosts: Optional[Sequence[int]] = None,
+                        kinds: Optional[Mapping[str, str]] = None
+                        ) -> Tuple[List[Tuple[str, Placement]], List[str]]:
+        """Plan moves off doomed hosts (``hosts``; default: everything
+        draining) — the graceful-drain half of a lease reclaim.
+
+        Each affected granular gang is re-placed with the greedy fill
+        over the surviving free chips plus its own chips on safe hosts
+        (on heterogeneous fleets the cost model picks between the
+        throughput-ordered and plain greedy candidates under the gang's
+        job kind, exactly like ``migration_plan``'s hetero move).  Plans
+        share one scratch map so they never double-book, and the caller
+        applies them through ``apply_migration`` — the same machinery as
+        barrier migration, which retires the vacated draining chips via
+        ``_give``.  Returns ``(plans, stranded)``: stranded gangs (no
+        fit, or slice allocations, which never migrate) run until the
+        drain deadline and then hard-fail.  Evacuation is a global
+        (cross-shard) decision by construction — a whole shard may be
+        draining — so the sharded engine inherits this unchanged."""
+        # every draining host is doomed regardless of which reclaim this
+        # pass is for: fold the full draining set into the mask so a
+        # gang's keep-credit on an *earlier* reclaim's host is never
+        # counted as a landing spot (overlapping reclaims)
+        mask = self.draining.copy()
+        if hosts is not None:
+            mask[[int(h) for h in hosts]] = True
+        free = self.free.copy()
+        free[mask] = 0                   # never evacuate *onto* doom
+        hetero = self.heterogeneous
+        model = self.cost_model
+        plans: List[Tuple[str, Placement]] = []
+        stranded: List[str] = []
+        for alloc in list(self.allocations.values()):
+            if not any(mask[h] for h, _ in alloc.placement):
+                continue
+            if alloc.slice_size:
+                stranded.append(alloc.job_id)
+                continue
+            keep = [(h, c) for h, c in alloc.placement if not mask[h]]
+            for h, c in keep:
+                free[h] += c             # own safe chips are reusable
+            if hetero:
+                kind = (kinds or {}).get(alloc.job_id)
+                cands = [p for p in (
+                    _greedy_most_free(free, alloc.n, self.speeds),
+                    _greedy_most_free(free, alloc.n)) if p is not None]
+                cand = min(cands, key=lambda p: model.score(
+                    p, kind, self.speeds)) if cands else None
+            else:
+                cand = _greedy_most_free(free, alloc.n)
+            if cand is None:
+                for h, c in keep:
+                    free[h] -= c
+                stranded.append(alloc.job_id)
+                continue
+            for h, c in cand:
+                free[h] -= c
+            plans.append((alloc.job_id, cand))
+        return plans, stranded
 
 
 # ---------------------------------------------------------------------------
@@ -1301,6 +1537,7 @@ class _ShardScope:
         self._shard = shard
         self._lo, self._hi = lo, hi
         self.free = engine.free[lo:hi]
+        self.draining = engine.draining[lo:hi]
         self.default_policy = engine.default_policy
         self.cost_model = engine.cost_model
         self.allocations = {
@@ -1345,13 +1582,45 @@ class ShardedPlacementEngine(PlacementEngine):
     With a single shard covering the whole fleet every decision —
     placement, migration, preemption — is bit-identical to the
     centralised engine, and ``decision_hops`` stays 0.
+
+    ``hosts_per_shard="auto"`` sizes shards from the fleet
+    (``auto_shard_hosts``) and re-balances as fleet churn moves the
+    live host count; a numeric spec keeps its fleet-size clamp across
+    joins.  ``steal_budget`` caps cross-shard forwards / splits /
+    preemption escalations per scheduling pass (reset once per queue
+    pump by the simulator; 0 = unbounded, bit-identical) so a
+    churn-thrashed backlog cannot hammer the summary index.
     """
 
     def __init__(self, hosts: int, chips_per_host: int,
-                 hosts_per_shard: int = DEFAULT_SHARD_HOSTS, **kwargs):
+                 hosts_per_shard: Union[int, str] = DEFAULT_SHARD_HOSTS,
+                 steal_budget: int = 0, **kwargs):
         super().__init__(hosts, chips_per_host, **kwargs)
-        assert hosts_per_shard > 0
-        self.hosts_per_shard = min(hosts_per_shard, hosts)
+        # "auto" sizes shards from the fleet (auto_shard_hosts) and
+        # re-sizes them as churn changes the live host count; a numeric
+        # spec is fixed for the engine's lifetime
+        self._shard_spec: Union[int, str] = hosts_per_shard
+        if hosts_per_shard == "auto":
+            hosts_per_shard = auto_shard_hosts(hosts)
+        assert int(hosts_per_shard) > 0
+        self.hosts_per_shard = min(int(hosts_per_shard), hosts)
+        # steal budget: cross-shard split / escalation attempts allowed
+        # per scheduling pass (0 = unbounded — the pre-budget
+        # behaviour, bit-identical); the simulator resets it once per
+        # queue pump so a churn-thrashed backlog cannot hammer the
+        # summary index with hopeless cross-shard work
+        self.steal_budget = steal_budget
+        self._steal_left: float = float("inf")
+        self.reset_steal_budget()
+        self._rebuild_shards()
+
+    def _rebuild_shards(self) -> None:
+        """(Re)compute shard bounds and the summary index from the live
+        free map — run at construction and after fleet churn changes
+        the host count (``add_hosts``) or the adaptive shard size.
+        Dead/retired host slots stay inside their shard at capacity 0;
+        summaries are exact by construction."""
+        hosts = self.hosts
         self.shard_bounds: List[Tuple[int, int]] = [
             (lo, min(lo + self.hosts_per_shard, hosts))
             for lo in range(0, hosts, self.hosts_per_shard)]
@@ -1376,6 +1645,51 @@ class ShardedPlacementEngine(PlacementEngine):
                 (self.speeds[lo:hi] != self.speeds[lo]).any())
             for lo, hi in self.shard_bounds]
 
+    # ---- fleet churn --------------------------------------------------------
+    def reset_steal_budget(self) -> None:
+        self._steal_left = (float("inf") if not self.steal_budget
+                            else float(self.steal_budget))
+
+    def _spend_steal(self) -> bool:
+        """Consume one cross-shard attempt; False when exhausted."""
+        if self._steal_left <= 0:
+            return False
+        self._steal_left -= 1
+        return True
+
+    def _maybe_resize_shards(self) -> bool:
+        """Resharding hook: churn that moves the host count re-derives
+        the shard size from the original spec — ``"auto"`` re-balances
+        against the live host count, a numeric spec re-applies its
+        fleet-size clamp (so a spec covering the whole fleet keeps
+        covering it after joins: single-shard parity with the
+        centralised engine survives growth).  True when it changed."""
+        if self._shard_spec == "auto":
+            want = min(auto_shard_hosts(max(1, self.alive_hosts())),
+                       self.hosts)
+        else:
+            want = min(int(self._shard_spec), self.hosts)
+        if want == self.hosts_per_shard:
+            return False
+        self.hosts_per_shard = want
+        return True
+
+    def add_hosts(self, capacities: Sequence[int],
+                  speeds: Optional[Sequence[float]] = None) -> List[int]:
+        new_idx = super().add_hosts(capacities, speeds)
+        self._maybe_resize_shards()
+        self._rebuild_shards()          # new hosts need shard membership
+        return new_idx
+
+    def fail_hosts(self, hosts: Sequence[int]) -> List[str]:
+        out = super().fail_hosts(hosts)
+        # host slots persist (indices never shift), so only an adaptive
+        # size change forces a rebuild — summaries already track the
+        # retired chips through the _take/_give funnels
+        if self._maybe_resize_shards():
+            self._rebuild_shards()
+        return out
+
     @property
     def sched_hosts(self) -> int:
         """One decision scans one shard, not the fleet — the latency
@@ -1385,7 +1699,8 @@ class ShardedPlacementEngine(PlacementEngine):
     def clone_empty(self) -> "ShardedPlacementEngine":
         return ShardedPlacementEngine(
             self.hosts, self.chips_per_host,
-            hosts_per_shard=self.hosts_per_shard,
+            hosts_per_shard=self._shard_spec,
+            steal_budget=self.steal_budget,
             policy=self.default_policy, capacities=list(self.capacities),
             speeds=None if self.speeds is None else list(self.speeds),
             cost_model=self.cost_model)
@@ -1396,6 +1711,13 @@ class ShardedPlacementEngine(PlacementEngine):
         self._shard_delta(placement, -1)
 
     def _give(self, placement: Sequence[Tuple[int, int]]) -> None:
+        # split off draining-host retirements BEFORE the shard delta:
+        # retired chips never re-enter a shard's idle summary (the base
+        # second pass then finds nothing draining left to filter)
+        if self._any_draining:
+            placement = self._retire_draining(placement)
+            if not placement:
+                return
         super()._give(placement)
         self._shard_delta(placement, +1)
 
@@ -1440,6 +1762,8 @@ class ShardedPlacementEngine(PlacementEngine):
                 kind: Optional[str] = None) -> Optional[Reservation]:
         pol = self._resolve(policy)
         self.decision_hops = 0
+        if not self.external_budget_reset:
+            self.reset_steal_budget()    # direct use: per-decision cap
         if n > self._idle_chips:
             return None
         consults = 0
@@ -1454,6 +1778,10 @@ class ShardedPlacementEngine(PlacementEngine):
                 (-self._shard_eff[candidates],
                  ~fits_host[candidates]))]
             for s in order:
+                # forwarding beyond the home shard spends steal budget
+                # (with budget 0 = unbounded this never breaks)
+                if consults >= 1 and not self._spend_steal():
+                    break
                 lo, _ = self.shard_bounds[int(s)]
                 local = pol.place(self._shard_view(int(s)), n, kind=kind)
                 consults += 1
@@ -1461,6 +1789,8 @@ class ShardedPlacementEngine(PlacementEngine):
                     placement = sorted((h + lo, c) for h, c in local)
                     break
         if placement is None:
+            if not self._spend_steal():  # a split is a cross-shard steal
+                return None
             placement, split_consults = self._split_place(pol, n, kind)
             consults += split_consults
             if placement is None:
@@ -1515,6 +1845,8 @@ class ShardedPlacementEngine(PlacementEngine):
         over the global table (victims and placement may then span
         shards)."""
         pp = preempt or PreemptPolicy()
+        if not self.external_budget_reset:
+            self.reset_steal_budget()    # direct use: per-decision cap
         caps = np.array([int(self.capacities[lo:hi].sum())
                          for lo, hi in self.shard_bounds])
         order = np.nonzero(caps >= n)[0]
@@ -1527,6 +1859,8 @@ class ShardedPlacementEngine(PlacementEngine):
                            kind=kind)
             if plan is not None:
                 return plan
+        if not self._spend_steal():     # escalation is a cross-shard steal
+            return None
         return super().preemption_plan(n, priority, priorities,
                                        policy=policy, preempt=pp,
                                        kind=kind)
@@ -1543,6 +1877,7 @@ class ShardedPlacementEngine(PlacementEngine):
         escalated plans from double-booking each other."""
         plans = []
         free = self.free.copy()
+        drain = self.draining if self._any_draining else None
         for alloc in allocs:
             shard = self.shard_of_gang(alloc)
             kind = (kinds or {}).get(alloc.job_id)
@@ -1550,14 +1885,15 @@ class ShardedPlacementEngine(PlacementEngine):
             if shard is None:                 # spans shards: escalate
                 new = self._plan_move(free, alloc, alloc.placement,
                                       self.heterogeneous, self.speeds,
-                                      kind, rem)
+                                      kind, rem, draining=drain)
             else:
                 lo, hi = self.shard_bounds[shard]
                 local = [(h - lo, c) for h, c in alloc.placement]
                 new = self._plan_move(
                     free[lo:hi], alloc, local, self.shard_hetero[shard],
                     None if self.speeds is None else self.speeds[lo:hi],
-                    kind, rem)
+                    kind, rem,
+                    draining=None if drain is None else drain[lo:hi])
                 if new is not None:
                     new = [(h + lo, c) for h, c in new]
             if new is not None:

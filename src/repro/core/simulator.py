@@ -52,10 +52,24 @@ start / finish) the live runtime's control points consume, so a simulated
 trace and a ``core.fabric.Fabric.run_trace`` execution of the same trace
 can be diffed event-by-event.
 
+**Fleet churn** (``core.fleet``): ``run(jobs, fleet_events=...)``
+interleaves host joins, lease reclaims (drain for ``drain_s``, then the
+host dies) and hard failures with the arrival trace.  Gangs on a
+draining host evacuate through the shared evacuation planner (charged
+like a migration); gangs on a failed host are requeued from their last
+checkpoint — ``checkpoint_interval`` adds a periodic checkpoint cadence
+(each costs ``CostModel.checkpoint_cost_s``), and the work since the
+last checkpoint is counted in ``TraceResult.lost_work_s`` (the
+Young/Daly cadence-vs-lost-work tradeoff of ``bench_churn``).  With no
+churn schedule and no checkpoint interval the event loop is
+bit-identical to the pre-churn simulator (pinned).
+
 The event loop exposes overridable hooks (``_on_start`` / ``_on_advance``
-/ ``_on_preempt`` / ``_on_migrate`` / ``_on_finish``) that are no-ops
-here; ``core.fabric`` subclasses them to execute the trace against real
-gangs while virtual time drives scheduling.
+/ ``_on_preempt`` / ``_on_migrate`` / ``_on_finish`` and the churn hooks
+``_on_join`` / ``_on_drain`` / ``_on_hosts_down`` / ``_on_checkpoint``
+/ ``_on_fail``) that are no-ops here; ``core.fabric`` subclasses them
+to execute the trace against real gangs while virtual time drives
+scheduling.
 
 The simulator is deterministic given a seed.
 """
@@ -70,6 +84,7 @@ import numpy as np
 
 from repro.core import placement as placement_mod
 from repro.core.control import Action
+from repro.core.fleet import FleetController, FleetEvent
 from repro.core.placement import (DEFAULT_SHARD_HOSTS, Allocation,
                                   CostModel, FixedSlicePolicy,
                                   PlacementEngine, PlacementPolicy,
@@ -119,6 +134,10 @@ class RunningJob:
     model: CostModel = dataclasses.field(default_factory=CostModel)
     speeds: Optional[np.ndarray] = None      # engine's per-host factors
     _rate: Optional[float] = None            # cache; placement-invariant
+    # fleet churn: progress captured by the last checkpoint (what a
+    # hard host failure rolls back to) and its heap token
+    ckpt_progress: float = 0.0
+    ckpt_event: int = -1
 
     def rate(self) -> float:
         """Fraction of work per second under the current placement —
@@ -163,6 +182,11 @@ class TraceResult:
     finish_order: List[str] = dataclasses.field(default_factory=list)
     finish_times: Dict[str, float] = dataclasses.field(default_factory=dict)
     actions: List[Action] = dataclasses.field(default_factory=list)
+    # fleet churn: gangs requeued from a checkpoint after a host
+    # failure, seconds of work rolled back, and graceful drain moves
+    recoveries: int = 0
+    lost_work_s: float = 0.0
+    evacuations: int = 0
 
     def makespans(self, jobs: Sequence[Job]) -> Dict[str, float]:
         """Per-job makespan (finish - arrival) for the jobs that finished."""
@@ -290,7 +314,9 @@ class Simulator:
                  speeds: Optional[Sequence[float]] = None,
                  cost_model: Optional[CostModel] = None,
                  sched: str = "central",
-                 shard_hosts: Optional[int] = None):
+                 shard_hosts: Union[int, str, None] = None,
+                 steal_budget: int = 0,
+                 checkpoint_interval: Optional[float] = None):
         """mode: 'granular' (Faabric) or 'slices' (fixed baseline).
 
         ``policy`` selects the granular placement policy (binpack /
@@ -308,7 +334,15 @@ class Simulator:
         engine scanning every host — the Fig 11 degradation) or
         'sharded' (``ShardedPlacementEngine`` over host groups of
         ``shard_hosts``; a decision scans one shard and pays
-        ``SCHED_FORWARD_HOP_S`` per forwarding hop).
+        ``SCHED_FORWARD_HOP_S`` per forwarding hop).  ``shard_hosts``
+        may be ``"auto"`` (adaptive shard sizing that re-balances under
+        churn) and ``steal_budget`` caps cross-shard split/escalation
+        attempts per queue pump (0 = unbounded).
+        ``checkpoint_interval`` adds a periodic per-gang checkpoint
+        cadence (each charged ``CostModel.checkpoint_cost_s``) — what a
+        fleet-churn hard failure rolls a gang back to; None keeps the
+        pre-churn behaviour (failures roll back to the last preemption
+        checkpoint or job start).
         ``engine`` adopts an externally-owned (fresh) ``PlacementEngine``
         instead of building one — used by ``core.fabric`` so live
         execution and prediction share one accounting code path; the
@@ -329,6 +363,7 @@ class Simulator:
                 engine = ShardedPlacementEngine(
                     hosts, chips_per_host,
                     hosts_per_shard=shard_hosts or DEFAULT_SHARD_HOSTS,
+                    steal_budget=steal_budget,
                     policy=pol, speeds=speeds, cost_model=cost_model)
             else:
                 assert sched == "central", f"unknown sched mode {sched!r}"
@@ -339,6 +374,9 @@ class Simulator:
             assert engine.idle_chips() == engine.total_chips, \
                 "adopted engine must be idle at trace start"
         self.engine = engine
+        # the event loop owns the steal-budget lifecycle: reset once per
+        # queue pump (not per decision — the budget caps a whole pass)
+        engine.external_budget_reset = True
         self.model = engine.cost_model
         self.mode = mode
         self.slice_size = slice_size
@@ -351,9 +389,12 @@ class Simulator:
             self.preempt = None
         self.barrier_interval = barrier_interval
         self.backfill = backfill
+        self.checkpoint_interval = checkpoint_interval
         # per-decision scheduler latency: the host count one decision
         # scans — the whole fleet for a centralised engine, one shard
-        # for a sharded one (+ forwarding hops charged per decision)
+        # for a sharded one (+ forwarding hops charged per decision).
+        # Refreshed per pump: adaptive resharding under churn changes
+        # the shard size mid-trace.
         self.sched_latency = SCHED_LATENCY_PER_HOST * engine.sched_hosts
 
     # ---- live-execution hooks (no-ops; see core.fabric) --------------------
@@ -372,6 +413,22 @@ class Simulator:
     def _on_finish(self, rj: RunningJob) -> None:
         pass
 
+    # fleet-churn hooks (core.fleet events; see LiveTraceRunner)
+    def _on_join(self, ev: FleetEvent, new_hosts: List[int]) -> None:
+        pass
+
+    def _on_drain(self, ev: FleetEvent) -> None:
+        pass
+
+    def _on_hosts_down(self, hosts: Sequence[int]) -> None:
+        pass
+
+    def _on_checkpoint(self, rj: RunningJob) -> None:
+        pass
+
+    def _on_fail(self, rj: RunningJob, hosts: Sequence[int]) -> None:
+        pass
+
     # ---- placement --------------------------------------------------------
     def _try_place(self, job: Job) -> Optional[Allocation]:
         if self.mode != "granular" and job.kind == "omp":
@@ -388,7 +445,9 @@ class Simulator:
                                          shared_memory)
 
     # ---- main loop ----------------------------------------------------------
-    def run(self, jobs: List[Job]) -> TraceResult:
+    def run(self, jobs: List[Job],
+            fleet_events: Optional[Sequence[FleetEvent]] = None
+            ) -> TraceResult:
         # queue key: (priority desc, arrival, submission order)
         seq = {j.job_id: i for i, j in enumerate(jobs)}
 
@@ -407,16 +466,26 @@ class Simulator:
         chis: List[float] = []
         actions: List[Action] = []
         migrations = preemptions = 0
+        recoveries = evacuations = 0
+        lost_work = 0.0
         # progress of checkpointed (preempted) jobs awaiting resume
         suspended: Dict[str, float] = {}
         first_start: Dict[str, float] = {}
         finish_order: List[str] = []
         finish_times: Dict[str, float] = {}
-        ARRIVE, FINISH = 0, 1
+        ARRIVE, FINISH, FLEET, DEADLINE, CKPT = 0, 1, 2, 3, 4
         for j in arrivals:
             token += 1
             heapq.heappush(heap, (j.arrival, token, ARRIVE, j.job_id))
         pending_arrivals = {j.job_id: j for j in arrivals}
+        # fleet churn: events interleave with arrivals on the same heap
+        # (at equal timestamps arrivals run first — they were pushed
+        # first); the controller owns lease/drain/fail semantics
+        schedule = sorted(fleet_events or [], key=lambda e: e.t)
+        controller = FleetController(self.engine)
+        for i, ev in enumerate(schedule):
+            token += 1
+            heapq.heappush(heap, (max(0.0, ev.t), token, FLEET, i))
 
         def progress_to(t: float):
             # runs for every running job at every event: read the
@@ -441,6 +510,15 @@ class Simulator:
             rj.finish_event = token
             heapq.heappush(heap, (t_fin, token, FINISH, rj.job.job_id))
 
+        def schedule_ckpt(rj: RunningJob):
+            nonlocal token
+            if self.checkpoint_interval is None:
+                return
+            token += 1
+            rj.ckpt_event = token
+            heapq.heappush(heap, (now + self.checkpoint_interval, token,
+                                  CKPT, rj.job.job_id))
+
         def start_job(job: Job, alloc: Allocation):
             rj = RunningJob(job, alloc, start=now, last_update=now,
                             eff_parallelism=self._eff_parallelism(
@@ -461,6 +539,10 @@ class Simulator:
                                   {"job": job.job_id, "t": now,
                                    "placement": list(alloc.placement)}))
             schedule_finish(rj)
+            # a fresh start / restored snapshot IS the baseline
+            # checkpoint a later host failure rolls back to
+            rj.ckpt_progress = rj.progress
+            schedule_ckpt(rj)
             self._on_start(rj, resumed)
 
         def preempt_for(job: Job) -> bool:
@@ -486,6 +568,52 @@ class Simulator:
                 self._on_preempt(rj)
             return True
 
+        def kinds_of() -> Dict[str, str]:
+            return {jid: r.job.kind for jid, r in running.items()}
+
+        def fail_jobs(jids: List[str], hosts: Sequence[int]):
+            """Requeue gangs that lost chips to a host failure: progress
+            rolls back to the last checkpoint, the work since then is
+            lost, and the existing suspend/resume machinery (snapshot
+            restore cost on resume) brings them back."""
+            nonlocal recoveries, lost_work
+            for jid in jids:
+                rj = running.pop(jid)
+                rate = rj.rate()
+                lost = (max(0.0, rj.progress - rj.ckpt_progress) / rate
+                        if rate > 0 else 0.0)
+                lost_work += lost
+                suspended[jid] = rj.ckpt_progress
+                rj.finish_event = -1
+                rj.ckpt_event = -1
+                bisect.insort(queue, rj.job, key=qkey)
+                recoveries += 1
+                actions.append(Action("recover",
+                                      {"job": jid, "t": now,
+                                       "progress": round(
+                                           rj.ckpt_progress, 6),
+                                       "lost_s": round(lost, 6)}))
+                self._on_fail(rj, hosts)
+
+        def apply_evacuations(plans: List[Tuple[str, list]]):
+            """Graceful drain moves: the evacuation planner's decisions,
+            applied through the same migration machinery (and charged
+            the same snapshot-transfer cost)."""
+            nonlocal evacuations
+            for jid, new_pl in plans:
+                r = running[jid]
+                r.alloc = self.engine.apply_migration(r.alloc, new_pl)
+                r.invalidate_rate()        # placement changed
+                r.progress = max(
+                    0.0,
+                    r.progress - self.model.migration_cost_s * r.rate())
+                evacuations += 1
+                actions.append(Action("evacuate",
+                                      {"job": jid, "t": now,
+                                       "placement": list(new_pl)}))
+                self._on_migrate(r)
+                schedule_finish(r)
+
         def pump_queue():
             # one scheduling pass: the per-decision scan latency accrues
             # ONCE per pump (decisions in a pass share one scan of the
@@ -495,6 +623,11 @@ class Simulator:
             # (sharded engine) are genuinely serial per decision and are
             # charged per started job.
             nonlocal now
+            # fleet churn: cross-shard steal attempts budget per pass,
+            # and adaptive resharding may have changed the shard size
+            self.engine.reset_steal_budget()
+            self.sched_latency = (SCHED_LATENCY_PER_HOST
+                                  * self.engine.sched_hosts)
             charged = False
             i = 0
             while i < len(queue):
@@ -529,6 +662,86 @@ class Simulator:
                 if not pending_arrivals and not queue \
                         and drain_time == 0.0:
                     drain_time = now           # backlog ended mid-arrivals
+                continue
+            if kind == FLEET:                  # job_id = schedule index
+                ev = schedule[job_id]
+                now = max(now, t)
+                progress_to(now)
+                self._on_advance(now)
+                out = controller.apply(ev, now, kinds=kinds_of())
+                if ev.kind == "join":
+                    actions.append(Action("join",
+                                          {"t": now,
+                                           "hosts": list(out.joined),
+                                           "chips": int(sum(
+                                               ev.capacities))}))
+                    self._on_join(ev, out.joined)
+                    pump_queue()               # new capacity may unblock
+                elif ev.kind == "fail":
+                    actions.append(Action("host-fail",
+                                          {"t": now,
+                                           "hosts": sorted(
+                                               int(h)
+                                               for h in ev.hosts)}))
+                    self._on_hosts_down(ev.hosts)
+                    fail_jobs(out.failed, ev.hosts)
+                    pump_queue()               # survivors' chips freed
+                else:                          # reclaim: drain begins
+                    actions.append(Action("drain",
+                                          {"t": now,
+                                           "hosts": sorted(
+                                               int(h)
+                                               for h in ev.hosts),
+                                           "deadline": round(
+                                               out.deadline, 6)}))
+                    self._on_drain(ev)
+                    apply_evacuations(out.evacuations)
+                    token += 1
+                    heapq.heappush(heap, (out.deadline, token,
+                                          DEADLINE, job_id))
+                continue
+            if kind == DEADLINE:               # job_id = schedule index
+                ev = schedule[job_id]
+                now = max(now, t)
+                progress_to(now)
+                self._on_advance(now)
+                # last-chance evacuation (capacity may have freed since
+                # the drain began), then the lease is gone: whatever
+                # still holds chips requeues from its checkpoint
+                out = controller.expire(ev, kinds=kinds_of())
+                apply_evacuations(out.evacuations)
+                self._on_hosts_down(ev.hosts)
+                failed = controller.fail(ev.hosts)
+                actions.append(Action("retire",
+                                      {"t": now,
+                                       "hosts": sorted(
+                                           int(h) for h in ev.hosts),
+                                       "failed": list(failed)}))
+                fail_jobs(failed, ev.hosts)
+                pump_queue()
+                continue
+            if kind == CKPT:
+                rj = running.get(job_id)
+                if rj is None or rj.ckpt_event != tok:
+                    continue                   # stale (finished/failed)
+                t = max(now, t)
+                progress_to(t)
+                now = t
+                self._on_advance(now)
+                # the gang pauses for the snapshot save, then the saved
+                # progress becomes the failure rollback point
+                rj.progress = max(
+                    0.0,
+                    rj.progress - self.model.checkpoint_cost_s
+                    * rj.rate())
+                rj.ckpt_progress = rj.progress
+                actions.append(Action("checkpoint",
+                                      {"job": job_id, "t": now,
+                                       "progress": round(
+                                           rj.progress, 6)}))
+                self._on_checkpoint(rj)
+                schedule_finish(rj)
+                schedule_ckpt(rj)
                 continue
             rj = running.get(job_id)
             if rj is None or rj.finish_event != tok:
@@ -585,7 +798,9 @@ class Simulator:
                            cross_host_fractions=chis,
                            preemptions=preemptions,
                            finish_order=finish_order,
-                           finish_times=finish_times, actions=actions)
+                           finish_times=finish_times, actions=actions,
+                           recoveries=recoveries, lost_work_s=lost_work,
+                           evacuations=evacuations)
 
 
 def run_baselines(jobs: List[Job], hosts: int, chips_per_host: int = 8,

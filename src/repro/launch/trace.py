@@ -5,12 +5,20 @@ preemption — through ``core.fabric.Fabric.run_trace``: real concurrent
 train/serve gangs share the CPU host fabric, scheduled by the same
 event loop and placement engine the discrete-event simulator uses, and
 the live per-job completion order is compared against the simulator's
-prediction for the same trace and policy.
+prediction for the same trace.
+
+``--churn`` overlays a fleet-churn regime (``core.fleet``): hosts lease
+in and out mid-trace — spot reclaims drain and evacuate live gangs,
+hard failures roll gangs back to their last snapshot (bit-exact
+resume), and joins pull staged spare devices into the pool.  Composes
+with ``--sched sharded`` (incl. ``--shard-hosts auto``) and
+``--host-regime mixed-gen``.
 
 Example:
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python -m repro.launch.trace --jobs 6 \
-        --arrival-rate 0.05 --chips-per-host 2 --seed 0
+        --arrival-rate 0.05 --chips-per-host 2 --seed 0 \
+        --churn spot-heavy --checkpoint-interval 8
 """
 from __future__ import annotations
 
@@ -20,6 +28,7 @@ import json
 import jax
 
 from repro.configs.registry import reduced_config
+from repro.core import fleet as fleet_mod
 from repro.core import simulator as sim
 from repro.core.fabric import Fabric
 from repro.core.placement import derive_capacities
@@ -49,23 +58,87 @@ def main():
                     help="scheduler architecture: one engine scanning "
                          "every host, or host-group shards with summary-"
                          "index forwarding (the Fig 11 fix)")
-    ap.add_argument("--shard-hosts", type=int, default=None,
-                    help="hosts per shard for --sched sharded "
-                         "(default: placement.DEFAULT_SHARD_HOSTS)")
+    ap.add_argument("--shard-hosts", default=None,
+                    help="hosts per shard for --sched sharded: an int, "
+                         "or 'auto' for adaptive sizing that re-balances "
+                         "under churn (default: "
+                         "placement.DEFAULT_SHARD_HOSTS)")
+    ap.add_argument("--steal-budget", type=int, default=0,
+                    help="cap on cross-shard split/escalation attempts "
+                         "per queue pump (0 = unbounded)")
+    ap.add_argument("--churn", default="none",
+                    choices=("none",) + fleet_mod.CHURN_REGIMES,
+                    help="fleet-churn regime overlaid on the trace "
+                         "(core.fleet.churn_schedule)")
+    ap.add_argument("--churn-rate", type=float, default=0.02,
+                    help="disruptive-event rate (events/s) for the "
+                         "Poisson churn regimes")
+    ap.add_argument("--drain-s", type=float,
+                    default=fleet_mod.DEFAULT_DRAIN_S,
+                    help="drain window for lease reclaims")
+    ap.add_argument("--checkpoint-interval", type=float, default=None,
+                    help="periodic checkpoint cadence in virtual "
+                         "seconds (default: Young/Daly from the churn "
+                         "rate when churn is on, else off)")
     args = ap.parse_args()
+
+    all_devices = list(jax.devices())
+    # churn regimes with joins draw from staged spares: generate the
+    # schedule against the reduced starting fleet, hold back the devices
+    # its joins will need
+    fleet_events = None
+    spares = []
+    devices = all_devices
+    hosts0 = 0
+    # one horizon for the churn schedule AND the Young/Daly estimate
+    horizon = max(60.0, args.jobs / max(args.arrival_rate, 1e-6))
+    if args.churn != "none":
+        # spares must back every join: the regimes reclaim at most half
+        # the starting fleet (like-for-like rejoins), so a third of the
+        # devices staged as spares always suffices
+        total_hosts = max(1, len(all_devices) // args.chips_per_host)
+        n_spare_hosts = min(total_hosts - 1, -(-total_hosts // 3))
+        n_spare = max(0, n_spare_hosts) * args.chips_per_host
+        devices = all_devices[:len(all_devices) - n_spare]
+        assert devices, "fleet too small for churn spares"
+        hosts0 = len(derive_capacities(len(devices),
+                                       args.chips_per_host))
+        fleet_events = fleet_mod.churn_schedule(
+            args.churn, hosts0, args.chips_per_host, horizon,
+            seed=args.seed, rate=args.churn_rate, drain_s=args.drain_s)
+        # drop joins the spare pool cannot back
+        budget, kept = n_spare, []
+        for ev in fleet_events:
+            if ev.kind == "join":
+                need = sum(ev.capacities)
+                if need > budget:
+                    continue
+                budget -= need
+            kept.append(ev)
+        fleet_events = kept
+        spares = all_devices[len(devices):]
+
+    ckpt_interval = args.checkpoint_interval
+    if ckpt_interval is None and fleet_events:
+        mtbf = fleet_mod.churn_mtbf(fleet_events, horizon, hosts=hosts0)
+        tau = fleet_mod.optimal_checkpoint_interval(mtbf)
+        ckpt_interval = None if tau == float("inf") else tau
 
     speeds = None
     if args.host_regime == "mixed-gen":
-        n_hosts = len(derive_capacities(len(jax.devices()),
+        n_hosts = len(derive_capacities(len(devices),
                                         args.chips_per_host))
         speeds = sim.hetero_speeds(n_hosts)
     shard_hosts = None
     if args.sched == "sharded":
         from repro.core.placement import DEFAULT_SHARD_HOSTS
-        shard_hosts = args.shard_hosts or DEFAULT_SHARD_HOSTS
-    fabric = Fabric(chips_per_host=args.chips_per_host,
+        raw = args.shard_hosts
+        shard_hosts = ("auto" if raw == "auto"
+                       else int(raw) if raw else DEFAULT_SHARD_HOSTS)
+    fabric = Fabric(devices=devices, chips_per_host=args.chips_per_host,
                     policy=args.policy, speeds=speeds,
-                    shard_hosts=shard_hosts)
+                    shard_hosts=shard_hosts,
+                    steal_budget=args.steal_budget, spares=spares)
     n_chips = fabric.engine.total_chips
     # mixed train/serve trace sized to the local fabric, two priority
     # classes (9:1 high) — the §2.1 shared-cluster economics, live
@@ -73,8 +146,12 @@ def main():
                            chips_per_host=args.chips_per_host,
                            arrival_rate=args.arrival_rate,
                            priority_classes=[(0, 0.9), (5, 0.1)])
+    # under churn, cap gang sizes at half the starting fleet (the churn
+    # generator never touches more than half the hosts, so every job
+    # stays schedulable through the deepest reclaim trough)
+    cap = n_chips if args.churn == "none" else max(2, n_chips // 2)
     for job in jobs:
-        job.parallelism = max(2, min(job.parallelism, n_chips))
+        job.parallelism = max(2, min(job.parallelism, cap))
 
     cfg = reduced_config(args.arch).with_(n_layers=1, vocab=128)
     dcfg = DataConfig(vocab=128, seq_len=8, global_batch=8,
@@ -82,26 +159,37 @@ def main():
     ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=50)
 
     preempt = not args.no_preempt
-    predicted = fabric.predict_trace(jobs, preempt=preempt)
+    predicted = fabric.predict_trace(jobs, preempt=preempt,
+                                     fleet_events=fleet_events,
+                                     checkpoint_interval=ckpt_interval)
     ex = fabric.run_trace(
         jobs, workload_factory(cfg, ocfg, dcfg,
                                train_steps=args.train_steps,
                                serve_tokens=args.serve_tokens),
-        preempt=preempt)
+        preempt=preempt, fleet_events=fleet_events,
+        checkpoint_interval=ckpt_interval)
     live = ex.result
     print(json.dumps({
-        "devices": len(jax.devices()),
+        "devices": len(fabric.devices),
         "hosts": fabric.engine.hosts,
         "sched": args.sched,
         "shard_hosts": (None if shard_hosts is None
                         else fabric.engine.hosts_per_shard),
+        "steal_budget": args.steal_budget,
         "host_speeds": (None if fabric.engine.speeds is None
                         else list(fabric.engine.speeds)),
         "jobs": len(jobs),
+        "churn": args.churn,
+        "churn_events": 0 if not fleet_events else len(fleet_events),
+        "checkpoint_interval_s": (None if ckpt_interval is None
+                                  else round(ckpt_interval, 2)),
         "predicted_order": predicted.finish_order,
         "live_order": live.finish_order,
         "order_matches": live.finish_order == predicted.finish_order,
         "preemptions": live.preemptions,
+        "recoveries": live.recoveries,
+        "evacuations": live.evacuations,
+        "lost_work_s": round(live.lost_work_s, 2),
         "virtual_makespan_s": round(live.makespan, 2),
         "per_job_makespan_s": {k: round(v, 2)
                                for k, v in ex.job_makespans(jobs).items()},

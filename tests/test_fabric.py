@@ -87,6 +87,52 @@ def test_infer_host_speeds_uniform_pool_is_homogeneous():
     assert speeds == [0.75, 0.25, 0.75]     # ragged last host included
 
 
+def test_join_hosts_infers_generation_speeds():
+    from repro.core.fabric import Fabric
+
+    class Dev:
+        def __init__(self, kind):
+            self.device_kind = kind
+
+    # an older-generation host joining a uniform fleet re-opens the
+    # heterogeneous path at its relative speed
+    fab = Fabric(devices=[Dev("TPU v5")] * 4, chips_per_host=2)
+    assert fab.engine.speeds is None
+    new = fab.join_hosts([Dev("TPU v2")] * 2)
+    assert new == [2]
+    assert list(fab.engine.speeds) == [1.0, 1.0, 0.25]
+    assert fab.engine.heterogeneous
+    # same-generation joiners keep the uniform fast path (relative 1.0
+    # even when the shared generation is not the newest)
+    fab2 = Fabric(devices=[Dev("TPU v4")] * 4, chips_per_host=2)
+    fab2.join_hosts([Dev("TPU v4")] * 2)
+    assert fab2.engine.speeds is None and fab2.engine.hosts == 3
+    # joining an already-heterogeneous fleet uses absolute factors
+    fab3 = Fabric(devices=[Dev("TPU v5")] * 2 + [Dev("TPU v3")] * 2,
+                  chips_per_host=2)
+    fab3.join_hosts([Dev("TPU v4")] * 2)
+    assert list(fab3.engine.speeds) == [1.0, 0.45, 0.75]
+
+
+def test_fabric_pool_churn_drops_doomed_devices():
+    from repro.core.fabric import Fabric
+
+    class Dev:
+        def __init__(self, i):
+            self.i = i
+
+    devs = [Dev(i) for i in range(6)]
+    fab = Fabric(devices=devs, chips_per_host=2)
+    taken = fab.claim([(0, 2), (1, 1)])
+    fab.mark_draining([1])
+    assert fab._free[1] == []            # free chips surrendered
+    fab.reclaim(taken)
+    assert fab._free[0] == devs[0:2]     # host-0 devices return
+    assert fab._free[1] == []            # draining-host device dropped
+    fab.fail_hosts_pool([2])
+    assert fab._free[2] == [] and 2 in fab._retired_hosts
+
+
 # ---------------------------------------------------------------------------
 # GranuleGroup: in-place re-address keeps queues + epoch (paper Fig 8)
 # ---------------------------------------------------------------------------
@@ -399,6 +445,90 @@ def test_sharded_fabric_run_trace_matches_prediction():
         p2 = central.predict_trace(jobs, preempt=True)
         assert p1.actions == p2.actions
         print("single-shard-parity-ok")
+    """))
+
+
+def test_fleet_churn_hard_fail_resumes_bit_exact_live():
+    # fleet-churn acceptance: a running gang's host hard-fails mid-run;
+    # live execution rolls it back to its last real snapshot and resumes
+    # bit-exactly (fingerprint-verified), the trace Action log matches
+    # predict_trace event-for-event (central AND sharded), a reclaim
+    # drains gracefully through the evacuation planner, and a join pulls
+    # staged spare devices into the pool
+    print(run_sub("""
+        import jax
+        from repro.configs.registry import reduced_config
+        from repro.data.pipeline import DataConfig
+        from repro.optim.adamw import AdamWConfig
+        from repro.core.fabric import Fabric
+        from repro.core.fleet import FleetEvent
+        from repro.core.simulator import Job
+        from repro.runtime.gang_workloads import workload_factory
+
+        cfg = reduced_config("llama3.2-1b").with_(n_layers=1, vocab=128)
+        dcfg = DataConfig(vocab=128, seq_len=8, global_batch=8)
+        ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+        jobs = [
+            Job("train-a", "mpi-compute", 4, 200.0, arrival=0.0,
+                workload="train"),
+            Job("serve-0", "omp", 2, 120.0, arrival=0.0, priority=1,
+                workload="serve"),
+        ]
+        devs = jax.devices()
+        # 6 devices in the fabric (3 hosts of 2), 2 staged as spares
+        events = [FleetEvent(6.0, "fail", hosts=[0]),
+                  FleetEvent(10.0, "join", capacities=[2])]
+        for shard_hosts in (None, 2):
+            fab = Fabric(devices=devs[:6], chips_per_host=2,
+                         shard_hosts=shard_hosts, spares=devs[6:])
+            pred = fab.predict_trace(jobs, preempt=True,
+                                     fleet_events=events,
+                                     checkpoint_interval=4.0)
+            assert pred.recoveries >= 1, pred.recoveries
+            ex = fab.run_trace(
+                jobs, workload_factory(cfg, ocfg, dcfg, train_steps=3,
+                                       serve_tokens=3),
+                preempt=True, fleet_events=events,
+                checkpoint_interval=4.0)
+            res = ex.result
+            # live Action log == simulated Action log, event for event
+            assert res.actions == pred.actions
+            assert res.recoveries == pred.recoveries >= 1
+            assert res.finish_order == pred.finish_order
+            # the failed gang took real checkpoints, lost its host, and
+            # resumed bit-exactly (resume() fingerprint-verifies)
+            victim = next(a.payload["job"] for a in res.actions
+                          if a.kind == "recover")
+            rec = ex.live[victim]
+            assert rec["failures"] >= 1
+            assert rec["checkpoints"] >= 1
+            assert rec["resumes_verified"] >= 1
+            assert ex.live[victim]["steps"] >= 3
+            # every job still finished on the churned fleet
+            assert set(res.finish_order) == {j.job_id for j in jobs}
+            label = "central" if shard_hosts is None else "sharded"
+            print(f"churn-fail-{label}-ok", res.finish_order)
+
+        # graceful reclaim: with free capacity elsewhere, the drained
+        # gang evacuates through the planner (live reshard, no rollback)
+        small = [Job("train-a", "mpi-compute", 2, 150.0, arrival=0.0,
+                     workload="train"),
+                 Job("serve-0", "omp", 2, 120.0, arrival=0.0,
+                     priority=1, workload="serve")]
+        fab = Fabric(devices=devs[:6], chips_per_host=2,
+                     spares=devs[6:])
+        events = [FleetEvent(5.0, "reclaim", hosts=[2], drain_s=30.0)]
+        pred = fab.predict_trace(small, preempt=True,
+                                 fleet_events=events)
+        ex = fab.run_trace(
+            small, workload_factory(cfg, ocfg, dcfg, train_steps=3,
+                                    serve_tokens=3),
+            preempt=True, fleet_events=events)
+        assert ex.result.actions == pred.actions
+        assert ex.result.evacuations == pred.evacuations >= 1
+        assert ex.result.recoveries == 0
+        assert set(ex.result.finish_order) == {j.job_id for j in small}
+        print("churn-drain-ok", ex.result.evacuations)
     """))
 
 

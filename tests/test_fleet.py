@@ -1,0 +1,433 @@
+"""Fleet-churn subsystem (core.fleet + engine/simulator churn paths).
+
+Pillars:
+
+* engine churn primitives — add/drain/fail hosts conserve accounting,
+  draining hosts take no new placements and retire freed chips, the
+  evacuation planner never lands on doomed hosts;
+* churn-free bit-identity — traces with no fleet events (and no
+  checkpoint interval) are action-for-action identical to the pre-churn
+  code path, central and sharded;
+* simulator churn semantics — joins unblock queues, drains evacuate
+  gracefully, hard failures requeue from the last checkpoint with lost
+  work accounted, and the Young/Daly cadence reduces lost work;
+* PR-4 follow-ons — adaptive shard sizing ("auto" + resharding under
+  churn) and the per-pump steal budget.
+"""
+import numpy as np
+import pytest
+
+from repro.core import fleet as F
+from repro.core import simulator as S
+from repro.core.fleet import (FleetController, FleetEvent, churn_mtbf,
+                              churn_schedule, optimal_checkpoint_interval)
+from repro.core.placement import (PlacementEngine, ShardedPlacementEngine,
+                                  auto_shard_hosts)
+
+
+# ---------------------------------------------------------------------------
+# engine churn primitives
+# ---------------------------------------------------------------------------
+def test_add_hosts_extends_fleet_and_accounting():
+    eng = PlacementEngine(2, 8)
+    a = eng.allocate("a", 12)
+    new = eng.add_hosts([8, 4])
+    assert new == [2, 3]
+    assert eng.hosts == 4 and eng.total_chips == 28
+    assert eng.idle_chips() == 28 - 12 == int(eng.free.sum())
+    b = eng.allocate("b", 12)            # needs the joined capacity
+    assert b is not None
+    eng.release(a), eng.release(b)
+    assert eng.idle_chips() == eng.total_chips
+
+
+def test_add_hosts_speeds_pad_both_ways():
+    # homogeneous engine + fast joiners -> speeds materialise at 1.0
+    eng = PlacementEngine(2, 8)
+    eng.add_hosts([8], speeds=[2.0])
+    assert eng.speeds is not None and list(eng.speeds) == [1.0, 1.0, 2.0]
+    assert eng.heterogeneous
+    # hetero engine + speedless joiners -> joiners at 1.0
+    eng2 = PlacementEngine(2, 8, speeds=[0.5, 1.0])
+    eng2.add_hosts([8])
+    assert list(eng2.speeds) == [0.5, 1.0, 1.0]
+    assert eng2.idle_throughput() == pytest.approx(0.5 * 8 + 8 + 8)
+
+
+def test_drain_hosts_blocks_placement_and_retires_frees():
+    eng = PlacementEngine(3, 8)
+    a = eng.allocate("a", 4)
+    target = a.placement[0][0]           # drain the gang's host
+    eng.drain_hosts([target])
+    assert eng.free[target] == 0 and eng.capacities[target] == 4
+    assert eng.idle_chips() == int(eng.free.sum()) == 16
+    # nothing new lands on the draining host
+    b = eng.allocate("b", 16)
+    assert b is not None and all(h != target for h, _ in b.placement)
+    # releasing the gang on the draining host retires its chips
+    eng.release(a)
+    assert eng.capacities[target] == 0 and eng.free[target] == 0
+    assert eng.total_chips == 16
+
+
+def test_fail_hosts_requeues_victims_and_conserves():
+    eng = PlacementEngine(3, 4)
+    spans = eng.bind("spans", [(0, 2), (1, 2)])
+    safe = eng.allocate("safe", 4)       # host 2 (most free after bind)
+    assert spans and safe
+    failed = eng.fail_hosts([0])
+    assert failed == ["spans"]
+    assert "spans" not in eng.allocations and "safe" in eng.allocations
+    # surviving chips of the victim returned; dead host zeroed
+    assert eng.capacities[0] == 0 and eng.free[0] == 0
+    assert eng.idle_chips() == int(eng.free.sum()) == 4
+    assert eng.total_chips == 8
+    # nothing left to fail on an already-dead host
+    assert eng.fail_hosts([0]) == []
+
+
+def test_evacuation_plan_avoids_doomed_hosts_and_reports_stranded():
+    eng = PlacementEngine(3, 4)
+    a = eng.allocate("move", 4)
+    hosts_a = {h for h, _ in a.placement}
+    target = next(iter(hosts_a))
+    eng.allocate("fill-1", 4)
+    eng.allocate("fill-2", 4)            # fleet now full
+    eng.drain_hosts([target])
+    plans, stranded = eng.evacuation_plan([target])
+    # every chip is held: the draining gang has nowhere to go
+    assert plans == [] and stranded == ["move"]
+    # free a host elsewhere -> the plan lands entirely off the doomed one
+    other = next(jid for jid, al in eng.allocations.items()
+                 if jid != "move" and target not in
+                 {h for h, _ in al.placement})
+    eng.release(eng.allocations[other])
+    plans, stranded = eng.evacuation_plan([target])
+    assert stranded == [] and len(plans) == 1
+    jid, pl = plans[0]
+    assert jid == "move" and all(h != target for h, _ in pl)
+    eng.apply_migration(eng.allocations["move"], pl)
+    assert eng.capacities[target] == 0   # vacated chips retired
+
+
+def test_overlapping_reclaims_never_credit_earlier_draining_hosts():
+    # regression: a gang spanning two reclaims — host 0 drains first
+    # (gang stranded), then host 1 — must not count its host-0 chips as
+    # a landing spot in the second pass (pre-fix this planned onto the
+    # draining host and apply_migration crashed on oversubscription)
+    eng = PlacementEngine(3, 2)
+    eng.bind("g", [(0, 1), (1, 2)])
+    other = eng.allocate("other", 2)     # host 2
+    eng.drain_hosts([0])
+    plans, stranded = eng.evacuation_plan([0])
+    assert plans == [] and stranded == ["g"]
+    eng.release(other)                   # host 2 frees up (2 chips)
+    eng.drain_hosts([1])
+    plans, stranded = eng.evacuation_plan([1])
+    # only 2 safe chips exist for a 3-chip gang: stranded, not a crash
+    assert plans == [] and stranded == ["g"]
+    # and once enough safe capacity exists the plan avoids BOTH
+    # draining hosts
+    eng.add_hosts([2])
+    plans, stranded = eng.evacuation_plan([1])
+    assert stranded == [] and len(plans) == 1
+    assert all(not eng.draining[h] for h, _ in plans[0][1])
+    eng.apply_migration(eng.allocations["g"], plans[0][1])
+    assert eng.idle_chips() == int(eng.free.sum())
+
+
+def test_preemption_fit_probe_ignores_draining_chips():
+    eng = PlacementEngine(2, 8)
+    a = eng.allocate("low", 8)
+    eng.allocate("low2", 8)
+    eng.drain_hosts([a.placement[0][0]])
+    # evicting "low" frees only draining chips the arrival cannot use,
+    # so the plan must evict low2 (and prune low back out)
+    plan = eng.preemption_plan(8, 5, {"low": 0, "low2": 0})
+    assert plan == ["low2"]
+
+
+def test_sharded_summaries_consistent_under_churn():
+    rng = np.random.default_rng(4)
+    eng = ShardedPlacementEngine(12, 8, hosts_per_shard=4)
+    allocs = {}
+    drained = []
+    for i in range(300):
+        u = rng.random()
+        if u < 0.35 and allocs:
+            jid = sorted(allocs)[int(rng.integers(len(allocs)))]
+            eng.release(allocs.pop(jid))
+        elif u < 0.42 and eng.alive_hosts() > 6:
+            cands = [h for h in range(eng.hosts)
+                     if eng.capacities[h] > 0 and not eng.draining[h]]
+            victim = int(cands[int(rng.integers(len(cands)))])
+            if u < 0.38:
+                for jid in eng.fail_hosts([victim]):
+                    allocs.pop(jid)
+            else:
+                eng.drain_hosts([victim])
+                drained.append(victim)
+        elif u < 0.47:
+            eng.add_hosts([int(rng.integers(1, 9))])
+        else:
+            a = eng.allocate(f"j{i}", int(rng.integers(1, 16)))
+            if a is not None:
+                allocs[a.job_id] = a
+        assert eng.idle_chips() == int(eng.free.sum())
+        assert (eng.free <= eng.capacities).all()
+        assert (eng.free[eng.draining] == 0).all()
+        for s, (lo, hi) in enumerate(eng.shard_bounds):
+            assert eng._shard_idle[s] == eng.free[lo:hi].sum()
+    for a in list(allocs.values()):
+        eng.release(a)
+    assert eng.idle_chips() == eng.total_chips
+
+
+# ---------------------------------------------------------------------------
+# churn-free bit-identity + controller
+# ---------------------------------------------------------------------------
+def test_churn_free_traces_bit_identical():
+    jobs = S.mixed_trace(60, seed=7, arrival_rate=0.3,
+                         priority_classes=[(0, 0.8), (5, 0.2)])
+    for sched, shards in (("central", None), ("sharded", 8)):
+        a = S.Simulator(16, 8, "granular", migrate=True, preempt=True,
+                        sched=sched, shard_hosts=shards).run(list(jobs))
+        b = S.Simulator(16, 8, "granular", migrate=True, preempt=True,
+                        sched=sched, shard_hosts=shards).run(
+            list(jobs), fleet_events=[])
+        assert a.actions == b.actions and a.makespan == b.makespan
+        assert b.recoveries == 0 and b.evacuations == 0
+        assert b.lost_work_s == 0.0
+
+
+def test_fleet_controller_outcomes():
+    eng = PlacementEngine(2, 8)
+    a = eng.allocate("a", 8)
+    gang_host = a.placement[0][0]
+    ctl = FleetController(eng)
+    out = ctl.apply(FleetEvent(0.0, "join", capacities=[8]), now=0.0)
+    assert out.joined == [2] and eng.hosts == 3
+    out = ctl.apply(FleetEvent(1.0, "reclaim", hosts=[gang_host],
+                               drain_s=4.0), now=1.0)
+    assert out.deadline == 5.0
+    assert [jid for jid, _ in out.evacuations] == ["a"]
+    assert all(h != gang_host
+               for _, pl in out.evacuations for h, _ in pl)
+    # the caller did not move the gang: expiry fails it
+    out2 = ctl.expire(FleetEvent(1.0, "reclaim", hosts=[gang_host]),
+                      kinds=None)
+    assert [jid for jid, _ in out2.evacuations] == ["a"]
+    failed = ctl.fail([gang_host])
+    assert failed == ["a"] and eng.capacities[gang_host] == 0
+
+
+def test_fleet_event_validation():
+    with pytest.raises(AssertionError):
+        FleetEvent(0.0, "join")            # no capacities
+    with pytest.raises(AssertionError):
+        FleetEvent(0.0, "fail")            # no hosts
+    with pytest.raises(AssertionError):
+        FleetEvent(0.0, "bogus", hosts=[1])
+
+
+# ---------------------------------------------------------------------------
+# simulator churn semantics
+# ---------------------------------------------------------------------------
+def test_join_event_unblocks_queued_job():
+    jobs = [S.Job("first", "mpi-compute", 16, 160.0),
+            S.Job("blocked", "mpi-compute", 16, 160.0)]
+    # 2 hosts x 8: only one 16-gang fits at a time...
+    base = S.Simulator(2, 8, "granular").run(list(jobs))
+    # ...but a join at t=5 lets the second start immediately after
+    r = S.Simulator(2, 8, "granular").run(
+        list(jobs), fleet_events=[FleetEvent(5.0, "join",
+                                             capacities=[8, 8])])
+    assert [a.kind for a in r.actions].count("join") == 1
+    assert r.makespan < base.makespan
+    starts = {a.payload["job"]: a.payload["t"] for a in r.actions
+              if a.kind == "start"}
+    assert starts["blocked"] == pytest.approx(
+        5.0 + S.SCHED_LATENCY_PER_HOST * 4)
+
+
+def test_graceful_drain_evacuates_without_lost_work():
+    # both gangs land on the upper hosts (binpack ties pick the highest
+    # index); reclaiming those hosts forces both onto the free lower two
+    jobs = [S.Job("a", "mpi-compute", 8, 240.0),
+            S.Job("b", "mpi-compute", 8, 240.0)]
+    r = S.Simulator(4, 8, "granular").run(
+        list(jobs),
+        fleet_events=[FleetEvent(5.0, "reclaim", hosts=[2, 3],
+                                 drain_s=10.0)])
+    assert r.evacuations == 2 and r.recoveries == 0
+    assert r.lost_work_s == 0.0
+    assert len(r.finish_order) == 2
+    kinds = [a.kind for a in r.actions]
+    assert "drain" in kinds and "evacuate" in kinds and "retire" in kinds
+    for ev in (a for a in r.actions if a.kind == "evacuate"):
+        assert all(h in (0, 1) for h, _ in ev.payload["placement"])
+
+
+def test_hard_fail_requeues_from_checkpoint_and_accounts_lost_work():
+    jobs = [S.Job("victim", "mpi-compute", 8, 240.0)]
+    # no checkpoints: the failure rolls back to the start
+    r = S.Simulator(1, 8, "granular").run(
+        list(jobs), fleet_events=[FleetEvent(10.0, "fail", hosts=[0]),
+                                  FleetEvent(12.0, "join",
+                                             capacities=[8])])
+    assert r.recoveries == 1
+    assert r.lost_work_s == pytest.approx(10.0, abs=0.1)
+    assert len(r.finish_order) == 1      # recovered and finished
+    rec = next(a for a in r.actions if a.kind == "recover")
+    assert rec.payload["progress"] == 0.0
+    # the resume action restarts the gang on the joined host
+    resume = next(a for a in r.actions if a.kind == "resume")
+    assert all(h == 1 for h, _ in resume.payload["placement"])
+
+
+def test_checkpoint_cadence_bounds_lost_work():
+    jobs = [S.Job("victim", "mpi-compute", 8, 240.0)]
+    events = [FleetEvent(20.0, "fail", hosts=[0]),
+              FleetEvent(22.0, "join", capacities=[8])]
+    no_ckpt = S.Simulator(1, 8, "granular").run(list(jobs),
+                                                fleet_events=events)
+    ckpt = S.Simulator(1, 8, "granular", checkpoint_interval=5.0).run(
+        list(jobs), fleet_events=events)
+    assert no_ckpt.lost_work_s > 15.0
+    # at most one interval (+ checkpoint pauses) can be lost
+    assert ckpt.lost_work_s < 6.0
+    assert sum(1 for a in ckpt.actions if a.kind == "checkpoint") >= 3
+    assert len(ckpt.finish_order) == 1
+    # checkpoints cost time: the protected run finishes later than an
+    # unprotected churn-free one would
+    assert ckpt.makespan < no_ckpt.makespan
+
+
+def test_deadline_retries_evacuation_when_capacity_frees():
+    # at drain time the fleet is full (no evacuation possible); a gang
+    # finishing before the deadline frees room and the last-chance pass
+    # moves the draining gang instead of failing it
+    jobs = [S.Job("short", "mpi-compute", 8, 40.0),
+            S.Job("long", "mpi-compute", 8, 400.0)]
+    r = S.Simulator(2, 8, "granular").run(
+        list(jobs), fleet_events=[FleetEvent(1.0, "reclaim",
+                                             hosts=[0],
+                                             drain_s=20.0)])
+    # short (host 1) finishes at ~5s freeing it; the deadline's
+    # last-chance pass then moves long (host 0) instead of failing it
+    assert r.evacuations == 1 and r.recoveries == 0
+    assert len(r.finish_order) == 2
+
+
+def test_single_shard_churn_trace_bit_identical_to_central():
+    jobs = S.mixed_trace(50, seed=9, arrival_rate=0.3,
+                         priority_classes=[(0, 0.8), (5, 0.2)])
+    events = churn_schedule("spot-heavy", 16, 8, 150.0, seed=3,
+                            rate=0.03)
+    central = S.Simulator(16, 8, "granular", migrate=True,
+                          preempt=True).run(list(jobs),
+                                            fleet_events=events)
+    sharded = S.Simulator(16, 8, "granular", migrate=True, preempt=True,
+                          sched="sharded", shard_hosts=4096).run(
+        list(jobs), fleet_events=events)
+    assert sharded.actions == central.actions
+    assert sharded.makespan == central.makespan
+
+
+@pytest.mark.parametrize("regime", F.CHURN_REGIMES)
+def test_churn_regimes_complete_all_jobs(regime):
+    jobs = S.mixed_trace(40, seed=11, arrival_rate=0.25)
+    events = churn_schedule(regime, 16, 8, 200.0, seed=5, rate=0.02)
+    assert events, regime
+    r = S.Simulator(16, 8, "granular", migrate=True,
+                    checkpoint_interval=10.0).run(list(jobs),
+                                                  fleet_events=events)
+    assert len(r.finish_order) == 40
+    assert r.makespan > 0
+
+
+# ---------------------------------------------------------------------------
+# Young/Daly checkpoint-interval policy
+# ---------------------------------------------------------------------------
+def test_young_daly_interval():
+    assert optimal_checkpoint_interval(800.0, 0.5) \
+        == pytest.approx((2 * 0.5 * 800.0) ** 0.5)
+    assert optimal_checkpoint_interval(float("inf")) == float("inf")
+    events = [FleetEvent(10.0, "fail", hosts=[0, 1]),
+              FleetEvent(50.0, "reclaim", hosts=[2]),
+              FleetEvent(60.0, "join", capacities=[8])]
+    # unweighted: 2 disruptions over 100s
+    assert churn_mtbf(events, 100.0) == pytest.approx(50.0)
+    # blast-weighted: (2 + 1)/8 of the fleet
+    assert churn_mtbf(events, 100.0, hosts=8) \
+        == pytest.approx(100.0 / (3 / 8))
+    assert churn_mtbf([], 100.0) == float("inf")
+
+
+# ---------------------------------------------------------------------------
+# PR-4 follow-ons: adaptive shard sizing + steal budget
+# ---------------------------------------------------------------------------
+def test_auto_shard_sizing_and_resharding_under_churn():
+    assert auto_shard_hosts(128) == 16
+    assert auto_shard_hosts(2) == 2
+    eng = ShardedPlacementEngine(32, 8, hosts_per_shard="auto")
+    assert eng.hosts_per_shard == auto_shard_hosts(32) == 8
+    a = eng.allocate("a", 20)
+    # fleet quadruples: the resharding hook re-derives the shard size
+    eng.add_hosts([8] * 96)
+    assert eng.hosts_per_shard == auto_shard_hosts(128) == 16
+    assert eng.n_shards == 8
+    assert eng.idle_chips() == int(eng.free.sum())
+    # existing allocations survive the reshard
+    eng.release(a)
+    assert eng.idle_chips() == eng.total_chips
+    # numeric specs re-apply their fleet clamp after joins (single-shard
+    # parity survives growth)
+    one = ShardedPlacementEngine(4, 8, hosts_per_shard=64)
+    assert one.n_shards == 1
+    one.add_hosts([8] * 4)
+    assert one.n_shards == 1 and one.hosts_per_shard == 8
+
+
+def test_steal_budget_caps_cross_shard_splits():
+    # 2 shards of 1 host; a 12-chip gang must split across shards
+    free_budget = ShardedPlacementEngine(2, 8, hosts_per_shard=1)
+    assert free_budget.allocate("split", 12) is not None
+    # direct (one-shot) use: the cap applies per decision, so a caller
+    # is never starved by budget a *past* decision spent
+    capped = ShardedPlacementEngine(2, 8, hosts_per_shard=1,
+                                    steal_budget=1)
+    a = capped.allocate("split-1", 12)
+    assert a is not None
+    capped.release(a)
+    assert capped.allocate("split-2", 12) is not None
+    # loop-managed (the simulator's queue pump owns the lifecycle):
+    # budget persists across decisions until the pump resets it
+    managed = ShardedPlacementEngine(2, 8, hosts_per_shard=1,
+                                     steal_budget=1)
+    managed.external_budget_reset = True
+    managed.reset_steal_budget()
+    b = managed.allocate("m-1", 12)       # split spends the budget
+    assert b is not None
+    managed.release(b)
+    assert managed.allocate("m-2", 11) is None   # spent this pump
+    managed.reset_steal_budget()                 # next pump
+    assert managed.allocate("m-3", 11) is not None
+
+
+def test_steal_budget_resets_per_pump_in_simulator():
+    # two 12-chip gangs need splits; budget 1 forces them into separate
+    # pumps but both still run (the queue retries after each event)
+    jobs = [S.Job("a", "mpi-compute", 12, 80.0),
+            S.Job("b", "mpi-compute", 12, 80.0),
+            S.Job("c", "mpi-compute", 12, 80.0)]
+    sim = S.Simulator(4, 8, "granular", sched="sharded", shard_hosts=1,
+                      steal_budget=1)
+    r = sim.run(list(jobs))
+    assert len(r.finish_order) == 3
+    # unbounded budget is bit-identical to the pre-budget engine
+    a = S.Simulator(4, 8, "granular", sched="sharded",
+                    shard_hosts=2).run(list(jobs))
+    b = S.Simulator(4, 8, "granular", sched="sharded", shard_hosts=2,
+                    steal_budget=0).run(list(jobs))
+    assert a.actions == b.actions
