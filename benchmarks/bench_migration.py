@@ -57,6 +57,29 @@ moved2, stats2 = migration.migrate_via_snapshot(
 out["delta_migration_s"] = round(time.perf_counter() - t0, 3)
 out["delta_bytes_mb"] = round(stats2["moved_bytes"] / 2**20, 3)
 assert migration.verify_migration(state2, moved2)
+
+# delta-chain checkpointing of the same live model state: one full
+# base then per-step diffs (CheckpointManager delta_chain), restored
+# bit-exactly through the chain
+import tempfile
+from repro.checkpoint.manager import CheckpointManager
+with tempfile.TemporaryDirectory() as td:
+    mgr = CheckpointManager(td, "mig", delta_chain=True,
+                            rebase_every=4)
+    st = state2
+    t0 = time.perf_counter()
+    for s in range(3):
+        st = {"params": dict(st["params"]), "opt": st["opt"]}
+        st["params"]["final_norm"] = st["params"]["final_norm"] * 1.001
+        mgr.save(s, st)
+    out["delta_chain_save_s"] = round(time.perf_counter() - t0, 3)
+    deltas = [x["bytes"] for x in mgr.stats if x["kind"] == "delta"]
+    out["delta_chain_link_mb"] = round(sum(deltas) / len(deltas)
+                                       / 2**20, 3)
+    out["delta_chain_full_mb"] = round(mgr.stats[0]["full_bytes"]
+                                       / 2**20, 1)
+    restored, step = mgr.restore(2)
+    assert step == 2
 print(json.dumps(out))
 """
 

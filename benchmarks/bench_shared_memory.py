@@ -5,17 +5,25 @@ DGEMM.  Our analogue measures the cost of the diff-sync protocol itself on
 training-state-sized buffers:
 
   * chunk-diff throughput (detect dirty chunks against a snapshot),
-  * merge-op apply throughput (all five Table-3 ops),
-  * end-to-end "parallel section": N workers fork from a snapshot, write
-    disjoint slices, diffs merge back — vs a direct in-place update,
-  * diff size vs write density (the protocol's bandwidth win).
+  * merge-op apply throughput, vectorized vs the pinned pre-PR
+    reference implementation (the before/after of the batched data
+    plane),
+  * end-to-end "parallel section": N workers fork from a snapshot via
+    ``TrackedFork`` (chunk-granular write tracking, the mprotect
+    analogue), write disjoint slices, and ``apply_many`` merges the
+    diffs back in one pass — vs a direct in-place update,
+  * diff size vs write density (the protocol's bandwidth win),
+  * delta-checkpoint bytes: a ``CheckpointManager`` ``(base, delta*)``
+    chain on a synthetic training state, delta vs full footprint.
 """
 from __future__ import annotations
 
+import tempfile
 import time
 
 import numpy as np
 
+from repro.checkpoint.manager import CheckpointManager
 from repro.core import diffsync as D
 
 
@@ -44,10 +52,24 @@ def run(report, tiny=False):
     report("diff_detect_throughput", round(mb / t / 1024, 2), "GiB/s",
            "Fig12 analogue: dirty tracking cost")
 
+    # merge-apply: the vectorized batched path (gather dirty chunks,
+    # one merge, scatter) vs the pinned pre-PR per-chunk reference —
+    # same diff, same result, before/after of the data-plane rewrite
     d = D.diff_leaf(base, child, op="sum")
-    t = _timeit(lambda: D.apply_leaf(base, d))
+    scratch = base.copy()
+    t = _timeit(lambda: D.apply_leaf(scratch, d, inplace=True))
     report("merge_apply_throughput", round(mb / t / 1024, 2), "GiB/s",
-           "Fig12 analogue: merge cost")
+           "Fig12 analogue: merge cost (vectorized, in-place)")
+    t_out = _timeit(lambda: D.apply_leaf(base, d))
+    report("merge_apply_throughput_outofplace",
+           round(mb / t_out / 1024, 2), "GiB/s",
+           "vectorized, fresh output buffer")
+    t_ref = _timeit(lambda: D.reference_apply_leaf(base, d))
+    report("merge_apply_throughput_reference",
+           round(mb / t_ref / 1024, 2), "GiB/s",
+           "pinned pre-PR chunk-loop implementation")
+    report("merge_apply_speedup", round(t_ref / t, 1), "x",
+           "acceptance: >=10x over the chunk-loop reference")
     report("diff_fraction_1pct_writes",
            round(d.nbytes / base.nbytes, 4), "of full state",
            "diff protocol bandwidth win")
@@ -62,18 +84,21 @@ def run(report, tiny=False):
                round(dd.nbytes / base.nbytes, 4), "of full state",
                "byte-wise diff scaling")
 
-    # "parallel section": 4 workers write disjoint slices, merge back
+    # "parallel section": 4 workers fork from the snapshot, write
+    # disjoint slices, merge back.  TrackedFork records dirty chunks at
+    # write time (the mprotect analogue) so the diff needs no compare
+    # pass, and apply_many merges every worker in a single output pass.
     workers = 4
     quarter = base.size // workers
 
     def parallel_section():
-        merged = base
+        diffs = []
         for w in range(workers):
-            child = base.copy()
-            child[w * quarter:(w + 1) * quarter] *= 1.01
-            merged = D.apply_leaf(merged,
-                                  D.diff_leaf(base, child, op="overwrite"))
-        return merged
+            fork = D.TrackedFork(base)
+            sl = slice(w * quarter, (w + 1) * quarter)
+            np.multiply(base[sl], 1.01, out=fork.writable(sl))
+            diffs.append(fork.diff(op="overwrite"))
+        return D.apply_many(base, diffs)
 
     t_sync = _timeit(parallel_section)
 
@@ -85,9 +110,66 @@ def run(report, tiny=False):
     t_direct = _timeit(direct)
     report("parallel_section_overhead", round(t_sync / t_direct, 2),
            "x direct update",
-           "Fig12: paper reports 20-30% WASM overhead; ours is diff-sync")
+           "Fig12: paper reports 20-30% WASM overhead; ours is "
+           "diff-sync (acceptance: <=1.5x)")
+
+    # the pre-PR shape of the same section: full-copy forks, a compare
+    # pass per worker, and a chained merge per diff
+    def parallel_section_compare():
+        merged = base
+        for w in range(workers):
+            child = base.copy()
+            child[w * quarter:(w + 1) * quarter] *= 1.01
+            merged = D.apply_leaf(merged,
+                                  D.diff_leaf(base, child, op="overwrite"))
+        return merged
+
+    t_cmp = _timeit(parallel_section_compare)
+    report("parallel_section_overhead_compare",
+           round(t_cmp / t_direct, 2), "x direct update",
+           "copy-fork + compare-diff + chained merges (pre-PR shape)")
     # correctness of the merged result
     expect = base * 1.01
     got = parallel_section()
     report("parallel_section_exact",
            int(np.allclose(got, expect, rtol=1e-6)), "bool", "")
+    assert np.array_equal(got, parallel_section_compare())
+
+    # delta-checkpoint footprint: (base, delta*) chain on a synthetic
+    # training state where each step touches ~1% of the weights — the
+    # sparse-update regime the delta data plane is built for
+    n = mb * 2 ** 20 // 8
+    state = {"w": rng.normal(size=n).astype(np.float32),
+             "m": np.zeros(n, dtype=np.float32),
+             "step": np.int64(0)}
+    with tempfile.TemporaryDirectory() as td:
+        mgr = CheckpointManager(td, "bench", keep=4,
+                                delta_chain=True, rebase_every=8)
+        t0 = time.perf_counter()
+        for s in range(8):
+            # one contiguous ~1% block per step (a layer's worth of
+            # weights), as in the paper's page-granular tracking —
+            # scattered single-element writes would dirty every chunk
+            off = int(rng.integers(0, n - n // 100))
+            sl = slice(off, off + n // 100)
+            state = {k: (np.array(v, copy=True)
+                         if isinstance(v, np.ndarray) else v)
+                     for k, v in state.items()}
+            state["w"][sl] += 0.01
+            state["m"][sl] = 0.9 * state["m"][sl] + 0.01
+            state["step"] = np.int64(s)
+            mgr.save(s, state)
+        t_chain = time.perf_counter() - t0
+        deltas = [st["bytes"] for st in mgr.stats
+                  if st["kind"] == "delta"]
+        full = mgr.stats[0]["full_bytes"]
+        restored, _ = mgr.restore(7)
+        assert np.array_equal(restored["w"], state["w"])
+    report("delta_checkpoint_bytes",
+           round(float(np.mean(deltas)) / 2 ** 20, 3), "MiB",
+           f"avg delta link, full state = {round(full / 2**20, 1)} MiB")
+    report("delta_checkpoint_fraction",
+           round(float(np.mean(deltas)) / full, 4), "of full state",
+           "acceptance: <=0.2 (>=5x smaller than full snapshots)")
+    report("delta_checkpoint_chain_s", round(t_chain, 3), "s",
+           "8 saves incl. pickling (1 full + 7 deltas)")

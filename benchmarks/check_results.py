@@ -1,7 +1,19 @@
 """CI gate: every standardized benchmark artifact in results/ must
 parse as JSON and carry a non-empty ``metrics`` table (schema in
 ``benchmarks/run.py``).  Covers both the committed full-size
-``BENCH_*.json`` trajectory and freshly-produced ``SMOKE_*.json``."""
+``BENCH_*.json`` trajectory and freshly-produced ``SMOKE_*.json``.
+
+Two stronger checks ride on top (the delta data plane's perf gate):
+
+* **required metrics** — ``bench_shared_memory`` artifacts must report
+  ``merge_apply_throughput`` and ``delta_checkpoint_bytes``; a refactor
+  that silently drops the data-plane measurements fails the gate.
+* **regression guard** — metrics listed in
+  ``benchmarks/recorded_baselines.json`` (committed, since results/ is
+  gitignored) must stay within 2x of their recorded value; a merge
+  throughput collapse back toward the chunk-loop reference
+  (~100x slower) fails loudly even at smoke tier.
+"""
 from __future__ import annotations
 
 import glob
@@ -10,6 +22,24 @@ import os
 import sys
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
+BASELINES = os.path.join(os.path.dirname(__file__),
+                         "recorded_baselines.json")
+
+# bench name -> metrics every artifact of that bench must report
+REQUIRED_METRICS = {
+    "bench_shared_memory": ("merge_apply_throughput",
+                            "delta_checkpoint_bytes"),
+}
+REGRESSION_FACTOR = 2.0
+
+
+def _baselines() -> dict:
+    try:
+        with open(BASELINES) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
+    return {k: v for k, v in data.items() if isinstance(v, dict)}
 
 
 def main() -> int:
@@ -20,6 +50,7 @@ def main() -> int:
         print("no BENCH_*/SMOKE_* artifacts found", file=sys.stderr)
         return 1
     bad = 0
+    baselines = _baselines()
     for path in paths:
         name = os.path.basename(path)
         try:
@@ -33,6 +64,29 @@ def main() -> int:
         if not isinstance(metrics, dict) or not metrics:
             print(f"FAIL {name}: empty or missing metrics",
                   file=sys.stderr)
+            bad += 1
+            continue
+        bench = payload.get("bench")
+        missing = [m for m in REQUIRED_METRICS.get(bench, ())
+                   if m not in metrics]
+        if missing:
+            print(f"FAIL {name}: missing required metrics "
+                  f"{missing}", file=sys.stderr)
+            bad += 1
+            continue
+        regressed = []
+        for metric, floor in baselines.get(bench, {}).items():
+            cur = metrics.get(metric, {})
+            value = cur.get("value") if isinstance(cur, dict) else None
+            if not isinstance(value, (int, float)):
+                continue
+            if value * REGRESSION_FACTOR < floor:
+                regressed.append(
+                    f"{metric}={value} (recorded {floor}, floor "
+                    f"{round(floor / REGRESSION_FACTOR, 2)})")
+        if regressed:
+            print(f"FAIL {name}: regression guard: "
+                  f"{'; '.join(regressed)}", file=sys.stderr)
             bad += 1
             continue
         print(f"ok   {name}: {len(metrics)} metrics "

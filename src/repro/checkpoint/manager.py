@@ -23,15 +23,30 @@ from repro.core import diffsync, snapshot as snap_mod
 
 class CheckpointManager:
     def __init__(self, directory: str, job_id: str = "job",
-                 keep: int = 3, incremental_every: int = 0):
+                 keep: int = 3, incremental_every: int = 0,
+                 delta_chain: bool = False, rebase_every: int = 8):
         """``incremental_every``: if > 0, only every k-th checkpoint is
-        full; the rest are diffs against the last full one."""
+        full; the rest are diffs against the last full one.
+
+        ``delta_chain``: write ``(base, delta*)`` chains instead — the
+        first save (and every ``rebase_every``-th) is a full base, each
+        save between diffs against the *previous save* (not the base),
+        so per-save bytes track what the job dirtied since the last
+        tick.  Restore replays the whole chain in order and verifies
+        the recorded fingerprint (bit-exact or it raises).  Mutually
+        exclusive with ``incremental_every``."""
+        assert not (delta_chain and incremental_every), \
+            "delta_chain and incremental_every are mutually exclusive"
         self.dir = directory
         self.job_id = job_id
         self.keep = keep
         self.incremental_every = incremental_every
+        self.delta_chain = delta_chain
+        self.rebase_every = max(1, int(rebase_every))
         os.makedirs(directory, exist_ok=True)
         self._last_full: Optional[snap_mod.Snapshot] = None
+        self._chain_prev: Optional[snap_mod.Snapshot] = None
+        self._chain_len = 0
         self._n_saved = 0
         self._pending: List[threading.Thread] = []
         self.stats: List[Dict[str, Any]] = []
@@ -65,20 +80,39 @@ class CheckpointManager:
         incremental = (self.incremental_every > 0
                        and self._last_full is not None
                        and self._n_saved % self.incremental_every != 0)
+        chained = (self.delta_chain and self._chain_prev is not None
+                   and self._chain_len < self.rebase_every - 1)
 
-        if incremental:
+        base_step = None
+        if chained:
+            # chain link: diff against the *previous save*, so restore
+            # replays base + every delta up to the target step
+            diffs = diffsync.diff_tree(self._chain_prev.state, snap.state,
+                                       op="overwrite")
+            payload = {"kind": "delta", "base_step": self._chain_prev.step,
+                       "diffs": diffs, "step": step,
+                       "fingerprint": snap.fingerprint}
+            path = self._path(step, "delta.pkl")
+            nbytes = diffsync.diff_nbytes(diffs)
+            base_step = self._chain_prev.step
+            self._chain_prev = snap
+            self._chain_len += 1
+        elif incremental:
             diffs = snap_mod.delta(self._last_full, state, op="overwrite")
             payload = {"kind": "diff", "base_step": self._last_full.step,
                        "diffs": diffs, "step": step,
                        "fingerprint": snap.fingerprint}
             path = self._path(step, "diff.pkl")
             nbytes = diffsync.diff_nbytes(diffs)
+            base_step = self._last_full.step
         else:
             payload = {"kind": "full", "state": snap.state, "step": step,
                        "fingerprint": snap.fingerprint}
             path = self._path(step, "full.pkl")
             nbytes = snap.nbytes
             self._last_full = snap
+            self._chain_prev = snap
+            self._chain_len = 0
         self._n_saved += 1
 
         def _write():
@@ -87,10 +121,13 @@ class CheckpointManager:
                 pickle.dump(payload, f, protocol=4)
             os.replace(tmp, path)
             entries = self._manifest()
-            entries.append({"step": step, "path": path,
-                            "kind": payload["kind"],
-                            "fingerprint": snap.fingerprint,
-                            "nbytes": nbytes})
+            entry = {"step": step, "path": path,
+                     "kind": payload["kind"],
+                     "fingerprint": snap.fingerprint,
+                     "nbytes": nbytes}
+            if base_step is not None:
+                entry["base_step"] = base_step
+            entries.append(entry)
             self._write_manifest(entries)
             self._gc(entries)
 
@@ -100,7 +137,10 @@ class CheckpointManager:
             t = threading.Thread(target=_write, daemon=True)
             t.start()
             self._pending.append(t)
-        stat = {"step": step, "bytes": nbytes, "incremental": incremental,
+        stat = {"step": step, "bytes": nbytes,
+                "incremental": incremental or chained,
+                "kind": payload["kind"],
+                "full_bytes": snap.nbytes,
                 "device_to_host_s": copy_s}
         self.stats.append(stat)
         return stat
@@ -147,6 +187,27 @@ class CheckpointManager:
             payload = pickle.load(f)
         if payload["kind"] == "full":
             state = payload["state"]
+        elif payload["kind"] == "delta":
+            # (base, delta*) chain: walk back to the base full, then
+            # replay every delta in order and prove the reconstruction
+            # bit-exact against the recorded fingerprint
+            pos = entries.index(entry)
+            chain = [payload]
+            while chain[0]["kind"] != "full":
+                base_step = chain[0]["base_step"]
+                pos = next(i for i in range(pos - 1, -1, -1)
+                           if entries[i]["step"] == base_step)
+                with open(entries[pos]["path"], "rb") as f:
+                    chain.insert(0, pickle.load(f))
+            state = chain[0]["state"]
+            for link in chain[1:]:
+                state = diffsync.apply_tree(state, link["diffs"])
+            import jax.tree_util as jtu
+            fp = snap_mod._fingerprint(jtu.tree_leaves(state))
+            if fp != payload["fingerprint"]:
+                raise RuntimeError(
+                    f"delta-chain restore at step {payload['step']} is "
+                    f"not bit-exact (fingerprint mismatch)")
         else:
             base = next(e for e in entries
                         if e["kind"] == "full"

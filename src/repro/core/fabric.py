@@ -71,6 +71,7 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core import control as ctl
+from repro.core import diffsync
 from repro.core import elastic as elastic_mod
 from repro.core import snapshot as snap_mod
 from repro.core.granule import GranuleGroup
@@ -160,6 +161,16 @@ class GangHandle:
         # the periodic checkpoint a hard host failure falls back to
         # (kept separate from ``snapshot``, which preempt/resume consume)
         self.last_checkpoint: Optional[snap_mod.Snapshot] = None
+        # delta checkpointing (core.diffsync): after a full base
+        # snapshot, each cadence tick ships only the chunk diff against
+        # the previous checkpoint; a full rebase every
+        # ``ckpt_rebase_every`` ticks bounds the recovery replay chain.
+        # Matches CostModel.checkpoint_cost(index) charging: index 0
+        # (the start baseline) and every rebase point are full.
+        self.ckpt_rebase_every: int = 8
+        self._ckpt_base: Optional[snap_mod.Snapshot] = None
+        self._ckpt_deltas: List[Dict[str, Any]] = []
+        self.ckpt_stats: List[Dict[str, Any]] = []
         self.status = "created"     # created|running|preempted|released
         self.control: Optional[ctl.ControlPointRunner] = None
         self.epoch_log: List[Dict[str, Any]] = []
@@ -284,15 +295,57 @@ class GangHandle:
         return state
 
     # ---- checkpoint / fail (fleet churn) ------------------------------------
+    def _chain_reset(self) -> None:
+        self._ckpt_base = None
+        self._ckpt_deltas = []
+
+    @staticmethod
+    def _same_layout(a, b) -> bool:
+        la, sa = jax.tree_util.tree_flatten(a)
+        lb, sb = jax.tree_util.tree_flatten(b)
+        return (sa == sb and len(la) == len(lb)
+                and all(np.asarray(x).shape == np.asarray(y).shape
+                        and np.asarray(x).dtype == np.asarray(y).dtype
+                        for x, y in zip(la, lb)))
+
     def checkpoint(self, state: Any, step: int) -> snap_mod.Snapshot:
         """Periodic checkpoint: snapshot the gang's state to host memory
         without releasing anything — the rollback point a hard host
-        failure falls back to (``fail``)."""
-        self.last_checkpoint = snap_mod.take(self.job_id, step, state)
+        failure falls back to (``fail``).
+
+        Incremental: the first checkpoint (and every
+        ``ckpt_rebase_every``-th, or any after the state layout changes
+        — e.g. a rescale) is a full base; the ticks between ship only
+        the ``core.diffsync`` chunk diff against the previous
+        checkpoint, so the recurring cost scales with the bytes the gang
+        actually dirtied.  ``fail`` replays base+deltas and proves the
+        chain bit-exact against the recorded fingerprint."""
+        snap = snap_mod.take(self.job_id, step, state)
+        prev = self.last_checkpoint
+        rebase = (self._ckpt_base is None
+                  or len(self._ckpt_deltas) >= self.ckpt_rebase_every - 1
+                  or prev is None
+                  or not self._same_layout(prev.state, snap.state))
+        if rebase:
+            self._ckpt_base = snap
+            self._ckpt_deltas = []
+            ckpt_kind, shipped = "full", snap.nbytes
+        else:
+            diffs = diffsync.diff_tree(prev.state, snap.state,
+                                       op="overwrite")
+            self._ckpt_deltas.append(
+                {"step": step, "diffs": diffs,
+                 "fingerprint": snap.fingerprint})
+            ckpt_kind, shipped = "delta", diffsync.diff_nbytes(diffs)
+        self.last_checkpoint = snap
+        self.ckpt_stats.append({"step": step, "kind": ckpt_kind,
+                                "bytes": shipped,
+                                "full_bytes": snap.nbytes})
         self.epoch_log.append(
             {"kind": "checkpoint", "step": step,
-             "fingerprint": self.last_checkpoint.fingerprint})
-        return self.last_checkpoint
+             "fingerprint": snap.fingerprint,
+             "ckpt_kind": ckpt_kind, "bytes": shipped})
+        return snap
 
     def fail(self, dead_hosts: Sequence[int]) -> snap_mod.Snapshot:
         """A host under this gang hard-failed: the live state is gone.
@@ -311,11 +364,29 @@ class GangHandle:
         self.fabric.reclaim(survivors)
         self.devices = []
         self.alloc = None
-        self.snapshot = self.last_checkpoint
+        # recovery replays the (base, delta*) chain — every hard
+        # failure proves the delta checkpoints reconstruct the rollback
+        # point bit-exactly (fingerprint check against the value
+        # recorded when the checkpoint was taken)
+        if self._ckpt_base is not None and self._ckpt_deltas:
+            snap = self._ckpt_base
+            for link in self._ckpt_deltas:
+                snap = snap_mod.apply_delta(snap, link["diffs"],
+                                            link["step"])
+                if snap.fingerprint != link["fingerprint"]:
+                    raise RuntimeError(
+                        f"{self.job_id}: delta-chain replay diverged "
+                        f"at step {link['step']}")
+            self.snapshot = snap
+        else:
+            self.snapshot = self.last_checkpoint
+        # the chain is consumed: the post-recovery baseline checkpoint
+        # starts a fresh base (CostModel charges index 0 as full)
+        self._chain_reset()
         self.status = "preempted"
         self.epoch_log.append(
-            {"kind": "fail", "step": self.last_checkpoint.step,
-             "fingerprint": self.last_checkpoint.fingerprint})
+            {"kind": "fail", "step": self.snapshot.step,
+             "fingerprint": self.snapshot.fingerprint})
         return self.snapshot
 
     # ---- preempt / resume ---------------------------------------------------
@@ -363,6 +434,9 @@ class GangHandle:
         self.epoch_log.append({"kind": "resume", "step": step,
                                "fingerprint": self.snapshot.fingerprint})
         self.snapshot = None
+        # every (re)start segment opens with a fresh base checkpoint —
+        # mirrors the simulator's per-RunningJob ckpt_count reset
+        self._chain_reset()
         return state, step
 
     def snapshot_world(self) -> int:
@@ -795,7 +869,9 @@ class LiveTraceRunner(Simulator):
         self._record(job.job_id)["workload"] = type(wl).__name__
         if self._churn:
             # baseline rollback point: matches the simulator's
-            # ckpt_progress = progress-at-start bookkeeping
+            # ckpt_progress = progress-at-start bookkeeping (index 0 of
+            # the delta chain — always a full base)
+            handle.ckpt_rebase_every = self.model.ckpt_rebase_every
             handle.checkpoint(wl.state, wl.steps_done)
         self._step_gang(job.job_id)    # gangs make real progress at start
 
@@ -859,10 +935,21 @@ class LiveTraceRunner(Simulator):
     def _on_checkpoint(self, rj) -> None:
         job_id = rj.job.job_id
         wl = self.workloads[job_id]
-        snap = self.handles[job_id].checkpoint(wl.state, wl.steps_done)
+        handle = self.handles[job_id]
+        snap = handle.checkpoint(wl.state, wl.steps_done)
+        stat = handle.ckpt_stats[-1]
         rec = self._record(job_id)
         rec["checkpoints"] = rec.get("checkpoints", 0) + 1
         rec["last_ckpt_fingerprint"] = snap.fingerprint
+        if stat["kind"] == "delta":
+            rec["delta_checkpoints"] = rec.get("delta_checkpoints", 0) + 1
+        rec["ckpt_bytes"] = rec.get("ckpt_bytes", 0) + stat["bytes"]
+        rec["ckpt_full_bytes"] = (rec.get("ckpt_full_bytes", 0)
+                                  + stat["full_bytes"])
+        # measured bytes feed calibration stats only — the trace keeps
+        # charging the configured fraction so Action logs stay
+        # identical to predict_trace
+        self.model.observe_checkpoint(stat["bytes"], stat["full_bytes"])
 
     def _on_fail(self, rj, hosts) -> None:
         # the gang's host died: live state is gone; fall back to the

@@ -153,7 +153,8 @@ class FleetController:
 # Checkpoint-interval policy (Young/Daly)
 # ---------------------------------------------------------------------------
 def optimal_checkpoint_interval(mtbf_s: float,
-                                checkpoint_cost_s: float = 0.5) -> float:
+                                checkpoint_cost_s: float = 0.5,
+                                cost_model=None) -> float:
     """Young/Daly first-order optimum ``tau* = sqrt(2 · delta · MTBF)``.
 
     ``delta`` is the per-checkpoint cost (``CostModel.checkpoint_cost_s``)
@@ -161,7 +162,15 @@ def optimal_checkpoint_interval(mtbf_s: float,
     — estimate it from a churn schedule with ``churn_mtbf``.  Checkpoint
     overhead grows as ``delta/tau`` while expected lost work per failure
     grows as ``tau/2``; the product of rates is minimised at ``tau*``.
-    Returns ``inf`` for a failure-free fleet (never checkpoint)."""
+    Returns ``inf`` for a failure-free fleet (never checkpoint).
+
+    ``cost_model``: a ``CostModel`` to take ``delta`` from instead of
+    ``checkpoint_cost_s`` — with delta checkpointing configured
+    (``ckpt_delta_fraction``) its amortised
+    ``effective_checkpoint_cost_s()`` is cheaper than a full snapshot,
+    so the optimum cadence tightens (``sqrt`` of the cost ratio)."""
+    if cost_model is not None:
+        checkpoint_cost_s = cost_model.effective_checkpoint_cost_s()
     assert checkpoint_cost_s >= 0
     if not math.isfinite(mtbf_s):
         return float("inf")

@@ -201,7 +201,9 @@ class CostModel:
                  migrate_progress_cap: float = 0.8,
                  migration_cost_s: float = 2.0,
                  preempt_cost_s: float = 2.0,
-                 checkpoint_cost_s: float = 0.5):
+                 checkpoint_cost_s: float = 0.5,
+                 ckpt_delta_fraction: Optional[float] = None,
+                 ckpt_rebase_every: int = 8):
         self.betas = dict(self.DEFAULT_BETAS if betas is None else betas)
         self.default_beta = default_beta
         self.migrate_progress_cap = migrate_progress_cap
@@ -212,6 +214,56 @@ class CostModel:
         # charges per checkpoint under a checkpoint_interval policy and
         # the delta feeding the Young/Daly optimum in core.fleet
         self.checkpoint_cost_s = checkpoint_cost_s
+        # delta checkpointing (core.diffsync chains): a delta save costs
+        # ``ckpt_delta_fraction`` of a full one, with a full rebase every
+        # ``ckpt_rebase_every`` checkpoints to bound the replay chain.
+        # The fraction is *configured* (a deterministic parameter), so
+        # predicted and live traces charge identically and Action logs
+        # stay bit-equal; live-measured bytes land in ``ckpt_observed``
+        # via ``observe_checkpoint`` as statistics only, to calibrate
+        # the next run's fraction — never consumed mid-trace.
+        # None keeps the pre-delta behaviour: every checkpoint is full.
+        self.ckpt_delta_fraction = ckpt_delta_fraction
+        self.ckpt_rebase_every = max(1, int(ckpt_rebase_every))
+        self.ckpt_observed: List[Tuple[int, int]] = []
+
+    # ---- delta-checkpoint costs (core.diffsync chains) --------------------
+    def checkpoint_cost(self, index: int = 0) -> float:
+        """Cost of the ``index``-th periodic checkpoint of a run segment
+        (index 0 = the baseline taken at start).  Rebase points —
+        every ``ckpt_rebase_every``-th — pay the full snapshot cost;
+        the checkpoints between them ship deltas."""
+        if self.ckpt_delta_fraction is None:
+            return self.checkpoint_cost_s
+        if index % self.ckpt_rebase_every == 0:
+            return self.checkpoint_cost_s
+        return self.checkpoint_cost_s * self.ckpt_delta_fraction
+
+    def effective_checkpoint_cost_s(self) -> float:
+        """Amortised per-checkpoint cost over one rebase period — the
+        ``delta`` that ``fleet.optimal_checkpoint_interval`` (Young/Daly)
+        consumes, so cheaper delta checkpoints buy a tighter cadence."""
+        if self.ckpt_delta_fraction is None:
+            return self.checkpoint_cost_s
+        r = self.ckpt_rebase_every
+        return self.checkpoint_cost_s * (
+            1.0 + (r - 1) * self.ckpt_delta_fraction) / r
+
+    def observe_checkpoint(self, delta_bytes: int, full_bytes: int) -> None:
+        """Record one live checkpoint's measured (shipped, full) bytes.
+        Statistics only: the trace keeps charging the configured
+        fraction so live Action logs match ``predict_trace``."""
+        self.ckpt_observed.append((int(delta_bytes), int(full_bytes)))
+
+    def observed_delta_fraction(self) -> Optional[float]:
+        """Measured Σdelta/Σfull over the observed checkpoints — the
+        calibrated ``ckpt_delta_fraction`` for the *next* run."""
+        if not self.ckpt_observed:
+            return None
+        full = sum(f for _, f in self.ckpt_observed)
+        if full <= 0:
+            return None
+        return sum(d for d, _ in self.ckpt_observed) / full
 
     def beta(self, kind: Optional[str] = None) -> float:
         """Per-job-kind cross-host penalty; ``default_beta`` when the

@@ -138,6 +138,11 @@ class RunningJob:
     # hard host failure rolls back to) and its heap token
     ckpt_progress: float = 0.0
     ckpt_event: int = -1
+    # periodic checkpoints taken this run segment (index 0 = the
+    # baseline at start): drives CostModel.checkpoint_cost's full-vs-
+    # delta charging, reset by requeue so live GangHandle chains (which
+    # rebase on fail/resume) and the simulator stay in lockstep
+    ckpt_count: int = 0
 
     def rate(self) -> float:
         """Fraction of work per second under the current placement —
@@ -729,10 +734,14 @@ class Simulator:
                 now = t
                 self._on_advance(now)
                 # the gang pauses for the snapshot save, then the saved
-                # progress becomes the failure rollback point
+                # progress becomes the failure rollback point; with
+                # delta checkpointing configured, non-rebase saves ship
+                # chunk diffs and charge the cheaper delta cost
+                rj.ckpt_count += 1
                 rj.progress = max(
                     0.0,
-                    rj.progress - self.model.checkpoint_cost_s
+                    rj.progress
+                    - self.model.checkpoint_cost(rj.ckpt_count)
                     * rj.rate())
                 rj.ckpt_progress = rj.progress
                 actions.append(Action("checkpoint",

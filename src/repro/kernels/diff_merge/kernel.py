@@ -29,6 +29,23 @@ MERGE_OPS = ("sum", "subtract", "multiply", "divide", "overwrite")
 BLOCK_ROWS = 8  # chunks per block (rows); chunk width is the lane dim
 
 
+def compute_dtype(dtype, op: str):
+    """Dtype the merge maths run in, derived from the *leaf* dtype:
+    integer leaves stay integer for the exact ops (sum/subtract/
+    overwrite — a float round-trip silently corrupts large ints),
+    f32/f64 keep their own precision, and only low-precision floats
+    (bf16/f16) promote to f32.  Shared with ``diffsync.dense_merge``'s
+    rule so kernel and host dense paths agree bit-for-bit."""
+    dtype = jnp.dtype(dtype)
+    if jnp.issubdtype(dtype, jnp.integer):
+        if op in ("sum", "subtract", "overwrite"):
+            return dtype
+        return jnp.float32
+    if dtype in (jnp.float32, jnp.float64):
+        return dtype
+    return jnp.float32
+
+
 def _merge(a0, b0, b1, op: str):
     if op == "sum":
         return a0 + (b1 - b0)
@@ -45,10 +62,14 @@ def _merge(a0, b0, b1, op: str):
 
 
 def _dm_kernel(a0_ref, b0_ref, b1_ref, a1_ref, dirty_ref, *, op: str):
-    a0 = a0_ref[...].astype(jnp.float32)
-    b0 = b0_ref[...].astype(jnp.float32)
-    b1 = b1_ref[...].astype(jnp.float32)
-    dirty_rows = jnp.any(b0 != b1, axis=1, keepdims=True)     # (rows, 1)
+    cdt = compute_dtype(a0_ref.dtype, op)
+    a0 = a0_ref[...].astype(cdt)
+    b0 = b0_ref[...].astype(cdt)
+    b1 = b1_ref[...].astype(cdt)
+    # dirty detection compares the raw stored values (exact for every
+    # dtype), not the possibly-promoted compute values
+    dirty_rows = jnp.any(b0_ref[...] != b1_ref[...],
+                         axis=1, keepdims=True)               # (rows, 1)
     merged = _merge(a0, b0, b1, op)
     # clean chunks keep the main value untouched (sparse diff semantics)
     a1_ref[...] = jnp.where(dirty_rows, merged, a0).astype(a1_ref.dtype)

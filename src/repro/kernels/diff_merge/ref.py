@@ -1,13 +1,23 @@
-"""Pure-jnp oracle for the diff_merge kernel (Table 3 semantics)."""
+"""Pure-jnp oracle for the diff_merge kernel (Table 3 semantics).
+
+Kept in lockstep with ``kernel._dm_kernel``: same ``compute_dtype``
+rule (integer leaves merge exactly for sum/subtract/overwrite; bf16
+promotes to f32; f32/f64 keep their precision) and the same merge
+formulas, so kernel-vs-ref tests pin both the maths and the dtype
+handling.
+"""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.kernels.diff_merge.kernel import compute_dtype
+
 
 def diff_merge_ref(a0, b0, b1, *, op: str = "sum"):
-    a0f = a0.astype(jnp.float32)
-    b0f = b0.astype(jnp.float32)
-    b1f = b1.astype(jnp.float32)
+    cdt = compute_dtype(a0.dtype, op)
+    a0f = a0.astype(cdt)
+    b0f = b0.astype(cdt)
+    b1f = b1.astype(cdt)
     if op == "sum":
         merged = a0f + (b1f - b0f)
     elif op == "subtract":
@@ -21,6 +31,6 @@ def diff_merge_ref(a0, b0, b1, *, op: str = "sum"):
         merged = b1f
     else:
         raise ValueError(op)
-    dirty = jnp.any(b0f != b1f, axis=1, keepdims=True)
+    dirty = jnp.any(b0 != b1, axis=1, keepdims=True)
     a1 = jnp.where(dirty, merged, a0f).astype(a0.dtype)
     return a1, dirty

@@ -80,6 +80,16 @@ def main():
                     help="periodic checkpoint cadence in virtual "
                          "seconds (default: Young/Daly from the churn "
                          "rate when churn is on, else off)")
+    ap.add_argument("--ckpt-delta-fraction", type=float, default=None,
+                    help="configured cost of a delta checkpoint as a "
+                         "fraction of a full one (CostModel."
+                         "ckpt_delta_fraction); enables delta-chain "
+                         "charging and tightens the Young/Daly cadence. "
+                         "Default: full-cost checkpoints")
+    ap.add_argument("--ckpt-rebase-every", type=int, default=8,
+                    help="full rebase every N checkpoints when delta "
+                         "checkpointing is configured (bounds the "
+                         "recovery replay chain)")
     args = ap.parse_args()
 
     all_devices = list(jax.devices())
@@ -118,12 +128,6 @@ def main():
         fleet_events = kept
         spares = all_devices[len(devices):]
 
-    ckpt_interval = args.checkpoint_interval
-    if ckpt_interval is None and fleet_events:
-        mtbf = fleet_mod.churn_mtbf(fleet_events, horizon, hosts=hosts0)
-        tau = fleet_mod.optimal_checkpoint_interval(mtbf)
-        ckpt_interval = None if tau == float("inf") else tau
-
     speeds = None
     if args.host_regime == "mixed-gen":
         n_hosts = len(derive_capacities(len(devices),
@@ -140,6 +144,19 @@ def main():
                     shard_hosts=shard_hosts,
                     steal_budget=args.steal_budget, spares=spares)
     n_chips = fabric.engine.total_chips
+    cost_model = fabric.engine.cost_model
+    if args.ckpt_delta_fraction is not None:
+        # delta checkpointing: both predicted and live traces charge
+        # the configured fraction (Action logs stay identical), and
+        # Young/Daly below consumes the cheaper amortised cost
+        cost_model.ckpt_delta_fraction = args.ckpt_delta_fraction
+        cost_model.ckpt_rebase_every = max(1, args.ckpt_rebase_every)
+    ckpt_interval = args.checkpoint_interval
+    if ckpt_interval is None and fleet_events:
+        mtbf = fleet_mod.churn_mtbf(fleet_events, horizon, hosts=hosts0)
+        tau = fleet_mod.optimal_checkpoint_interval(
+            mtbf, cost_model=cost_model)
+        ckpt_interval = None if tau == float("inf") else tau
     # mixed train/serve trace sized to the local fabric, two priority
     # classes (9:1 high) — the §2.1 shared-cluster economics, live
     jobs = sim.mixed_trace(args.jobs, seed=args.seed,
@@ -183,6 +200,16 @@ def main():
         "churn_events": 0 if not fleet_events else len(fleet_events),
         "checkpoint_interval_s": (None if ckpt_interval is None
                                   else round(ckpt_interval, 2)),
+        "ckpt_delta_fraction": args.ckpt_delta_fraction,
+        "delta_checkpoints": sum(r.get("delta_checkpoints", 0)
+                                 for r in ex.live.values()),
+        "ckpt_bytes_shipped": sum(r.get("ckpt_bytes", 0)
+                                  for r in ex.live.values()),
+        "ckpt_bytes_full_equiv": sum(r.get("ckpt_full_bytes", 0)
+                                     for r in ex.live.values()),
+        "observed_delta_fraction": (
+            None if cost_model.observed_delta_fraction() is None
+            else round(cost_model.observed_delta_fraction(), 4)),
         "predicted_order": predicted.finish_order,
         "live_order": live.finish_order,
         "order_matches": live.finish_order == predicted.finish_order,

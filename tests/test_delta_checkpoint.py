@@ -1,0 +1,241 @@
+"""Delta-checkpoint chains (ISSUE 6): CheckpointManager ``(base,
+delta*)`` mode, GangHandle chain replay on hard failure, and the
+CostModel/Young-Daly cadence coupling.
+
+Bit-exactness is the invariant everywhere: a chain restore must
+fingerprint-match the full snapshot it replaces, and the configured
+(deterministic) delta cost must leave simulated and live Action logs
+identical — the live-trace identity itself is pinned in
+``test_fabric.py``'s churn tests, which now run through the chain
+replay path."""
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import fleet as fleet_mod
+from repro.core import snapshot as snap_mod
+from repro.core.fabric import GangHandle
+from repro.core.placement import CostModel
+from repro.core.simulator import Job, Simulator
+
+
+def _state(seed=0, f64=False):
+    # manager tests restore through ``snap_mod.restore`` (jnp.asarray),
+    # which downcasts f64 with x64 off — keep those leaves jnp-stable;
+    # the GangHandle tests work on raw snapshots and use f64 freely
+    rng = np.random.default_rng(seed)
+    mdt = np.float64 if f64 else np.float32
+    return {"w": rng.normal(size=(300, 40)).astype(np.float32),
+            "m": rng.normal(size=(130,)).astype(mdt),
+            "step": np.int32(0)}
+
+
+def _mutate(state, s):
+    out = {k: np.array(v, copy=True) for k, v in state.items()}
+    out["w"][s % 300, :5] += 1.0
+    out["step"] = type(state["step"])(s)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CheckpointManager delta_chain mode
+# ---------------------------------------------------------------------------
+def test_manager_delta_chain_bit_exact(tmp_path):
+    """base + N deltas + rebase: every step restores bit-exactly, and
+    the chain kinds follow the rebase policy."""
+    mgr = CheckpointManager(str(tmp_path), "job", keep=3,
+                            delta_chain=True, rebase_every=3)
+    state, states = _state(), []
+    for s in range(7):
+        state = _mutate(state, s)
+        mgr.save(s, state)
+        states.append(state)
+    assert [st["kind"] for st in mgr.stats] == \
+        ["full", "delta", "delta", "full", "delta", "delta", "full"]
+    for s in range(7):
+        restored, step = mgr.restore(s)
+        assert step == s
+        for k in state:
+            np.testing.assert_array_equal(np.asarray(restored[k]),
+                                          states[s][k])
+
+
+def test_manager_delta_chain_detects_corruption(tmp_path):
+    """A tampered chain link fails the fingerprint check on restore."""
+    import pickle
+    mgr = CheckpointManager(str(tmp_path), "job", delta_chain=True,
+                            rebase_every=8)
+    state = _state()
+    for s in range(3):
+        state = _mutate(state, s)
+        mgr.save(s, state)
+    # corrupt the last delta's payload on disk (an earlier link's
+    # corruption could be masked by a later overwrite of the chunk)
+    entry = mgr._manifest()[2]
+    with open(entry["path"], "rb") as f:
+        payload = pickle.load(f)
+    next(iter(payload["diffs"].values())).new[0, 0] += 1.0
+    with open(entry["path"], "wb") as f:
+        pickle.dump(payload, f, protocol=4)
+    with pytest.raises(RuntimeError, match="not bit-exact"):
+        mgr.restore(2)
+
+
+def test_manager_delta_bytes_much_smaller(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), "job", delta_chain=True,
+                            rebase_every=16)
+    state = _state()
+    for s in range(6):
+        state = _mutate(state, s)
+        mgr.save(s, state)
+    deltas = [st["bytes"] for st in mgr.stats if st["kind"] == "delta"]
+    full = mgr.stats[0]["full_bytes"]
+    assert deltas and max(deltas) * 2 < full
+
+
+def test_manager_incremental_mode_unchanged(tmp_path):
+    """The pre-existing diff-vs-last-full mode still round-trips."""
+    mgr = CheckpointManager(str(tmp_path), "job", incremental_every=3)
+    state, states = _state(1), []
+    for s in range(5):
+        state = _mutate(state, s)
+        mgr.save(s, state)
+        states.append(state)
+    restored, step = mgr.restore(4)
+    for k in state:
+        np.testing.assert_array_equal(np.asarray(restored[k]),
+                                      states[4][k])
+
+
+# ---------------------------------------------------------------------------
+# GangHandle (base, delta*) chain: replay on hard failure is bit-exact
+# ---------------------------------------------------------------------------
+class _StubFabric:
+    def host_of(self, d):
+        return 0
+
+    def reclaim(self, devs):
+        pass
+
+
+def _handle(rebase_every=4):
+    h = GangHandle(_StubFabric(), "gang")
+    h.status = "running"
+    h.ckpt_rebase_every = rebase_every
+    return h
+
+
+def test_gang_handle_chain_kinds_and_replay():
+    h = _handle(rebase_every=3)
+    state = _state(2, f64=True)
+    for s in range(5):
+        state = _mutate(state, s)
+        h.checkpoint(state, s)
+    assert [st["kind"] for st in h.ckpt_stats] == \
+        ["full", "delta", "delta", "full", "delta"]
+    # hard failure: replay base+deltas, fingerprint-verified
+    snap = h.fail([])
+    assert snap.step == 4
+    ref = snap_mod.take("gang", 4, state)
+    assert snap.fingerprint == ref.fingerprint
+    assert snap_mod.verify(snap, ref)
+    # the chain was consumed: the post-recovery checkpoint rebases
+    h.status = "running"
+    h.snapshot = None
+    h.checkpoint(state, 5)
+    assert h.ckpt_stats[-1]["kind"] == "full"
+
+
+def test_gang_handle_chain_replay_catches_divergence():
+    h = _handle(rebase_every=8)
+    state = _state(3, f64=True)
+    for s in range(3):
+        state = _mutate(state, s)
+        h.checkpoint(state, s)
+    # corrupt a recorded delta payload: replay must not silently
+    # hand back a wrong rollback point
+    next(iter(h._ckpt_deltas[0]["diffs"].values())).new[0, 0] += 1.0
+    with pytest.raises(RuntimeError, match="diverged"):
+        h.fail([])
+
+
+def test_gang_handle_layout_change_forces_rebase():
+    h = _handle(rebase_every=8)
+    state = _state(4, f64=True)
+    h.checkpoint(state, 0)
+    h.checkpoint(_mutate(state, 1), 1)
+    assert h.ckpt_stats[-1]["kind"] == "delta"
+    # a rescale-style layout change (new leaf shape) cannot diff
+    grown = {"w": np.zeros((600, 40), dtype=np.float32),
+             "m": np.zeros((130,), dtype=np.float64),
+             "step": np.int64(2)}
+    h.checkpoint(grown, 2)
+    assert h.ckpt_stats[-1]["kind"] == "full"
+
+
+# ---------------------------------------------------------------------------
+# CostModel delta charging + Young/Daly coupling
+# ---------------------------------------------------------------------------
+def test_cost_model_checkpoint_cost_indexing():
+    full = CostModel()                     # delta checkpointing off
+    assert full.checkpoint_cost(0) == full.checkpoint_cost(3) \
+        == full.checkpoint_cost_s
+    m = CostModel(checkpoint_cost_s=0.5, ckpt_delta_fraction=0.1,
+                  ckpt_rebase_every=4)
+    # index 0 (start baseline) and every 4th are full; between: delta
+    costs = [m.checkpoint_cost(i) for i in range(9)]
+    assert costs[0] == costs[4] == costs[8] == 0.5
+    assert all(c == pytest.approx(0.05) for i, c in enumerate(costs)
+               if i % 4)
+    eff = m.effective_checkpoint_cost_s()
+    assert eff == pytest.approx(0.5 * (1 + 3 * 0.1) / 4)
+    assert eff < m.checkpoint_cost_s
+
+
+def test_young_daly_tightens_with_delta_cost():
+    m = CostModel(checkpoint_cost_s=0.5, ckpt_delta_fraction=0.1,
+                  ckpt_rebase_every=8)
+    tau_full = fleet_mod.optimal_checkpoint_interval(800.0, 0.5)
+    tau_delta = fleet_mod.optimal_checkpoint_interval(800.0,
+                                                      cost_model=m)
+    assert tau_delta < tau_full
+    # tau scales as sqrt of the cost ratio
+    ratio = m.effective_checkpoint_cost_s() / 0.5
+    assert tau_delta == pytest.approx(tau_full * np.sqrt(ratio))
+
+
+def test_observed_delta_fraction_stats_only():
+    m = CostModel(ckpt_delta_fraction=0.2)
+    assert m.observed_delta_fraction() is None
+    m.observe_checkpoint(10, 100)
+    m.observe_checkpoint(30, 100)
+    assert m.observed_delta_fraction() == pytest.approx(0.2)
+    # observation never changes what the trace charges
+    assert m.checkpoint_cost(1) == pytest.approx(
+        m.checkpoint_cost_s * 0.2)
+
+
+def test_simulator_delta_charging_cuts_overhead():
+    """Same trace, same cadence: delta-cost checkpoints lose less
+    progress per tick, so the makespan shrinks — and with the fraction
+    at 1.0 the charging is identical to the full-cost model."""
+    from repro.core.fleet import FleetEvent
+    jobs = [Job("a", "mpi-compute", 4, 400.0, arrival=0.0),
+            Job("b", "mpi-compute", 4, 400.0, arrival=0.0)]
+    events = [FleetEvent(30.0, "fail", hosts=[0])]
+
+    def run(model):
+        sim = Simulator(4, 4, "granular",
+                        cost_model=model, checkpoint_interval=5.0)
+        return sim.run(jobs, fleet_events=events)
+
+    res_full = run(CostModel())
+    res_one = run(CostModel(ckpt_delta_fraction=1.0))
+    assert res_one.actions == res_full.actions
+    assert res_one.makespan == res_full.makespan
+    res_delta = run(CostModel(ckpt_delta_fraction=0.05,
+                              ckpt_rebase_every=8))
+    n_ckpts = sum(1 for a in res_delta.actions
+                  if a.kind == "checkpoint")
+    assert n_ckpts >= 2
+    assert res_delta.makespan < res_full.makespan

@@ -114,3 +114,276 @@ def test_dense_diff_matches_sparse():
     merged = jax.jit(lambda m, ms, p: D.dense_merge(m, ms, p, op="sum"))(
         jnp.asarray(old), mask, delta)
     np.testing.assert_allclose(np.asarray(merged), new, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Parity suite: the vectorized hot path is pinned bit-exact against the
+# pre-vectorization reference implementations (ISSUE 6 tentpole)
+# ---------------------------------------------------------------------------
+_PARITY_SIZES = (1, 7, 1023, 1024, 1025, 4000, 65536)
+
+
+def _dirty_pair(n, dtype, seed, frac=9):
+    rng = np.random.default_rng(seed)
+    b0 = (rng.normal(size=n) + 2.0).astype(dtype)
+    b1 = b0.copy()
+    idx = rng.integers(0, n, size=max(1, n // frac))
+    b1[idx] = (rng.normal(size=idx.size) + 3.0).astype(dtype)
+    return b0, b1
+
+
+@hc.hyp_or_examples(
+    lambda st: (st.sampled_from(list(D.MERGE_OPS)),
+                st.sampled_from(list(_PARITY_SIZES)),
+                st.integers(0, 2 ** 16)),
+    examples=[(op, n, i) for i, (op, n) in enumerate(
+        (op, n) for op in D.MERGE_OPS for n in (7, 1024, 4000))])
+def test_parity_with_reference_float(op, n, seed):
+    """diff_leaf/apply_leaf match reference_* bit-for-bit on floats."""
+    rng = np.random.default_rng(seed)
+    a0 = (rng.normal(size=n) + 2.0).astype(np.float32)
+    b0, b1 = _dirty_pair(n, np.float32, seed + 1)
+    d_new = D.diff_leaf(b0, b1, op=op)
+    d_ref = D.reference_diff_leaf(b0, b1, op=op)
+    np.testing.assert_array_equal(d_new.idx, d_ref.idx)
+    np.testing.assert_array_equal(d_new.new, d_ref.new)
+    np.testing.assert_array_equal(d_new.old, d_ref.old)
+    np.testing.assert_array_equal(D.apply_leaf(a0, d_new),
+                                  D.reference_apply_leaf(a0, d_ref))
+
+
+def test_parity_with_reference_tree():
+    rng = np.random.default_rng(3)
+    tree = {"w": rng.normal(size=(80, 33)).astype(np.float32),
+            "b": rng.normal(size=(130,)).astype(np.float64),
+            "clean": rng.normal(size=(50,)).astype(np.float32)}
+    new = {k: v.copy() for k, v in tree.items()}
+    new["w"][5, :] += 1.0
+    new["b"][100:] *= 1.5
+    diffs = D.diff_tree(tree, new, op="overwrite")
+    got = D.apply_tree(tree, diffs)
+    ref = D.reference_apply_tree(tree, diffs)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(ref[k]))
+    # untouched leaves pass through as the same object (no copy)
+    assert got["clean"] is tree["clean"]
+
+
+# ---------------------------------------------------------------------------
+# Round-trips across dtypes / ragged shapes / all five ops (satellite 3)
+# ---------------------------------------------------------------------------
+def _dtypes():
+    import ml_dtypes
+    return [np.float32, np.float64, np.int32, ml_dtypes.bfloat16]
+
+
+@hc.hyp_or_examples(
+    lambda st: (st.sampled_from(_dtypes()),
+                st.sampled_from([1, 13, 1023, 1025, 5000]),
+                st.integers(0, 2 ** 16)),
+    examples=[(dt, n, i) for i, (dt, n) in enumerate(
+        (dt, n) for dt in _dtypes() for n in (13, 1025, 5000))])
+def test_overwrite_roundtrip_dtypes_ragged(dtype, n, seed):
+    """diff -> apply reproduces the child exactly for every dtype,
+    including ragged non-multiple-of-CHUNK shapes."""
+    rng = np.random.default_rng(seed)
+    if np.issubdtype(np.dtype(dtype), np.integer):
+        old = rng.integers(-1000, 1000, size=n).astype(dtype)
+        new = old.copy()
+        new[rng.integers(0, n, size=max(1, n // 5))] += 7
+    else:
+        old = (rng.normal(size=n) + 2.0).astype(dtype)
+        new = old.copy()
+        idx = rng.integers(0, n, size=max(1, n // 5))
+        new[idx] = (rng.normal(size=idx.size) + 3.0).astype(dtype)
+    d = D.diff_leaf(old, new, op="overwrite")
+    got = D.apply_leaf(old, d)
+    assert got.dtype == old.dtype
+    np.testing.assert_array_equal(got, new)
+
+
+@hc.hyp_or_examples(
+    lambda st: (st.sampled_from(list(D.MERGE_OPS)),
+                st.integers(0, 2 ** 16)),
+    examples=[(op, i) for i, op in enumerate(D.MERGE_OPS)])
+def test_all_ops_roundtrip_ragged(op, seed):
+    """Five-op merge algebra on a ragged leaf: merged value matches the
+    scalarwise oracle applied to the dirty chunks."""
+    n = 3333
+    rng = np.random.default_rng(seed)
+    a0 = rng.uniform(1, 2, n).astype(np.float32)
+    b0 = rng.uniform(1, 2, n).astype(np.float32)
+    b1 = b0.copy()
+    sl = slice(100, 700)
+    b1[sl] = rng.uniform(1, 2, 600).astype(np.float32)
+    b1[-5:] = rng.uniform(1, 2, 5).astype(np.float32)  # dirty tail chunk
+    merged = D.apply_leaf(a0, D.diff_leaf(b0, b1, op=op))
+    # dirty chunks follow Table 3; clean chunks keep a0
+    full = D.merge_scalarwise(a0, b0, b1, op)
+    chunks = -(-n // D.CHUNK)
+    fb0 = np.pad(b0, (0, chunks * D.CHUNK - n))
+    fb1 = np.pad(b1, (0, chunks * D.CHUNK - n))
+    dirty = np.any(fb0.reshape(-1, D.CHUNK) != fb1.reshape(-1, D.CHUNK),
+                   axis=1)
+    mask = np.repeat(dirty, D.CHUNK)[:n]
+    np.testing.assert_array_equal(merged[mask], full[mask])
+    np.testing.assert_array_equal(merged[~mask], a0[~mask])
+
+
+def test_int64_sum_exact_beyond_f53():
+    """Integer leaves merge exactly — the old float64 round-trip lost
+    low bits above 2**53."""
+    a0 = np.array([2 ** 60 + 1, 5], dtype=np.int64)
+    b0 = np.array([2 ** 60 + 1, 5], dtype=np.int64)
+    b1 = np.array([2 ** 60 + 4, 5], dtype=np.int64)
+    got = D.apply_leaf(a0, D.diff_leaf(b0, b1, op="sum"))
+    assert got.tolist() == [2 ** 60 + 4, 5]
+    # the pinned reference demonstrates the old corruption
+    ref = D.reference_apply_leaf(a0, D.reference_diff_leaf(b0, b1,
+                                                           op="sum"))
+    assert ref.tolist() != got.tolist()
+
+
+def test_apply_leaf_empty_diff_passthrough_and_inplace():
+    a = np.arange(5000, dtype=np.float32)
+    d = D.diff_leaf(a, a.copy())
+    assert D.apply_leaf(a, d) is a          # satellite 2: no copy
+    b0 = a.copy()
+    b1 = a.copy()
+    b1[10:20] += 1
+    d = D.diff_leaf(b0, b1, op="overwrite")
+    out = D.apply_leaf(a, d, inplace=True)
+    assert out is a
+    np.testing.assert_array_equal(a, b1)
+
+
+# ---------------------------------------------------------------------------
+# apply_many: N-way merge == sequential application
+# ---------------------------------------------------------------------------
+@hc.hyp_or_examples(
+    lambda st: (st.sampled_from(["sum", "overwrite", "multiply"]),
+                st.integers(0, 2 ** 16)),
+    examples=[("sum", 0), ("overwrite", 1), ("multiply", 2), ("sum", 3)])
+def test_apply_many_matches_sequential(op, seed):
+    n = 9000
+    rng = np.random.default_rng(seed)
+    a0 = rng.uniform(1, 2, n).astype(np.float32)
+    b0 = a0.copy()
+    diffs = []
+    for k in range(4):
+        b1 = b0.copy()
+        # overlapping dirty ranges across workers exercise the
+        # first-touch bookkeeping
+        lo = 500 * k
+        b1[lo:lo + 2000] = rng.uniform(1, 2, 2000).astype(np.float32)
+        diffs.append(D.diff_leaf(b0, b1, op=op))
+    seq = a0.copy()
+    for d in diffs:
+        seq = D.apply_leaf(seq, d)
+    np.testing.assert_array_equal(D.apply_many(a0, diffs), seq)
+    ip = a0.copy()
+    assert D.apply_many(ip, diffs, inplace=True) is ip
+    np.testing.assert_array_equal(ip, seq)
+
+
+def test_apply_many_ragged_tail_and_full_coverage():
+    n = D.CHUNK * 3 + 17
+    rng = np.random.default_rng(5)
+    a0 = rng.normal(size=n).astype(np.float32)
+    b0 = a0.copy()
+    d1_new = b0.copy(); d1_new[: 2 * D.CHUNK] += 1.0
+    d2_new = b0.copy(); d2_new[2 * D.CHUNK:] += 2.0   # covers the tail
+    diffs = [D.diff_leaf(b0, d1_new, op="sum"),
+             D.diff_leaf(b0, d2_new, op="sum")]
+    seq = D.apply_leaf(D.apply_leaf(a0, diffs[0]), diffs[1])
+    np.testing.assert_array_equal(D.apply_many(a0, diffs), seq)
+
+
+# ---------------------------------------------------------------------------
+# TrackedFork: chunk-granular CoW write tracking (the mprotect analogue)
+# ---------------------------------------------------------------------------
+def test_tracked_fork_diff_matches_compare_based():
+    rng = np.random.default_rng(7)
+    base = rng.normal(size=10000).astype(np.float32)
+    keep = base.copy()
+    f = D.TrackedFork(base)
+    np.multiply(base[100:3000], 1.5,
+                out=f.writable(slice(100, 3000)))
+    f[5000] = 9.0
+    f[9999] = -1.0                          # last (ragged-size) element
+    child = base.copy()
+    child[100:3000] *= 1.5
+    child[5000] = 9.0
+    child[9999] = -1.0
+    d = f.diff(op="overwrite")
+    np.testing.assert_array_equal(base, keep)   # base never written
+    got = D.apply_leaf(base, d)
+    np.testing.assert_array_equal(got, child)
+    # tracked mask is chunk-granular: same chunks a compare would find
+    ref = D.diff_leaf(base, child, op="overwrite")
+    np.testing.assert_array_equal(d.idx, ref.idx)
+
+
+def test_tracked_fork_verify_drops_clean_writes():
+    base = np.zeros(4096, dtype=np.float32)
+    f = D.TrackedFork(base)
+    f[0:1024] = 0.0                          # written but unchanged
+    f[2048] = 5.0
+    assert f.dirty_chunks.tolist() == [0, 2]
+    assert f.diff(op="overwrite", verify=True).idx.tolist() == [2]
+
+
+def test_tracked_fork_read_through():
+    base = np.arange(3000, dtype=np.float32)
+    f = D.TrackedFork(base)
+    f[1500] = -1.0
+    np.testing.assert_array_equal(f[0:10], base[0:10])   # clean read
+    got = f[1400:1600]                       # straddles dirty chunk
+    expect = base[1400:1600].copy()
+    expect[100] = -1.0
+    np.testing.assert_array_equal(got, expect)
+
+
+# ---------------------------------------------------------------------------
+# dense_merge dtype preservation (satellite 1)
+# ---------------------------------------------------------------------------
+def test_dense_merge_preserves_f64_precision():
+    from jax.experimental import enable_x64
+    with enable_x64():
+        import jax.numpy as jnp
+        old = np.full(2048, 1.0, dtype=np.float64)
+        new = old + 1e-12                    # invisible in float32
+        mask, delta = D.dense_diff(jnp.asarray(old), jnp.asarray(new))
+        merged = D.dense_merge(jnp.asarray(old), mask, delta, op="sum")
+        assert merged.dtype == jnp.float64
+        np.testing.assert_array_equal(np.asarray(merged), new)
+
+
+def test_dense_merge_int_exact():
+    import jax.numpy as jnp
+    old = (np.arange(3000, dtype=np.int32) * 1000003)
+    new = old.copy()
+    new[100:300] += 7
+    mask, delta = D.dense_diff(jnp.asarray(old), jnp.asarray(new))
+    merged = D.dense_merge(jnp.asarray(old), mask, delta, op="sum")
+    assert merged.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(merged), new)
+
+
+# ---------------------------------------------------------------------------
+# fused_diff_apply: host path vs kernels/diff_merge routing
+# ---------------------------------------------------------------------------
+def test_fused_diff_apply_host_vs_kernel():
+    rng = np.random.default_rng(11)
+    a0 = rng.normal(size=(64, 300)).astype(np.float32)
+    fork = a0.copy()
+    child = fork.copy()
+    child[3, :50] += 1.0
+    mh, dh = D.fused_diff_apply(a0, fork, child, op="sum",
+                                use_kernel=False)
+    mk, dk = D.fused_diff_apply(a0, fork, child, op="sum",
+                                use_kernel=True, interpret=True)
+    np.testing.assert_allclose(mh, np.asarray(mk), atol=1e-6)
+    np.testing.assert_array_equal(dh, np.asarray(dk))
+    assert dh.sum() == 1

@@ -580,3 +580,54 @@ def test_run_trace_preempts_and_matches_simulator_prediction():
         assert not fab.gangs
         print("trace-acceptance-ok", res.finish_order, ms)
     """))
+
+
+def test_run_trace_delta_checkpoints_match_prediction():
+    # delta-everything data plane (ISSUE 6): with a configured delta
+    # fraction the simulator charges cheaper non-rebase checkpoints,
+    # the live gang ships diffsync chains, a hard failure replays
+    # base+deltas bit-exactly, and live Action logs still match the
+    # prediction event for event
+    print(run_sub("""
+        import jax
+        from repro.configs.registry import reduced_config
+        from repro.data.pipeline import DataConfig
+        from repro.optim.adamw import AdamWConfig
+        from repro.core.fabric import Fabric
+        from repro.core.fleet import FleetEvent
+        from repro.core.placement import CostModel
+        from repro.core.simulator import Job
+        from repro.runtime.gang_workloads import workload_factory
+
+        cfg = reduced_config("llama3.2-1b").with_(n_layers=1, vocab=128)
+        dcfg = DataConfig(vocab=128, seq_len=8, global_batch=8)
+        ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+        jobs = [Job("train-a", "mpi-compute", 4, 40.0, arrival=0.0,
+                    workload="train")]
+        devs = jax.devices()
+        events = [FleetEvent(6.0, "fail", hosts=[1]),
+                  FleetEvent(10.0, "join", capacities=[2])]
+        fab = Fabric(devices=devs[:6], chips_per_host=2, spares=devs[6:])
+        cm = fab.engine.cost_model
+        cm.ckpt_delta_fraction = 0.1
+        cm.ckpt_rebase_every = 4
+        pred = fab.predict_trace(jobs, preempt=True, fleet_events=events,
+                                 checkpoint_interval=2.0)
+        assert pred.recoveries >= 1
+        ex = fab.run_trace(
+            jobs, workload_factory(cfg, ocfg, dcfg, train_steps=3,
+                                   serve_tokens=3),
+            preempt=True, fleet_events=events, checkpoint_interval=2.0)
+        res = ex.result
+        assert res.actions == pred.actions
+        assert res.recoveries == pred.recoveries >= 1
+        rec = ex.live["train-a"]
+        # the gang shipped real deltas and recovered through the chain
+        assert rec.get("delta_checkpoints", 0) >= 1, rec
+        assert rec["ckpt_bytes"] < rec["ckpt_full_bytes"], rec
+        assert rec["resumes_verified"] >= 1
+        frac = cm.observed_delta_fraction()
+        assert frac is not None and 0 < frac < 1.0
+        print("delta-live-ok", rec["checkpoints"],
+              rec["delta_checkpoints"], round(frac, 4))
+    """))

@@ -78,6 +78,73 @@ def test_diff_merge_leaf_wrapper_odd_shapes():
     assert m.shape == x0.shape
 
 
+@pytest.mark.parametrize("op", ["sum", "subtract", "overwrite"])
+def test_diff_merge_int32_exact(op):
+    """Integer leaves merge exactly in the kernel — no float cast."""
+    from repro.kernels.diff_merge import kernel as K, ref as R
+    rng = np.random.default_rng(0)
+    a0 = jnp.asarray(rng.integers(-2**30, 2**30, (16, 1024)),
+                     dtype=jnp.int32)
+    b0 = a0 + jnp.zeros_like(a0)
+    b1 = b0.at[3:5].add(7)
+    out, dirty = K.diff_merge(a0, b0, b1, op=op, interpret=True)
+    eout, edirty = R.diff_merge_ref(a0, b0, b1, op=op)
+    assert out.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(eout))
+    if op == "overwrite":
+        expect = np.asarray(a0).copy()
+        expect[3:5] = np.asarray(b1)[3:5]
+    else:
+        expect = np.asarray(a0).copy()
+        expect[3:5] += 7
+    np.testing.assert_array_equal(np.asarray(out), expect)
+    assert int(dirty.sum()) == 2
+
+
+def test_diff_merge_leaf_f64_keeps_precision():
+    """f64 leaves keep full precision through the kernel path (the old
+    blanket float32 cast flattened sub-f32 deltas)."""
+    from jax.experimental import enable_x64
+    from repro.kernels.diff_merge import ops as O
+    with enable_x64():
+        a0 = jnp.full((3000,), 1.0, dtype=jnp.float64)
+        b0 = a0 + 0.0
+        b1 = b0.at[:1024].add(1e-12)
+        m, d = O.diff_merge_leaf(a0, b0, b1, op="sum", interpret=True)
+        assert m.dtype == jnp.float64
+        np.testing.assert_array_equal(np.asarray(m), np.asarray(b1))
+        assert int(d.sum()) == 1
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+@pytest.mark.parametrize("op", ["sum", "overwrite", "multiply"])
+def test_diff_merge_leaf_roundtrip_ragged(op, dtype):
+    """Kernel-path diff -> merge on a ragged leaf reproduces the child
+    under op semantics, across dtypes (satellite 3)."""
+    from repro.kernels.diff_merge import ops as O
+    if jnp.issubdtype(dtype, jnp.integer):
+        a0 = jnp.arange(3333, dtype=dtype) % 100 + 1
+    else:
+        a0 = (jax.random.uniform(sub(9), (3333,)) + 1.0).astype(dtype)
+    b0 = a0 + jnp.zeros_like(a0)
+    if op == "multiply":
+        b1 = b0.at[100:400].multiply(2)
+    else:
+        b1 = b0.at[100:400].add(3)
+    m, _ = O.diff_merge_leaf(a0, b0, b1, op=op, interpret=True)
+    assert m.dtype == a0.dtype and m.shape == a0.shape
+    if op == "overwrite" or op == "sum":
+        np.testing.assert_allclose(np.asarray(m, np.float64),
+                                   np.asarray(b1, np.float64),
+                                   rtol=1e-2 if dtype == jnp.bfloat16
+                                   else 0)
+    else:
+        np.testing.assert_allclose(np.asarray(m, np.float64),
+                                   np.asarray(b1, np.float64),
+                                   rtol=1e-2 if dtype == jnp.bfloat16
+                                   else 1e-6)
+
+
 # ---------------------------------------------------------------------------
 # moe_gmm
 # ---------------------------------------------------------------------------
