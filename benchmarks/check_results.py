@@ -29,8 +29,32 @@ BASELINES = os.path.join(os.path.dirname(__file__),
 REQUIRED_METRICS = {
     "bench_shared_memory": ("merge_apply_throughput",
                             "delta_checkpoint_bytes"),
+    "bench_message_passing": ("hierarchical_vs_flat_speedup",
+                              "compressed_vs_flat_speedup",
+                              "compressed_crossover_bytes",
+                              "slowlink_bytes_flat",
+                              "slowlink_bytes_hierarchical",
+                              "codec_select_speedup"),
+    "bench_makespan": ("collective_priced/improvement",),
 }
 REGRESSION_FACTOR = 2.0
+
+# hard acceptance gates, full-tier (BENCH_*) artifacts only — smoke
+# sizes are too small for the Fig 9 schedule gaps to show:
+#  * the two-level schedule must beat flat >= 2x on the slow-link mesh,
+#  * the compressed schedule must beat flat past a measured crossover,
+#  * collective_time-scored placement must beat scalar-beta on the
+#    net-heavy trace
+FULL_TIER_GATES = {
+    "bench_message_passing": (
+        ("hierarchical_vs_flat_speedup", 2.0),
+        ("compressed_vs_flat_speedup", 1.0),
+        ("compressed_crossover_bytes", 0.0),
+    ),
+    "bench_makespan": (
+        ("collective_priced/improvement", 0.0),
+    ),
+}
 
 
 def _baselines() -> dict:
@@ -89,6 +113,20 @@ def main() -> int:
                   f"{'; '.join(regressed)}", file=sys.stderr)
             bad += 1
             continue
+        if name.startswith("BENCH_"):
+            gated = []
+            for metric, floor in FULL_TIER_GATES.get(bench, ()):
+                cur = metrics.get(metric, {})
+                value = cur.get("value") if isinstance(cur, dict) \
+                    else None
+                if not isinstance(value, (int, float)) \
+                        or value <= floor:
+                    gated.append(f"{metric}={value} (must be > {floor})")
+            if gated:
+                print(f"FAIL {name}: full-tier gate: "
+                      f"{'; '.join(gated)}", file=sys.stderr)
+                bad += 1
+                continue
         print(f"ok   {name}: {len(metrics)} metrics "
               f"(bench={payload.get('bench')}, "
               f"wall={payload.get('wall_s')}s)")

@@ -70,6 +70,7 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.core import collectives as coll
 from repro.core import control as ctl
 from repro.core import diffsync
 from repro.core import elastic as elastic_mod
@@ -197,6 +198,7 @@ class GangHandle:
             self.group.resize(placement)
         self.mesh = make_gang_mesh(self.devices, self.pods)
         self.status = "running"
+        self.fabric.tuner.on_placement_change(self.job_id, alloc.placement)
 
     def detach(self) -> None:
         """Return devices to the fabric pool (engine accounting is the
@@ -205,6 +207,21 @@ class GangHandle:
         self.fabric.reclaim(self.devices)
         self.devices = []
         self.alloc = None
+
+    # ---- collective schedule dispatch --------------------------------------
+    def best_sync_mode(self, nbytes: Optional[int] = None) -> str:
+        """The collective schedule the fabric's ``CollectiveTuner``
+        dispatches for this gang's *current* placement and message size
+        (re-derived on every attach / migrate / evacuate / rescale).
+        A single-axis gang mesh (``pods == 1``) has no slow axis to run
+        the pod-level compressed schedule over, so the choice is
+        restricted accordingly."""
+        placement = (self.alloc.placement if self.alloc is not None
+                     else [(0, max(1, len(self.devices)))])
+        allowed = None if self.pods > 1 else ("flat", "ring",
+                                              "hierarchical")
+        return self.fabric.tuner.mode_for(placement, nbytes,
+                                          allowed=allowed)
 
     # ---- control point -----------------------------------------------------
     def control_point(self, step: int, step_time: float) -> List[ctl.Action]:
@@ -224,6 +241,9 @@ class GangHandle:
         self.group.readdress([(self.fabric.host_of(d), d)
                               for d in new_devices])
         self.mesh = make_gang_mesh(new_devices, self.pods)
+        if self.alloc is not None:
+            self.fabric.tuner.on_placement_change(self.job_id,
+                                                  self.alloc.placement)
         self.epoch_log.append({"kind": log_kind,
                                "epoch": self.group.epoch})
         return state
@@ -290,6 +310,7 @@ class GangHandle:
         self.group.resize([(self.fabric.host_of(d), d)
                            for d in new_devices])
         self.mesh = make_gang_mesh(new_devices, self.pods)
+        self.fabric.tuner.on_placement_change(self.job_id, alloc.placement)
         self.epoch_log.append({"kind": "rescale", "to": new_world,
                                "epoch": self.group.epoch})
         return state
@@ -450,6 +471,7 @@ class GangHandle:
             self.fabric.engine.release(self.alloc)
             self.detach()
         self.status = "released"
+        self.fabric.tuner.forget(self.job_id)
         self.fabric.gangs.pop(self.job_id, None)
 
 
@@ -480,11 +502,17 @@ class Fabric:
                  cost_model: Optional[CostModel] = None,
                  shard_hosts: Union[int, str, None] = None,
                  steal_budget: int = 0,
-                 spares: Optional[Sequence[Any]] = None):
+                 spares: Optional[Sequence[Any]] = None,
+                 tuner: Optional[coll.CollectiveTuner] = None):
         self.devices = list(devices if devices is not None
                             else jax.devices())
         assert self.devices, "empty fabric"
         self.chips_per_host = chips_per_host
+        # topology-tuned collective dispatch (DESIGN.md §11): gangs
+        # re-derive their entries on every placement change and ask it
+        # for the sync schedule via GangHandle.best_sync_mode
+        self.tuner = tuner or coll.CollectiveTuner(
+            link=(cost_model.link if cost_model is not None else None))
         self._dev_index = {d: i for i, d in enumerate(self.devices)}
         if speeds is None:
             speeds = infer_host_speeds(self.devices, chips_per_host)

@@ -88,6 +88,8 @@ from typing import (Dict, List, Mapping, Optional, Sequence, Tuple, Union)
 
 import numpy as np
 
+from repro.core import comms
+
 Placement = List[Tuple[int, int]]          # [(host, n_chips)] sorted
 
 # Default host-group size for the sharded engine: the latency sweet spot
@@ -203,9 +205,26 @@ class CostModel:
                  preempt_cost_s: float = 2.0,
                  checkpoint_cost_s: float = 0.5,
                  ckpt_delta_fraction: Optional[float] = None,
-                 ckpt_rebase_every: int = 8):
+                 ckpt_rebase_every: int = 8,
+                 collective_bytes: Union[None, float,
+                                         Mapping[str, float]] = None,
+                 step_compute_s: float = 1.0,
+                 link: Optional[comms.LinkProfile] = None,
+                 compress_frac: float = 0.05):
         self.betas = dict(self.DEFAULT_BETAS if betas is None else betas)
         self.default_beta = default_beta
+        # collective-aware pricing (DESIGN.md §11): when
+        # ``collective_bytes`` is set (bytes per sync step, scalar or
+        # per-kind map), ``slowdown`` prices the *best achievable*
+        # collective schedule on the candidate's topology
+        # (``collective_time``) against ``step_compute_s`` of compute,
+        # instead of the scalar ``beta·chi``.  None (the default) keeps
+        # every decision bit-identical to the scalar model — the opt-in
+        # gate that preserves the pinned placement tests.
+        self.collective_bytes = collective_bytes
+        self.step_compute_s = float(step_compute_s)
+        self.link = link or comms.LinkProfile()
+        self.compress_frac = float(compress_frac)
         self.migrate_progress_cap = migrate_progress_cap
         self.migration_cost_s = migration_cost_s
         self.preempt_cost_s = preempt_cost_s
@@ -272,9 +291,45 @@ class CostModel:
             return self.default_beta
         return self.betas.get(kind, self.default_beta)
 
+    @property
+    def collective_pricing(self) -> bool:
+        return self.collective_bytes is not None
+
+    def sync_bytes(self, kind: Optional[str] = None) -> float:
+        """Per-step collective message size for a job kind (scalar
+        config applies to every kind)."""
+        cb = self.collective_bytes
+        if cb is None:
+            return 0.0
+        if isinstance(cb, Mapping):
+            return float(cb.get(kind, cb.get(None, comms.DEFAULT_NBYTES)))
+        return float(cb)
+
+    def collective_time(self, placement: Sequence[Tuple[int, int]],
+                        nbytes: Optional[float] = None,
+                        kind: Optional[str] = None) -> float:
+        """Seconds per sync step under the *best achievable* collective
+        schedule (flat/ring/hierarchical/compressed) on this
+        placement's topology — what the comms-layer ``CollectiveTuner``
+        would actually dispatch (``core.comms`` pricing).  Unlike the
+        scalar ``beta·chi`` this distinguishes balanced from ragged
+        splits: the hierarchical slow hop ships ``bytes/min_fast``, so
+        (4,4) prices cheaper than (6,2) at equal chi-ish spread."""
+        if nbytes is None:
+            nbytes = self.sync_bytes(kind) or comms.DEFAULT_NBYTES
+        topo = comms.Topology.from_placement(placement)
+        _, t = comms.best_schedule(topo, int(nbytes), self.link,
+                                   self.compress_frac)
+        return t
+
     def slowdown(self, placement: Sequence[Tuple[int, int]],
                  kind: Optional[str] = None) -> float:
-        """``1 + beta_kind·chi`` for a placement."""
+        """``1 + beta_kind·chi`` for a placement — or, with collective
+        pricing enabled, ``1 + collective_time/step_compute_s`` (the
+        measured-schedule generalisation of the same ratio)."""
+        if self.collective_bytes is not None:
+            return 1.0 + (self.collective_time(placement, kind=kind)
+                          / max(self.step_compute_s, 1e-12))
         return 1.0 + self.beta(kind) * placement_cross_host_fraction(
             placement)
 
@@ -326,6 +381,12 @@ class CostModel:
         k = len(placements)
         if k == 0:
             return np.empty(0, dtype=np.float64)
+        if self.collective_bytes is not None:
+            # collective pricing walks each candidate's topology; the
+            # candidate sets policies score are tiny (<= 5), so the
+            # scalar path is fine here
+            return np.array([self.score(p, kind, speeds)
+                             for p in placements], dtype=np.float64)
         sizes = np.array([len(p) for p in placements])
         hosts = np.array([h for p in placements for h, _ in p],
                          dtype=np.int64)
@@ -744,7 +805,36 @@ class LocalityScoredPolicy(PlacementPolicy):
             fast = _greedy_most_free(free, n, view.speeds)
             if fast is not None:
                 candidates.append(fast)
+        if self.cost_model.collective_pricing and not fits.size:
+            # balanced (maximin) split over the fewest hosts: the
+            # two-level schedule ships bytes/min_fast over the slow
+            # link, so a {5,5,5} split is ~5x cheaper than greedy's
+            # ragged {7,7,1} — only the collective-priced score can
+            # rank it, so the candidate is gated to that mode and the
+            # default candidate set stays decision-identical
+            bal = self._balanced_split(free, n)
+            if bal is not None and bal not in candidates:
+                candidates.append(bal)
         return candidates
+
+    @staticmethod
+    def _balanced_split(free: np.ndarray, n: int) -> Optional[Placement]:
+        """Even (maximin) split of ``n`` over the fewest freest hosts."""
+        order = np.argsort(-free, kind="stable")
+        csum = np.cumsum(free[order])
+        if not csum.size or csum[-1] < n:
+            return None
+        k = int(np.searchsorted(csum, n)) + 1
+        hosts = order[:k][::-1]          # ascending free: caps bind first
+        placement: Placement = []
+        rem = n
+        for i, h in enumerate(hosts):
+            share = min(int(free[h]), -(-rem // (k - i)))
+            if share <= 0:
+                return None
+            placement.append((int(h), share))
+            rem -= share
+        return placement if rem == 0 else None
 
     def place(self, view: ClusterView, n: int,
               kind: Optional[str] = None) -> Optional[Placement]:
@@ -774,6 +864,10 @@ class LocalityScoredPolicy(PlacementPolicy):
             if hetero:
                 scores = self.cost_model.score_batch(candidates, kind,
                                                      view.speeds)
+            elif self.cost_model.collective_pricing:
+                # achievable-schedule pricing (DESIGN.md §11): rank by
+                # the best collective time on each candidate topology
+                scores = self.cost_model.score_batch(candidates, kind)
             else:
                 # the exact pre-CostModel homogeneous key 1 + beta*chi
                 scores = 1.0 + self.cost_model.beta(kind) \
@@ -789,10 +883,12 @@ class LocalityScoredPolicy(PlacementPolicy):
                 seg, weights=(view.free[hosts] - chips).astype(
                     np.float64), minlength=k)
             return candidates[int(np.lexsort((stranded, scores))[0])]
-        if hetero:                      # reference Python reduction
+        if hetero or self.cost_model.collective_pricing:
+            # reference Python reduction
             model = self.cost_model
+            speeds = view.speeds if hetero else None
             return min(candidates, key=lambda p: (
-                model.score(p, kind, view.speeds),
+                model.score(p, kind, speeds),
                 self._stranded(view, p)))
         # homogeneous: Σ n_h·s_h is constant, so T reduces to the
         # slowdown — the exact pre-CostModel scoring key

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the chunk-select codec kernel.
+
+Kept in operation-for-operation lockstep with ``kernel._select_kernel``
+(same first-argmax-via-min-lane formulation) so kernel and reference —
+and therefore the shard_map collective body, which uses this form
+inline — agree bit-for-bit, ties included."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def chunk_select_ref(x):
+    """x: (k, m) -> (vals (k, 1), col (k, 1) int32, resid (k, m))."""
+    k, m = x.shape
+    mag = jnp.abs(x)
+    lane = jax.lax.broadcasted_iota(jnp.int32, (k, m), 1)
+    rowmax = jnp.max(mag, axis=1, keepdims=True)
+    col = jnp.min(jnp.where(mag == rowmax, lane, m), axis=1,
+                  keepdims=True)
+    picked = lane == col
+    vals = jnp.sum(jnp.where(picked, x, 0), axis=1,
+                   keepdims=True).astype(x.dtype)
+    resid = jnp.where(picked, jnp.zeros_like(x), x)
+    return vals, col.astype(jnp.int32), resid

@@ -3,9 +3,13 @@ Faabric's merge-operation diffs, DESIGN.md §5).
 
 The paper synchronises shared state by shipping *byte-wise diffs* with merge
 operations.  For cross-pod gradient sync we generalise the diff to a sparse
-top-k *delta*: only the k largest-magnitude chunks of each gradient leaf are
-transmitted (merge op = ``sum``); the residual is kept locally and added to
-the next step's gradient (error feedback), which preserves convergence.
+*delta*: each gradient leaf is chunked and each chunk ships only its
+largest-magnitude element (merge op = ``sum``) — the vectorized
+threshold-select codec of ``kernels/collective_codec``, one O(n) streaming
+pass where the old global ``top_k`` paid an O(n log n) sort.  The message
+is the same fixed ``frac`` of the leaf; the residual is kept locally and
+added to the next step's gradient (error feedback), which preserves
+convergence.
 
 ``compress`` returns (values, indices) per leaf — the analogue of the
 paper's (offset, bytes) diff list — plus the new error-feedback residual.
@@ -16,14 +20,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.collective_codec import ops as codec_ops
 
-def _topk_leaf(g, frac: float):
-    flat = g.reshape(-1)
-    k = max(1, int(flat.shape[0] * frac))
-    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
-    sel = flat[idx]
-    resid = flat.at[idx].set(0.0).reshape(g.shape)
-    return (sel, idx.astype(jnp.int32)), resid
+
+def _select_leaf(g, frac: float):
+    sel, idx, resid = codec_ops.select_codec(g.reshape(-1), frac=frac)
+    return (sel, idx), resid.reshape(g.shape)
 
 
 def compress(grads, residual, frac: float = 0.05):
@@ -34,7 +36,7 @@ def compress(grads, residual, frac: float = 0.05):
     else:
         grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
     flat, treedef = jax.tree.flatten(grads)
-    out = [_topk_leaf(g, frac) for g in flat]
+    out = [_select_leaf(g, frac) for g in flat]
     sparse = jax.tree.unflatten(treedef, [o[0] for o in out])
     resid = jax.tree.unflatten(treedef, [o[1] for o in out])
     return sparse, resid

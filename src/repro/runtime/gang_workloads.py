@@ -36,7 +36,8 @@ from repro.models import model as model_mod
 from repro.models import transformer as tf
 from repro.optim import adamw
 from repro.runtime.serve_loop import Request, ServeLoop
-from repro.runtime.train_loop import extra_batch_specs, make_dp_train_step
+from repro.runtime.train_loop import (extra_batch_specs, make_dp_train_step,
+                                      resolve_sync_mode)
 
 
 class TrainWorkload(GangWorkload):
@@ -71,8 +72,11 @@ class TrainWorkload(GangWorkload):
                                                 global_batch=per * world)
             self._extras = extra_batch_specs(self.cfg,
                                              self.data_cfg.global_batch)
+        mode = resolve_sync_mode(
+            self.sync_mode, handle,
+            self.state["params"] if self.state is not None else None)
         self._step_fn = make_dp_train_step(
-            self.cfg, self.opt_cfg, handle.mesh, self.sync_mode,
+            self.cfg, self.opt_cfg, handle.mesh, mode,
             self.compress_frac)
         if self.state is not None:
             self.resid = coll.init_residual_buffer(handle.mesh,

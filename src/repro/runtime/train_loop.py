@@ -47,7 +47,11 @@ from repro.optim import adamw
 @dataclasses.dataclass
 class RuntimeConfig:
     total_steps: int = 20
-    sync_mode: str = "hierarchical"   # hierarchical | flat | ring | compressed
+    # hierarchical | flat | ring | compressed | auto ("auto" asks the
+    # fabric CollectiveTuner for the best schedule for this gang's
+    # placement topology and gradient size, re-resolved after every
+    # migrate/rescale)
+    sync_mode: str = "hierarchical"
     compress_frac: float = 0.05
     checkpoint_every: int = 10
     ckpt_dir: str = "/tmp/repro-ckpt"
@@ -69,6 +73,22 @@ class RuntimeConfig:
     # the per-kind beta of the shared CostModel into elastic grow probes
     # so they place exactly like a trace placement would
     job_kind: Optional[str] = None
+
+
+def params_nbytes(tree) -> int:
+    """Bytes of one flattened-f32 gradient sync of ``tree`` — the
+    message size the CollectiveTuner buckets by."""
+    return 4 * sum(l.size for l in jax.tree.leaves(tree))
+
+
+def resolve_sync_mode(mode: str, handle: GangHandle,
+                      params=None) -> str:
+    """Concrete schedule for ``make_dp_train_step``: "auto" asks the
+    fabric tuner for the gang's current placement/size dispatch."""
+    if mode != "auto":
+        return mode
+    nbytes = params_nbytes(params) if params is not None else None
+    return handle.best_sync_mode(nbytes)
 
 
 def make_dp_train_step(cfg: ArchConfig, opt_cfg: adamw.AdamWConfig,
@@ -184,9 +204,12 @@ class FaabricTrainRuntime:
         rep = NamedSharding(self.mesh, P())
         return jax.tree.map(lambda _: rep, state)
 
-    def _build(self):
+    def _build(self, state=None):
+        self.sync_mode = resolve_sync_mode(
+            self.rt.sync_mode, self.handle,
+            state["params"] if state is not None else None)
         self._step_fn = make_dp_train_step(
-            self.cfg, self.opt_cfg, self.mesh, self.rt.sync_mode,
+            self.cfg, self.opt_cfg, self.mesh, self.sync_mode,
             self.rt.compress_frac)
 
     def _place_batch(self, batch):
@@ -229,7 +252,7 @@ class FaabricTrainRuntime:
         GranuleGroup is re-addressed in place, so buffered control-plane
         messages and the migration epoch survive the move (Fig 8)."""
         state, _ = self.handle.migrate(state)
-        self._build()
+        self._build(state)
         return state
 
     def _rescale(self, state, resid, new_world: int):
@@ -237,16 +260,16 @@ class FaabricTrainRuntime:
         chips are released to the shared pool and the placement engine
         carves the new sub-mesh under the configured policy (§2.1)."""
         state = self.handle.rescale(state, new_world)
-        self._build()
+        self._build(state)
         resid = coll.init_residual_buffer(self.mesh, state["params"])
         return state, resid
 
     # ---- main loop ----------------------------------------------------------------
     def run(self, seed: int = 0, state=None):
         rt = self.rt
-        self._build()
         if state is None:
             state = self.init_state(seed)
+        self._build(state)
         resid = coll.init_residual_buffer(self.mesh, state["params"])
         # checkpoint step semantics: "state before running step k"
         self.ckpt.save(0, state, blocking=True)

@@ -260,3 +260,56 @@ def test_mlstm_ops_matches_model_chunked():
                                rtol=1e-3)
     np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_r), atol=1e-4,
                                rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# collective_codec (chunk-max threshold select)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("k,m", [(8, 16), (8, 128), (16, 1), (24, 33),
+                                 (1, 64)])
+def test_collective_codec_kernel_matches_ref(k, m):
+    from repro.kernels.collective_codec import kernel as K
+    from repro.kernels.collective_codec import ref as R
+    x = jax.random.normal(sub(40), (k, m))
+    rows = K.BLOCK_ROWS if k % K.BLOCK_ROWS == 0 else 1
+    vals, col, resid = K.chunk_select(x, block_rows=rows, interpret=True)
+    v_r, c_r, r_r = R.chunk_select_ref(x)
+    # bit-exact: the kernel and ref share the min-lane-argmax formulation
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(v_r))
+    np.testing.assert_array_equal(np.asarray(col), np.asarray(c_r))
+    np.testing.assert_array_equal(np.asarray(resid), np.asarray(r_r))
+
+
+@pytest.mark.parametrize("n,frac", [(1000, 0.1), (7, 0.3), (4096, 0.05),
+                                    (100, 1.0), (1, 0.5), (1 << 17, 0.05)])
+def test_collective_codec_roundtrip_exact(n, frac):
+    from repro.kernels.collective_codec import ops as O
+    vec = jax.random.normal(sub(41), (n,))
+    # big sizes force the kernel path explicitly (default routing keeps
+    # non-TPU backends on the ref)
+    kw = dict(use_kernel=True, interpret=True) if n >= O.KERNEL_MIN_SIZE \
+        else {}
+    vals, idx, resid = O.select_codec(vec, frac=frac, **kw)
+    k, m, _ = O.codec_geometry(n, frac)
+    assert vals.shape == (k,) and idx.shape == (k,)
+    assert idx.dtype == jnp.int32
+    recon = jnp.zeros((n,)).at[idx].add(vals) + resid
+    # selected + residual reconstructs the input exactly (error feedback
+    # invariant), for both the ref path and the kernel path (n = 2^17)
+    np.testing.assert_array_equal(np.asarray(recon), np.asarray(vec))
+    # each chunk's pick is its own largest-|x| element
+    mag = np.abs(np.asarray(vec))
+    for i in range(k):
+        lo, hi = i * m, min((i + 1) * m, n)
+        if lo >= n:
+            continue
+        assert mag[int(idx[i])] == mag[lo:hi].max()
+
+
+def test_collective_codec_frac_one_is_identity():
+    from repro.kernels.collective_codec import ops as O
+    vec = jax.random.normal(sub(42), (257,))
+    vals, idx, resid = O.select_codec(vec, frac=1.0)
+    np.testing.assert_array_equal(np.asarray(idx), np.arange(257))
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(vec))
+    assert not np.asarray(resid).any()
