@@ -1,0 +1,185 @@
+"""Serving under open-loop load: continuous batching vs the fixed-batch
+baseline, and the SLO-driven autoscaler under burst traffic.
+
+Three measurements, all on deterministic virtual clocks (gates are
+valid at smoke tier too — no wall-clock noise):
+
+* **continuous vs fixed** — the same open-loop request stream replayed
+  through a real ``ContinuousServeLoop`` and the old fixed-batch
+  ``ServeLoop`` on a tiny model, at several offered loads.  The
+  continuous engine admits into freed slots mid-generation instead of
+  draining every batch to its slowest member, so its tokens/virtual-s
+  strictly dominates at every load point (the ``throughput_ratio``
+  gate) and its tail latency collapses.
+
+* **burst autoscaler** — ``ServeFleetSim``: flash-crowd arrivals
+  (``burst`` regime) against serve gangs the ``ServeAutoscaler``
+  grows/shrinks through a real ``PlacementEngine``.  Acceptance: p99
+  per-token latency stays under the SLO target while the fleet breathes
+  (grow and shrink actions both fire).
+
+* **train+serve drain-not-die** — the combined trace: an elastic
+  training tenant owns most of the fleet; serve bursts reclaim chips
+  via *drain* (shrink at a control point, zero lost work) vs *preempt*
+  (rollback to last checkpoint).  Serve SLOs hold identically in both
+  modes; the difference is exactly the training work a kill would have
+  burned, and training backfills the chips when the burst passes.
+"""
+from __future__ import annotations
+
+HOSTS = 4
+CHIPS = 8
+# fleet config stamped into results/BENCH_bench_serving.json by run.py
+FLEET = {"hosts": HOSTS, "chips_per_host": CHIPS, "policy": "binpack",
+         "engine_arch": "llama3.2-1b (n_layers=1, vocab=128)",
+         "arrival_regimes": ["poisson", "burst"]}
+
+
+def _tiny_cfg():
+    from repro.configs.registry import reduced_config
+    return reduced_config("llama3.2-1b").with_(n_layers=1, vocab=128)
+
+
+def _stream(n, rate, seed, regime="poisson", ragged=False):
+    from repro.runtime.admission import request_stream
+    # equal-length prompts keep the fixed baseline admissible; decode
+    # budgets stay ragged — that is where drain-to-slowest loses
+    return request_stream(n, rate, seed, regime=regime, vocab=128,
+                          prompt_lens=(4, 12) if ragged else (8, 8),
+                          max_new=(3, 10))
+
+
+def _engines_head_to_head(report, tiny):
+    import jax
+
+    from repro.models import transformer as tf
+    from repro.runtime.admission import run_fixed_batch, run_open_loop
+    from repro.runtime.serve_loop import ContinuousServeLoop, ServeLoop
+
+    cfg = _tiny_cfg()
+    params = jax.jit(lambda k: tf.init_params(k, cfg))(
+        jax.random.PRNGKey(0))
+    n = 10 if tiny else 24
+    slots = 4
+    step_s = 0.05
+    loads = (1.0, 4.0) if tiny else (0.5, 2.0, 8.0)
+    ratios = []
+    for load in loads:
+        cont = ContinuousServeLoop(cfg, params, slots=slots, max_len=32)
+        rc = run_open_loop(cont, _stream(n, load, seed=3), step_s=step_s)
+        fixed = ServeLoop(cfg, params, max_len=32)
+        rf = run_fixed_batch(fixed, _stream(n, load, seed=3), slots,
+                             step_s=step_s)
+        assert rc.finished == n and rf.finished == n
+        ratio = rc.tokens_per_s / max(rf.tokens_per_s, 1e-12)
+        ratios.append(ratio)
+        report(f"continuous_vs_fixed/load_{load}/tokens_per_s_continuous",
+               round(rc.tokens_per_s, 3), "tok/virtual-s",
+               f"{n} reqs, {slots} slots, admit-on-free-slot")
+        report(f"continuous_vs_fixed/load_{load}/tokens_per_s_fixed",
+               round(rf.tokens_per_s, 3), "tok/virtual-s",
+               f"batch={slots}, drain-to-slowest")
+        report(f"continuous_vs_fixed/load_{load}/throughput_ratio",
+               round(ratio, 3), "x",
+               "acceptance: > 1 (continuous strictly dominates)")
+        report(f"continuous_vs_fixed/load_{load}/p99_ms_continuous",
+               round(rc.token_lat_p99 * 1e3, 2), "ms/token", "")
+        report(f"continuous_vs_fixed/load_{load}/p99_ms_fixed",
+               round(rf.token_lat_p99 * 1e3, 2), "ms/token", "")
+        report(f"continuous_vs_fixed/load_{load}/ttft_p99_ms_continuous",
+               round(rc.ttft_p99 * 1e3, 2), "ms", "")
+        report(f"continuous_vs_fixed/load_{load}/ttft_p99_ms_fixed",
+               round(rf.ttft_p99 * 1e3, 2), "ms",
+               "queue wait for a full batch + prior drain")
+    report("continuous_vs_fixed/min_throughput_ratio",
+           round(min(ratios), 3), "x",
+           f"worst case over loads {list(loads)}; gate: > 1.0")
+
+
+def _burst_autoscaler(report, tiny):
+    from repro.runtime.admission import ServeSLO
+    from repro.runtime.serve_fleet import ServeFleetSim
+
+    n = 150 if tiny else 400
+    rate = 6.0
+    slo = ServeSLO(target_p99_s=0.6)
+    sim = ServeFleetSim(hosts=HOSTS, chips_per_host=CHIPS, slo=slo,
+                        base_world=2, min_world=1, max_world=16,
+                        cooldown_s=0.5, control_interval_s=0.5)
+    rep = sim.run(_stream(n, rate, seed=7, regime="burst", ragged=True))
+    assert rep.finished == n, "requests stranded"
+    p99_ms = rep.token_lat_p99 * 1e3
+    report("burst_autoscaler/p99_ms", round(p99_ms, 2), "ms/token",
+           f"target {slo.target_p99_s * 1e3} ms under 4x flash crowds")
+    report("burst_autoscaler/p50_ms", round(rep.token_lat_p50 * 1e3, 2),
+           "ms/token", "")
+    report("burst_autoscaler/p99_within_target",
+           int(p99_ms <= slo.target_p99_s * 1e3), "bool",
+           "acceptance: SLO held while the fleet breathes")
+    report("burst_autoscaler/slo_attainment",
+           round(rep.slo_attainment, 4), "frac",
+           "per-request token latency <= target")
+    report("burst_autoscaler/peak_world", rep.peak_world, "chips",
+           "grown into the burst")
+    report("burst_autoscaler/min_world", rep.min_world, "chips",
+           "shrunk back between bursts")
+    report("burst_autoscaler/grew", rep.grew, "actions", "")
+    report("burst_autoscaler/shrank", rep.shrank, "actions",
+           "acceptance: both directions fire (elastic, not one-way)")
+    report("burst_autoscaler/tokens_per_s", round(rep.tokens_per_s, 2),
+           "tok/virtual-s", "")
+
+
+def _train_serve_contention(report, tiny):
+    from repro.runtime.admission import ServeSLO
+    from repro.runtime.serve_fleet import (ServeFleetSim,
+                                           VirtualTrainTenant)
+
+    n = 150 if tiny else 400
+    rate = 6.0
+    slo = ServeSLO(target_p99_s=0.6)
+    out = {}
+    for mode in ("drain", "preempt"):
+        sim = ServeFleetSim(hosts=HOSTS, chips_per_host=CHIPS, slo=slo,
+                            base_world=2, min_world=1, max_world=16,
+                            cooldown_s=0.5, control_interval_s=0.5)
+        train = VirtualTrainTenant("train-0", sim.engine,
+                                   world=HOSTS * CHIPS - 4,
+                                   min_world=4, ckpt_interval_s=8.0)
+        out[mode] = sim.run(
+            _stream(n, rate, seed=7, regime="burst", ragged=True),
+            train=train, train_mode=mode)
+        assert out[mode].finished == n, "requests stranded"
+    for mode, rep in out.items():
+        p99_ms = rep.token_lat_p99 * 1e3
+        report(f"train_serve/{mode}/serve_p99_ms", round(p99_ms, 2),
+               "ms/token", "serve SLO must hold in both modes")
+        report(f"train_serve/{mode}/slo_attainment",
+               round(rep.slo_attainment, 4), "frac", "")
+        report(f"train_serve/{mode}/train_progress",
+               round(rep.train_progress, 1), "chip-s",
+               "effective training work kept")
+        report(f"train_serve/{mode}/train_lost_work_s",
+               round(rep.train_lost_work, 2), "chip-s",
+               "rolled back at reclaims (drain: 0 by construction)")
+        report(f"train_serve/{mode}/train_min_world",
+               rep.train_min_world, "chips",
+               "deepest reclaim trough (chips lent to serve)")
+        report(f"train_serve/{mode}/train_backfilled",
+               round(rep.train_backfilled, 1), "chips",
+               "grown back after the burst passed")
+    drain, pre = out["drain"], out["preempt"]
+    saves = pre.train_lost_work - drain.train_lost_work
+    report("train_serve/drain_saves_work_s", round(saves, 2), "chip-s",
+           "acceptance: > 0 — the near-checkpoint victim drains, "
+           "not dies")
+    report("train_serve/p99_within_target",
+           int(drain.token_lat_p99 <= slo.target_p99_s
+               and pre.token_lat_p99 <= slo.target_p99_s), "bool",
+           "acceptance: serve SLO held while training backfills")
+
+
+def run(report, tiny=False):
+    _engines_head_to_head(report, tiny)
+    _burst_autoscaler(report, tiny)
+    _train_serve_contention(report, tiny)

@@ -36,6 +36,10 @@ REQUIRED_METRICS = {
                               "slowlink_bytes_hierarchical",
                               "codec_select_speedup"),
     "bench_makespan": ("collective_priced/improvement",),
+    "bench_serving": ("continuous_vs_fixed/min_throughput_ratio",
+                      "burst_autoscaler/p99_within_target",
+                      "train_serve/drain_saves_work_s",
+                      "train_serve/p99_within_target"),
 }
 REGRESSION_FACTOR = 2.0
 
@@ -53,6 +57,20 @@ FULL_TIER_GATES = {
     ),
     "bench_makespan": (
         ("collective_priced/improvement", 0.0),
+    ),
+}
+
+# gates enforced on BOTH tiers (BENCH_* and SMOKE_*): bench_serving
+# runs on deterministic virtual clocks, so its acceptance criteria —
+# continuous batching strictly out-throughputs fixed batching at every
+# offered load, and the autoscaler holds the p99 SLO under burst /
+# combined train+serve load — are exact even at smoke sizes
+ALL_TIER_GATES = {
+    "bench_serving": (
+        ("continuous_vs_fixed/min_throughput_ratio", 1.0),
+        ("burst_autoscaler/p99_within_target", 0.0),
+        ("train_serve/drain_saves_work_s", 0.0),
+        ("train_serve/p99_within_target", 0.0),
     ),
 }
 
@@ -113,20 +131,22 @@ def main() -> int:
                   f"{'; '.join(regressed)}", file=sys.stderr)
             bad += 1
             continue
+        gates = list(ALL_TIER_GATES.get(bench, ()))
         if name.startswith("BENCH_"):
-            gated = []
-            for metric, floor in FULL_TIER_GATES.get(bench, ()):
-                cur = metrics.get(metric, {})
-                value = cur.get("value") if isinstance(cur, dict) \
-                    else None
-                if not isinstance(value, (int, float)) \
-                        or value <= floor:
-                    gated.append(f"{metric}={value} (must be > {floor})")
-            if gated:
-                print(f"FAIL {name}: full-tier gate: "
-                      f"{'; '.join(gated)}", file=sys.stderr)
-                bad += 1
-                continue
+            gates += list(FULL_TIER_GATES.get(bench, ()))
+        gated = []
+        for metric, floor in gates:
+            cur = metrics.get(metric, {})
+            value = cur.get("value") if isinstance(cur, dict) \
+                else None
+            if not isinstance(value, (int, float)) \
+                    or value <= floor:
+                gated.append(f"{metric}={value} (must be > {floor})")
+        if gated:
+            print(f"FAIL {name}: acceptance gate: "
+                  f"{'; '.join(gated)}", file=sys.stderr)
+            bad += 1
+            continue
         print(f"ok   {name}: {len(metrics)} metrics "
               f"(bench={payload.get('bench')}, "
               f"wall={payload.get('wall_s')}s)")

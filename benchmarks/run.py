@@ -38,6 +38,7 @@ BENCHES = [
     "bench_migration",        # Fig 14
     "bench_scheduler_scale",  # Fig 11 fix: sharded + vectorized engine
     "bench_churn",            # fleet churn: reclaim/fail + Young/Daly
+    "bench_serving",          # continuous batching + SLO autoscaling
 ]
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")

@@ -90,3 +90,34 @@ class ElasticPolicy:
                 return None
             engine.cancel(res)
         return new
+
+    def decide_scaled(self, world: int, engine: PlacementEngine,
+                      factor: float,
+                      kind: Optional[str] = None) -> Optional[int]:
+        """Directional variant for feedback controllers (the serve
+        autoscaler): ask for ``world * factor`` chips instead of the
+        whole free budget.  ``factor`` > 1 grows toward the SLO (capped
+        by the free-chip budget and validated with a reserve probe like
+        ``decide``), < 1 drains capacity back to the pool.  The result
+        snaps to a power of two within [min_world, max_world]; returns
+        None when no change is possible right now."""
+        def p2floor(x: float) -> int:
+            n = self.min_world
+            while n * 2 <= x:
+                n *= 2
+            return n
+
+        want = max(float(self.min_world),
+                   min(float(self.max_world), world * factor))
+        new = p2floor(want)
+        if new > world:
+            budget = world + engine.idle_chips() - self.target_free
+            new = min(new, p2floor(budget))
+        if new == world:
+            return None
+        if new > world:
+            res = engine.reserve(new - world, kind=kind)
+            if res is None:
+                return None
+            engine.cancel(res)
+        return new

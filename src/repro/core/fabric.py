@@ -746,6 +746,41 @@ class Fabric:
         return self.engine.preemption_plan(n, priority, self.priorities(),
                                            preempt=self.preempt, kind=kind)
 
+    def grow_with_drain(self, handle: GangHandle, state: Any,
+                        new_world: int,
+                        donors: Sequence[Tuple[GangHandle, Any, int]] = ()
+                        ) -> Tuple[Any, Dict[str, Any]]:
+        """Grow a latency-sensitive gang (a serve gang under SLO
+        pressure), *draining* elastic donors instead of killing anyone.
+
+        Tries the plain ``rescale`` first; when the shared pool can't
+        fit it, the largest donor gang halves (down to its floor) via
+        its own ``rescale`` — a graceful shrink at the donor's control
+        point that keeps every step of progress, unlike a preemption
+        rollback — and the grow retries.  ``donors`` is
+        ``[(handle, state, min_world), ...]`` for tenants whose state
+        the caller owns (the autoscaler's training neighbours).
+
+        Returns ``(state, {donor_job_id: new_donor_state})`` — donor
+        states that were resharded.  Raises RuntimeError when the grow
+        still doesn't fit after every donor is at its floor."""
+        donor_states: Dict[str, Any] = {}
+        pool = [[d, s, int(m)] for d, s, m in donors]
+        while True:
+            try:
+                state = handle.rescale(state, new_world)
+                return state, donor_states
+            except RuntimeError:
+                givers = [e for e in pool
+                          if e[0].n // 2 >= e[2] and e[0].n > 1]
+                if not givers:
+                    raise
+                entry = max(givers, key=lambda e: e[0].n)
+                d_handle, d_state, d_min = entry
+                entry[1] = d_handle.rescale(d_state,
+                                            max(d_min, d_handle.n // 2))
+                donor_states[d_handle.job_id] = entry[1]
+
     # ---- trace execution ---------------------------------------------------
     def run_trace(self, jobs: Sequence[Job],
                   workload_factory: Callable[[Job], GangWorkload],

@@ -210,9 +210,25 @@ class CostModel:
                                          Mapping[str, float]] = None,
                  step_compute_s: float = 1.0,
                  link: Optional[comms.LinkProfile] = None,
-                 compress_frac: float = 0.05):
+                 compress_frac: float = 0.05,
+                 serve_token_s: float = 0.05,
+                 serve_slo_s: Optional[float] = None,
+                 serve_kinds: Sequence[str] = ("omp", "serve")):
         self.betas = dict(self.DEFAULT_BETAS if betas is None else betas)
         self.default_beta = default_beta
+        # serve SLO term: ``serve_token_s`` is the base per-token decode
+        # latency of a serve gang on reference chips; with
+        # ``serve_slo_s`` set (opt-in, like collective_bytes), ``score``
+        # / ``score_batch`` multiply a latency-violation penalty into
+        # candidates for ``serve_kinds`` jobs so placement spreads serve
+        # gangs onto topologies that can hold the SLO.  The penalty
+        # deliberately does NOT enter ``slowdown`` — that feeds the
+        # simulated execution rate, and an SLO preference must steer
+        # *choices*, not rewrite physics.  None keeps every decision
+        # bit-identical to the unpenalised model.
+        self.serve_token_s = float(serve_token_s)
+        self.serve_slo_s = serve_slo_s
+        self.serve_kinds = tuple(serve_kinds)
         # collective-aware pricing (DESIGN.md §11): when
         # ``collective_bytes`` is set (bytes per sync step, scalar or
         # per-kind map), ``slowdown`` prices the *best achievable*
@@ -361,13 +377,42 @@ class CostModel:
             return float("inf")
         return (work / eff) * self.slowdown(placement, kind)
 
+    def token_latency(self, placement: Sequence[Tuple[int, int]],
+                      kind: Optional[str] = None,
+                      speeds: Optional[np.ndarray] = None) -> float:
+        """Predicted per-token decode latency of a serve gang on this
+        placement: the replicated decode step is paced by the slowest
+        participating chip and pays the gang's cross-host / collective
+        slowdown on every token."""
+        if not placement:
+            return float("inf")
+        smin = 1.0 if speeds is None else min(float(speeds[h])
+                                              for h, _ in placement)
+        return (self.serve_token_s * self.slowdown(placement, kind)
+                / max(smin, 1e-12))
+
+    def serve_slo_penalty(self, placement: Sequence[Tuple[int, int]],
+                          kind: Optional[str] = None,
+                          speeds: Optional[np.ndarray] = None) -> float:
+        """Multiplicative score penalty for serve-kind placements whose
+        predicted ``token_latency`` breaks ``serve_slo_s`` (1.0 when the
+        SLO holds, the violation ratio when it doesn't, 1.0 always when
+        the term is not opted in)."""
+        if self.serve_slo_s is None or kind not in self.serve_kinds:
+            return 1.0
+        lat = self.token_latency(placement, kind, speeds)
+        return max(1.0, lat / self.serve_slo_s)
+
     def score(self, placement: Sequence[Tuple[int, int]],
               kind: Optional[str] = None,
               speeds: Optional[np.ndarray] = None) -> float:
         """Per-unit-work predicted ``T`` — what policies rank candidate
         placements by (``W`` is constant across candidates, so it drops
-        out of the argmin)."""
-        return self.predicted_time(1.0, placement, kind, speeds)
+        out of the argmin).  With ``serve_slo_s`` opted in, serve-kind
+        candidates that would break the token-latency SLO are scaled by
+        the violation ratio."""
+        return (self.predicted_time(1.0, placement, kind, speeds)
+                * self.serve_slo_penalty(placement, kind, speeds))
 
     def score_batch(self, placements: Sequence[Sequence[Tuple[int, int]]],
                     kind: Optional[str] = None,
@@ -404,7 +449,19 @@ class CostModel:
             eff = np.bincount(seg, weights=chips * speeds[hosts],
                               minlength=k)
         safe = np.where(eff > 0, eff, 1.0)
-        return np.where(eff > 0, (1.0 / safe) * slowdown, np.inf)
+        out = np.where(eff > 0, (1.0 / safe) * slowdown, np.inf)
+        if self.serve_slo_s is not None and kind in self.serve_kinds:
+            # same formula as serve_slo_penalty, segmented: the decode
+            # step is paced by the slowest chip in each candidate
+            if speeds is None:
+                smin = np.ones(k)
+            else:
+                smin = np.full(k, np.inf)
+                np.minimum.at(smin, seg, speeds[hosts])
+            lat = (self.serve_token_s * slowdown
+                   / np.maximum(smin, 1e-12))
+            out = out * np.maximum(1.0, lat / self.serve_slo_s)
+        return out
 
     def active_workers(self, parallelism: int, alloc_n: int,
                        shared_memory: bool) -> int:

@@ -223,19 +223,77 @@ class TraceResult:
             (w[order] / max(ts[-1], 1e-9) * 1000).astype(int), 1))
 
 
+ARRIVAL_REGIMES = ("poisson", "diurnal", "burst")
+
+
+def arrival_times(n: int, rate: float, seed: int,
+                  regime: str = "poisson", diurnal_amp: float = 0.8,
+                  diurnal_period: float = 0.0, burst_factor: float = 4.0,
+                  burst_duty: float = 0.15) -> np.ndarray:
+    """``n`` open-loop arrival timestamps at mean offered load ``rate``.
+
+    Regimes (all deterministic given ``seed``, mean rate ≈ ``rate``):
+
+    * ``poisson`` — homogeneous: exponential inter-arrival gaps (the
+      exact draw sequence ``_assign_arrivals`` has always used).
+    * ``diurnal`` — non-homogeneous Poisson, intensity
+      ``rate * (1 + amp*sin(2*pi*t/period))`` (day/night swing), sampled
+      by Lewis-Shedler thinning.  ``diurnal_period`` defaults to the
+      span ``n`` arrivals cover at ``rate``, i.e. one full "day" per
+      trace.
+    * ``burst`` — baseline load with periodic burst episodes:
+      ``burst_factor`` x rate for ``burst_duty`` of each cycle, rebalanced
+      below baseline otherwise so the mean stays ``rate`` (flash-crowd
+      traffic; the autoscaler stress regime).
+    """
+    rng = np.random.default_rng([seed, 1])
+    if regime == "poisson":
+        t, out = 0.0, []
+        for _ in range(n):
+            t += float(rng.exponential(1.0 / rate))
+            out.append(t)
+        return np.asarray(out)
+    if regime == "diurnal":
+        period = diurnal_period or n / max(rate, 1e-9)
+        lam_max = rate * (1.0 + diurnal_amp)
+
+        def lam(t):
+            return rate * (1.0 + diurnal_amp
+                           * np.sin(2.0 * np.pi * t / period))
+    elif regime == "burst":
+        period = n / max(rate, 1e-9) / 8.0     # several bursts per trace
+        low = max(0.05, (1.0 - burst_factor * burst_duty)
+                  / max(1e-9, 1.0 - burst_duty))
+        lam_max = rate * burst_factor
+
+        def lam(t):
+            frac = (t / period) % 1.0
+            return rate * (burst_factor if frac < burst_duty else low)
+    else:
+        raise ValueError(f"unknown arrival regime {regime!r}")
+    # thinning: candidate gaps at lam_max, accept with lam(t)/lam_max
+    t, out = 0.0, []
+    while len(out) < n:
+        t += float(rng.exponential(1.0 / lam_max))
+        if rng.uniform() * lam_max <= lam(t):
+            out.append(t)
+    return np.asarray(out)
+
+
 def generate_trace(n_jobs: int, kind: str, seed: int,
                    chips_per_host: int = 8,
                    arrival_rate: float = 0.0,
                    priority_classes: Optional[Sequence[Tuple[int, float]]]
-                   = None) -> List[Job]:
+                   = None, arrival_regime: str = "poisson") -> List[Job]:
     """Paper §6.2 traces: parallelism uniform over [2, 2*chips] for MPI
     (world sizes up to 2 VMs) and [2, chips] for OpenMP.
 
-    ``arrival_rate`` > 0 draws Poisson arrivals (exponential inter-arrival
-    gaps with mean ``1/arrival_rate`` seconds); 0 keeps the paper's
-    all-at-t=0 replay.  ``priority_classes`` is [(priority, weight)] to
-    sample per-job priority classes.  Both use rng streams separate from
-    the job-size draws, so the base trace is identical across regimes.
+    ``arrival_rate`` > 0 draws open-loop arrivals from
+    ``arrival_times`` under ``arrival_regime`` (poisson / diurnal /
+    burst); 0 keeps the paper's all-at-t=0 replay.  ``priority_classes``
+    is [(priority, weight)] to sample per-job priority classes.  All
+    draws use rng streams separate from the job-size draws, so the base
+    trace is identical across regimes.
     """
     rng = np.random.default_rng(seed)
     jobs = []
@@ -247,19 +305,20 @@ def generate_trace(n_jobs: int, kind: str, seed: int,
             n = int(rng.integers(2, chips_per_host + 1))
             work = 240.0
         jobs.append(Job(f"{kind}-{i}", kind, n, work))
-    return _assign_arrivals(jobs, seed, arrival_rate, priority_classes)
+    return _assign_arrivals(jobs, seed, arrival_rate, priority_classes,
+                            arrival_regime)
 
 
 def _assign_arrivals(jobs: List[Job], seed: int, arrival_rate: float,
-                     priority_classes) -> List[Job]:
-    """Stamp one Poisson arrival process / priority draw over a whole
+                     priority_classes,
+                     arrival_regime: str = "poisson") -> List[Job]:
+    """Stamp one open-loop arrival process / priority draw over a whole
     trace (rng streams separate from the job-size draws)."""
     if arrival_rate > 0:
-        arr_rng = np.random.default_rng([seed, 1])
-        t = 0.0
-        for job in jobs:
-            t += float(arr_rng.exponential(1.0 / arrival_rate))
-            job.arrival = t
+        times = arrival_times(len(jobs), arrival_rate, seed,
+                              regime=arrival_regime)
+        for job, t in zip(jobs, times):
+            job.arrival = float(t)
     if priority_classes:
         pri_rng = np.random.default_rng([seed, 2])
         pris = [p for p, _ in priority_classes]
@@ -275,7 +334,8 @@ def mixed_trace(n_jobs: int, seed: int, chips_per_host: int = 8,
                 priority_classes: Optional[Sequence[Tuple[int, float]]]
                 = None,
                 kinds: Sequence[str] = ("mpi-compute", "omp",
-                                        "mpi-network")) -> List[Job]:
+                                        "mpi-network"),
+                arrival_regime: str = "poisson") -> List[Job]:
     """Interleaved mpi-compute / mpi-network / omp trace — the fragmented
     multi-tenant mix used by the policy-sweep benchmarks.  Arrivals and
     priorities are drawn once over the merged trace, so ``arrival_rate``
@@ -289,7 +349,8 @@ def mixed_trace(n_jobs: int, seed: int, chips_per_host: int = 8,
     jobs = [parts[i % len(kinds)][i // len(kinds)] for i in range(n_jobs)]
     for i, j in enumerate(jobs):           # unique ids after interleave
         j.job_id = f"mix-{i}-{j.job_id}"
-    return _assign_arrivals(jobs, seed, arrival_rate, priority_classes)
+    return _assign_arrivals(jobs, seed, arrival_rate, priority_classes,
+                            arrival_regime)
 
 
 def hetero_speeds(hosts: int, slow_fraction: float = 0.5,

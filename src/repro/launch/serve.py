@@ -1,8 +1,17 @@
-"""Serving launcher: batched prefill + decode on a reduced config.
+"""Serving launcher: open-loop continuous batching vs the fixed-batch
+baseline on a reduced config.
+
+Requests arrive on their own (virtual) clock — Poisson, diurnal or
+bursty — and enter a ``ContinuousServeLoop`` slot as soon as one frees;
+``--engine fixed`` replays the same stream through the old drain-to-
+slowest batch loop, and ``--engine both`` reports the head-to-head.
+Latency percentiles are measured in virtual seconds (one decode step =
+``--step-ms``); throughput additionally reports real wall time.
 
 Example:
     PYTHONPATH=src python -m repro.launch.serve --arch xlstm-1.3b \
-        --batch 4 --prompt-len 32 --new-tokens 32
+        --engine both --arrival-regime burst --offered-load 0.6 \
+        --requests 24 --target-p99-ms 400
 """
 from __future__ import annotations
 
@@ -16,49 +25,120 @@ import numpy as np
 
 from repro.configs.registry import ARCH_IDS, reduced_config
 from repro.models import transformer as tf
-from repro.runtime.serve_loop import Request, ServeLoop
+from repro.runtime.admission import (ARRIVAL_REGIMES, request_stream,
+                                     run_fixed_batch, run_open_loop)
+from repro.runtime.serve_loop import ContinuousServeLoop, ServeLoop
+
+
+def _extras_fns(cfg, seed: int):
+    """Per-request / per-batch model extras (audio frames, image
+    tokens) for the multimodal families; None elsewhere."""
+    if cfg.family not in ("audio", "vlm"):
+        return None, None
+    key, shape = (("frames", cfg.enc_seq) if cfg.family == "audio"
+                  else ("img", cfg.n_img_tokens))
+
+    def draw(b: int, rid: int):
+        rng = np.random.default_rng([seed, 5, rid])
+        return jnp.asarray(rng.normal(size=(b, shape, cfg.d_model)),
+                           cfg.param_dtype())
+
+    def one(req):
+        return {key: draw(1, req.rid)}
+
+    def batch(reqs):
+        return {key: jnp.concatenate([draw(1, r.rid) for r in reqs])}
+    return one, batch
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=ARCH_IDS, required=True)
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", default="continuous",
+                    choices=["continuous", "fixed", "both"])
+    ap.add_argument("--arrival-regime", default="poisson",
+                    choices=list(ARRIVAL_REGIMES),
+                    help="open-loop arrival process for the request "
+                         "stream (virtual time)")
+    ap.add_argument("--offered-load", type=float, default=0.5,
+                    help="mean arrival rate in requests per virtual "
+                         "second")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="continuous engine slot capacity")
+    ap.add_argument("--batch", type=int, default=0,
+                    help="fixed-batch size (default: --slots)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=32)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--step-ms", type=float, default=50.0,
+                    help="virtual cost of one decode step")
+    ap.add_argument("--target-p99-ms", type=float, default=500.0,
+                    help="SLO: p99 per-token latency ceiling")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch)
     key = jax.random.PRNGKey(args.seed)
     params = jax.jit(lambda k: tf.init_params(k, cfg))(key)
-    rng = np.random.default_rng(args.seed)
-    reqs = [Request(rid=i,
-                    prompt=rng.integers(0, cfg.vocab, args.prompt_len,
-                                        dtype=np.int32),
-                    max_new_tokens=args.new_tokens)
-            for i in range(args.batch)]
-    extras = {}
-    if cfg.family == "audio":
-        extras["frames"] = jnp.asarray(
-            rng.normal(size=(args.batch, cfg.enc_seq, cfg.d_model)),
-            cfg.param_dtype())
-    if cfg.family == "vlm":
-        extras["img"] = jnp.asarray(
-            rng.normal(size=(args.batch, cfg.n_img_tokens, cfg.d_model)),
-            cfg.param_dtype())
+    batch = args.batch or args.slots
+    step_s = args.step_ms / 1e3
+    one_extra, batch_extra = _extras_fns(cfg, args.seed)
 
-    loop = ServeLoop(cfg, params, max_len=args.max_len)
-    t0 = time.time()
-    done = loop.run(reqs, extras=extras)
-    dt = time.time() - t0
-    print(json.dumps({
-        "requests": len(done),
-        "prefill_tokens": loop.stats.prefill_tokens,
-        "decoded_tokens": loop.stats.decoded_tokens,
-        "wall_s": round(dt, 2),
-        "decode_tok_per_s": round(loop.stats.decoded_tokens / dt, 1),
-        "sample_output": done[0].out[:8]}, indent=1))
+    # the fixed baseline needs equal-length prompts; the continuous
+    # engine takes the stream ragged
+    prompt_lens = ((max(1, args.prompt_len // 2), args.prompt_len)
+                   if args.engine == "continuous"
+                   else (args.prompt_len, args.prompt_len))
+
+    def stream():
+        return request_stream(
+            args.requests, args.offered_load, args.seed,
+            regime=args.arrival_regime, vocab=cfg.vocab,
+            prompt_lens=prompt_lens,
+            max_new=(max(1, args.new_tokens // 2), args.new_tokens))
+
+    out = {"arch": args.arch, "engine": args.engine,
+           "arrival_regime": args.arrival_regime,
+           "offered_load": args.offered_load,
+           "requests": args.requests, "slots": args.slots,
+           "batch": batch, "step_ms": args.step_ms,
+           "target_p99_ms": args.target_p99_ms}
+
+    def emit(name, report, wall):
+        p99_ms = report.token_lat_p99 * 1e3
+        out[name] = {
+            "finished": report.finished,
+            "decoded_tokens": report.decoded_tokens,
+            "prefill_tokens": report.prefill_tokens,
+            "virtual_s": round(report.elapsed_s, 3),
+            "tokens_per_virtual_s": round(report.tokens_per_s, 2),
+            "token_lat_p50_ms": round(report.token_lat_p50 * 1e3, 2),
+            "token_lat_p99_ms": round(p99_ms, 2),
+            "ttft_p99_ms": round(report.ttft_p99 * 1e3, 2),
+            "queue_wait_p99_ms": round(report.queue_wait_p99 * 1e3, 2),
+            "slo_met": bool(p99_ms <= args.target_p99_ms),
+            "wall_s": round(wall, 2)}
+
+    if args.engine in ("continuous", "both"):
+        loop = ContinuousServeLoop(cfg, params, slots=args.slots,
+                                   max_len=args.max_len)
+        t0 = time.time()
+        rep = run_open_loop(loop, stream(), step_s=step_s,
+                            extras_fn=one_extra)
+        emit("continuous", rep, time.time() - t0)
+    if args.engine in ("fixed", "both"):
+        loop = ServeLoop(cfg, params, max_len=args.max_len)
+        t0 = time.time()
+        rep = run_fixed_batch(loop, stream(), batch, step_s=step_s,
+                              extras_fn=batch_extra)
+        emit("fixed", rep, time.time() - t0)
+    if args.engine == "both":
+        c, f = out["continuous"], out["fixed"]
+        out["continuous_speedup"] = round(
+            c["tokens_per_virtual_s"]
+            / max(f["tokens_per_virtual_s"], 1e-9), 3)
+    print(json.dumps(out, indent=1))
 
 
 if __name__ == "__main__":

@@ -46,6 +46,10 @@ def main():
     ap.add_argument("--policy", default="binpack",
                     choices=["binpack", "spread", "locality"])
     ap.add_argument("--arrival-rate", type=float, default=0.05)
+    ap.add_argument("--arrival-regime", default="poisson",
+                    choices=list(sim.ARRIVAL_REGIMES),
+                    help="open-loop arrival process for the trace "
+                         "(poisson, diurnal sinusoid, or on/off burst)")
     ap.add_argument("--no-preempt", action="store_true")
     ap.add_argument("--train-steps", type=int, default=3)
     ap.add_argument("--serve-tokens", type=int, default=3)
@@ -162,7 +166,8 @@ def main():
     jobs = sim.mixed_trace(args.jobs, seed=args.seed,
                            chips_per_host=args.chips_per_host,
                            arrival_rate=args.arrival_rate,
-                           priority_classes=[(0, 0.9), (5, 0.1)])
+                           priority_classes=[(0, 0.9), (5, 0.1)],
+                           arrival_regime=args.arrival_regime)
     # under churn, cap gang sizes at half the starting fleet (the churn
     # generator never touches more than half the hosts, so every job
     # stays schedulable through the deepest reclaim trough)
@@ -196,6 +201,7 @@ def main():
         "host_speeds": (None if fabric.engine.speeds is None
                         else list(fabric.engine.speeds)),
         "jobs": len(jobs),
+        "arrival_regime": args.arrival_regime,
         "churn": args.churn,
         "churn_events": 0 if not fleet_events else len(fleet_events),
         "checkpoint_interval_s": (None if ckpt_interval is None

@@ -9,10 +9,12 @@ concurrent gangs interleave on one fabric:
   of ``runtime.train_loop`` without its driver loop).  State = the train
   state pytree; bit-exact across migrate/preempt because the data
   pipeline is (seed, step)-keyed.
-* ``ServeWorkload`` — a serving replica (``runtime.serve_loop``): prefill
-  at first step, then one decoded token per step.  State = the serving
-  state (params + KV caches + cursor), so the same snapshot machinery
-  moves it.
+* ``ServeWorkload`` — a continuously-batched serving replica
+  (``runtime.serve_loop.ContinuousServeLoop``): every step admits due
+  arrivals into free slots (mid-generation joins), then decodes one
+  token for each occupied lane.  State = the serving state (params +
+  slot buffers + cursors + slot bookkeeping), so the same snapshot
+  machinery moves a partially-occupied batch.
 
 ``workload_factory`` maps trace jobs to workloads by ``Job.workload``
 ("train" | "serve", falling back on job kind: omp → serve, mpi → train)
@@ -35,7 +37,7 @@ from repro.data import pipeline as dp
 from repro.models import model as model_mod
 from repro.models import transformer as tf
 from repro.optim import adamw
-from repro.runtime.serve_loop import Request, ServeLoop
+from repro.runtime.serve_loop import ContinuousServeLoop, Request
 from repro.runtime.train_loop import (extra_batch_specs, make_dp_train_step,
                                       resolve_sync_mode)
 
@@ -107,49 +109,95 @@ class TrainWorkload(GangWorkload):
 
 
 class ServeWorkload(GangWorkload):
-    """One serving gang: prefill on the first step, then one token/step."""
+    """One continuously-batched serving gang.
+
+    ``Request.arrival`` is expressed in *steps*: each ``run_step`` first
+    admits every due request a free slot can take — mid-generation
+    joins, so the batch is usually partially occupied — then decodes one
+    token for all occupied lanes.  ``done`` is demand-driven: the gang
+    finishes when every request has all its tokens, not at a fixed step
+    count.  Admission is a pure function of (slot state, steps_done),
+    so a rollback to an earlier snapshot replays the same joins and the
+    same tokens — bit-exact resume with mixed occupied/free slots.
+    """
 
     def __init__(self, cfg: ArchConfig,
                  requests: Optional[Sequence[Request]] = None,
                  prompt_len: int = 8, new_tokens: int = 4, batch: int = 2,
-                 max_len: int = 32, seed: int = 0):
+                 slots: int = 0, max_len: int = 32, seed: int = 0):
         self.cfg = cfg
         self.max_len = max_len
         self.seed = seed
         if requests is None:
+            # ragged prompts + staggered arrivals: the default stream
+            # exercises mid-generation joins even in tiny trace tests
             rng = np.random.default_rng(seed)
             requests = [Request(rid=i,
-                                prompt=rng.integers(0, cfg.vocab, prompt_len,
-                                                    dtype=np.int32),
-                                max_new_tokens=new_tokens)
+                                prompt=rng.integers(
+                                    0, cfg.vocab,
+                                    max(1, prompt_len - (i % 2)),
+                                    dtype=np.int32),
+                                max_new_tokens=new_tokens,
+                                arrival=float(i))
                         for i in range(batch)]
         self.requests = list(requests)
-        # step 0 = prefill; then one decode step per generated token
-        self.total_steps = 1 + max(r.max_new_tokens for r in self.requests)
+        self.slots = int(slots) or max(1, min(len(self.requests), 2))
+        # worst-case serial-wave bound; informational (``done`` rules)
+        waves = -(-len(self.requests) // self.slots)
+        self.total_steps = (1 + int(max(r.arrival for r in self.requests))
+                            + waves * max(r.max_new_tokens
+                                          for r in self.requests))
         self.steps_done = 0
         self.state = None
-        self.loop: Optional[ServeLoop] = None
+        self.loop: Optional[ContinuousServeLoop] = None
+
+    @property
+    def done(self) -> bool:
+        if self.loop is None or self.steps_done == 0:
+            return False
+        fin = set(self.loop.done_rids)
+        return all(r.rid in fin for r in self.requests)
 
     def bind(self, handle: GangHandle) -> None:
         if self.loop is None:
             params = jax.jit(lambda k: tf.init_params(k, self.cfg))(
                 jax.random.PRNGKey(self.seed))
-            self.loop = ServeLoop(self.cfg, params, max_len=self.max_len)
+            self.loop = ContinuousServeLoop(self.cfg, params,
+                                            slots=self.slots,
+                                            max_len=self.max_len)
         # adopt the new placement (and any restored snapshot) in one move
         self.loop.attach(handle, state=self.state)
+        if self.state is not None:
+            self._reconcile()
         self.state = self.loop.serve_state()
+
+    def _reconcile(self) -> None:
+        """Re-link caller-owned requests after a restore: occupied lanes
+        roll their outputs back to the snapshot's decoded prefix,
+        finished rids keep theirs, everything else re-queues from
+        scratch (a post-snapshot admit must fully replay)."""
+        keep = set(self.loop.occupied_rids()) | set(self.loop.done_rids)
+        self.loop.adopt_requests(self.requests)
+        for r in self.requests:
+            if r.rid not in keep:
+                r.out.clear()
 
     def init_state(self, handle: GangHandle) -> None:
         self.state = self.loop.serve_state()
 
     def run_step(self, handle: GangHandle) -> Dict[str, Any]:
-        if self.steps_done == 0:
-            self.loop.start(self.requests)
-        else:
-            self.loop.decode_step()
+        taken = set(self.loop.occupied_rids()) | set(self.loop.done_rids)
+        for r in self.requests:         # due arrivals join mid-generation
+            if r.rid in taken or r.arrival > self.steps_done:
+                continue
+            if self.loop.admit(r) is None:
+                break                   # batch full — retry next step
+        self.loop.decode_step()
         self.state = self.loop.serve_state()
         self.steps_done += 1
         return {"decoded": self.loop.stats.decoded_tokens,
+                "active": self.loop.active,
+                "admitted": self.loop.stats.admitted,
                 "step": self.steps_done,
                 "outputs": [list(r.out) for r in self.requests]}
 

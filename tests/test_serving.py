@@ -1,0 +1,508 @@
+"""Continuous-batching serve path + SLO autoscaling tests.
+
+Pure pieces run in-process (arrival generators, admission queue,
+autoscaler control law, virtual fleet sim, grow-with-drain).  Engine
+parity and the mixed-slot snapshot/migrate paths run real jax models;
+the fabric-level migrate-mid-generation test runs in a subprocess with
+an 8-device CPU fabric (same pattern as test_fabric).
+
+MoE parity caveat: capacity-factor routing couples batch lanes, so the
+fixed-vs-continuous comparison pins a no-drop capacity factor — the
+same mitigation ``test_decode_consistency`` uses.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_sub(code: str, devices: int = 8, timeout: int = 1200) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = SRC
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env,
+                         timeout=timeout)
+    assert out.returncode == 0, out.stderr[-4000:]
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Arrival generators (pure)
+# ---------------------------------------------------------------------------
+def test_arrival_regimes_deterministic_and_mean_preserving():
+    from repro.core.simulator import ARRIVAL_REGIMES, arrival_times
+
+    n, rate = 400, 2.0
+    for regime in ARRIVAL_REGIMES:
+        a = arrival_times(n, rate, seed=3, regime=regime)
+        b = arrival_times(n, rate, seed=3, regime=regime)
+        np.testing.assert_array_equal(a, b)       # deterministic
+        assert a.shape == (n,) and np.all(np.diff(a) > 0)
+        mean_rate = n / a[-1]
+        assert 0.5 * rate < mean_rate < 2.0 * rate, (regime, mean_rate)
+    # the poisson path keeps the exact legacy draw sequence
+    rng = np.random.default_rng([3, 1])
+    legacy = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    np.testing.assert_allclose(
+        arrival_times(n, rate, seed=3), legacy, rtol=1e-12)
+    with pytest.raises(ValueError):
+        arrival_times(4, 1.0, 0, regime="nope")
+
+
+def test_burst_regime_has_flash_crowds():
+    from repro.core.simulator import arrival_times
+
+    n, rate = 400, 2.0
+    pois = arrival_times(n, rate, seed=5)
+    burst = arrival_times(n, rate, seed=5, regime="burst")
+
+    def peak_windowed_rate(t, w=2.0):
+        return max(np.sum((t >= s) & (t < s + w)) / w
+                   for s in np.arange(0.0, t[-1], w / 2))
+    # bursts concentrate arrivals: the busiest window runs far hotter
+    # than anything homogeneous traffic produces at the same mean rate
+    assert peak_windowed_rate(burst) >= 1.5 * peak_windowed_rate(pois)
+
+
+def test_request_stream_payloads_independent_of_regime():
+    from repro.runtime.admission import request_stream
+
+    a = request_stream(32, 1.0, seed=9, regime="poisson",
+                       priority_classes=[(0, 0.5), (5, 0.5)])
+    b = request_stream(32, 1.0, seed=9, regime="burst",
+                       priority_classes=[(0, 0.5), (5, 0.5)])
+    assert {r.priority for r in a} == {0, 5}
+    for ra, rb in zip(a, b):
+        np.testing.assert_array_equal(ra.prompt, rb.prompt)
+        assert ra.max_new_tokens == rb.max_new_tokens
+        assert ra.priority == rb.priority
+        assert ra.arrival != rb.arrival           # regime changes timing
+
+
+def test_admission_queue_priority_then_fifo():
+    from repro.runtime.admission import AdmissionQueue
+    from repro.runtime.serve_loop import Request
+
+    q = AdmissionQueue()
+    mk = lambda rid, pri, t: Request(rid=rid, prompt=np.zeros(1, np.int32),
+                                     priority=pri, arrival=t)
+    q.push(mk(0, 5, 0.0))
+    q.push(mk(1, 0, 2.0))
+    q.push(mk(2, 0, 1.0))
+    q.push(mk(3, 5, 0.5))
+    assert [q.pop().rid for _ in range(4)] == [2, 1, 0, 3]
+    assert q.peek() is None and len(q) == 0
+
+
+# ---------------------------------------------------------------------------
+# Autoscaler control law (pure, real PlacementEngine accounting)
+# ---------------------------------------------------------------------------
+def test_autoscaler_grow_clone_need_and_shrink():
+    from repro.core.elastic import ElasticPolicy
+    from repro.core.placement import PlacementEngine
+    from repro.runtime.admission import ServeAutoscaler, ServeSLO
+
+    eng = PlacementEngine(2, 8)
+    pol = ElasticPolicy(min_world=1, max_world=16)
+    slo = ServeSLO(target_p99_s=0.5)
+    sc = ServeAutoscaler(pol, eng, slo=slo, base_world=2, cooldown_s=2.0)
+    g = eng.allocate("g0", 2)
+    assert g is not None
+
+    # p99 breach with a free pool -> grow the gang 2x
+    acts = sc.decide(0.0, queue_depth=0, p99=1.0, gang_worlds={"g0": 2})
+    assert [(a.kind, a.world) for a in acts] == [("grow", 4)]
+    # cooldown: the very next tick stays quiet even under breach
+    assert sc.decide(0.5, 99, 9.9, {"g0": 2}) == []
+    # queue pressure alone (no latency signal yet) also triggers
+    acts = sc.decide(3.0, queue_depth=50, p99=None, gang_worlds={"g0": 2})
+    assert acts and acts[0].kind == "grow"
+
+    # grow impossible at max_world -> clone a new base gang
+    eng2 = PlacementEngine(2, 8)
+    pol2 = ElasticPolicy(min_world=1, max_world=4)
+    sc2 = ServeAutoscaler(pol2, eng2, slo=slo, base_world=2)
+    eng2.allocate("g0", 4)
+    acts = sc2.decide(0.0, 0, 1.0, {"g0": 4})
+    assert [(a.kind, a.world) for a in acts] == [("clone", 2)]
+
+    # pool exhausted entirely -> "need" (the drain-a-trainer cue)
+    eng3 = PlacementEngine(1, 4)
+    pol3 = ElasticPolicy(min_world=1, max_world=16)
+    sc3 = ServeAutoscaler(pol3, eng3, slo=slo, base_world=2)
+    eng3.allocate("g0", 2)
+    eng3.allocate("train", 2)
+    acts = sc3.decide(0.0, 0, 1.0, {"g0": 2})
+    assert [(a.kind, a.world) for a in acts] == [("need", 4)]
+
+    # comfortable -> shrink back toward min world
+    acts = sc.decide(10.0, queue_depth=0, p99=0.01, gang_worlds={"g0": 4})
+    assert [(a.kind, a.world) for a in acts] == [("shrink", 2)]
+
+
+def test_elastic_decide_scaled_directional():
+    from repro.core.elastic import ElasticPolicy
+    from repro.core.placement import PlacementEngine
+
+    eng = PlacementEngine(2, 8)
+    pol = ElasticPolicy(min_world=1, max_world=16)
+    eng.allocate("g", 2)
+    assert pol.decide_scaled(2, eng, 2.0) == 4
+    assert pol.decide_scaled(2, eng, 0.5) == 1
+    assert pol.decide_scaled(2, eng, 1.0) is None
+    # budget-capped: 12 of 16 chips busy -> 2x of 8 clamps to free budget
+    eng2 = PlacementEngine(2, 8)
+    eng2.allocate("other", 10)
+    eng2.allocate("g", 4)
+    assert pol.decide_scaled(4, eng2, 2.0) is None   # 4->8 needs 4 idle, 2 left
+    assert pol.decide_scaled(2, eng2, 4.0) == 4      # p2 floor of budget
+
+
+def test_serve_slo_penalty_is_opt_in_and_gates_scoring():
+    from repro.core.placement import CostModel
+
+    base = CostModel()
+    slo = CostModel(serve_slo_s=0.04, serve_token_s=0.05)
+    pl = [(0, 2), (1, 2)]
+    # default model: penalty off, scores identical to the shipped one
+    assert base.serve_slo_penalty(pl, "omp", None) == 1.0
+    assert base.score(pl, kind="omp") == CostModel().score(pl, kind="omp")
+    # opt-in: the penalty multiplies score but never slowdown
+    pen = slo.serve_slo_penalty(pl, "omp", None)
+    assert pen > 1.0
+    assert slo.slowdown(pl, "omp") == base.slowdown(pl, "omp")
+    assert slo.score(pl, kind="omp") > base.score(pl, kind="omp")
+    # non-serve kinds are never penalised
+    assert slo.serve_slo_penalty(pl, "mpi-compute", None) == 1.0
+    # slow hosts pace the token latency
+    fast = slo.token_latency([(0, 4)], "omp", [1.0, 1.0])
+    slow = slo.token_latency([(0, 4)], "omp", [0.5, 1.0])
+    assert slow == pytest.approx(2.0 * fast)
+
+
+def test_score_batch_matches_score_with_serve_penalty():
+    from repro.core.placement import CostModel
+
+    cm = CostModel(serve_slo_s=0.04, serve_token_s=0.05)
+    placements = [[(0, 2)], [(0, 1), (1, 3)], [(2, 4)], [(0, 2), (3, 2)]]
+    speeds = np.array([1.0, 0.5, 1.0, 0.7])
+    batch = cm.score_batch(placements, kind="omp", speeds=speeds)
+    single = [cm.score(p, kind="omp", speeds=speeds) for p in placements]
+    np.testing.assert_allclose(batch, single, rtol=1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Virtual fleet: autoscaling + drain-not-die (pure)
+# ---------------------------------------------------------------------------
+def test_fleet_sim_burst_holds_slo_and_breathes():
+    from repro.runtime.admission import ServeSLO, request_stream
+    from repro.runtime.serve_fleet import ServeFleetSim
+
+    reqs = request_stream(120, 6.0, seed=7, regime="burst", vocab=64)
+    slo = ServeSLO(target_p99_s=0.6)
+    sim = ServeFleetSim(hosts=4, chips_per_host=8, slo=slo, base_world=2,
+                        max_world=16, cooldown_s=0.5,
+                        control_interval_s=0.5)
+    rep = sim.run(reqs)
+    assert rep.finished == 120
+    assert rep.token_lat_p99 <= slo.target_p99_s
+    assert rep.grew > 0 and rep.shrank > 0        # both directions fire
+    assert rep.peak_world > rep.min_world
+    # determinism: the same stream replays to the same report
+    sim2 = ServeFleetSim(hosts=4, chips_per_host=8, slo=slo, base_world=2,
+                         max_world=16, cooldown_s=0.5,
+                         control_interval_s=0.5)
+    rep2 = sim2.run(request_stream(120, 6.0, seed=7, regime="burst",
+                                   vocab=64))
+    assert rep2.timeline == rep.timeline
+    assert rep2.token_lat_p99 == rep.token_lat_p99
+
+
+def test_fleet_sim_drain_beats_preempt_at_equal_slo():
+    from repro.runtime.admission import ServeSLO, request_stream
+    from repro.runtime.serve_fleet import (ServeFleetSim,
+                                           VirtualTrainTenant)
+
+    out = {}
+    for mode in ("drain", "preempt"):
+        sim = ServeFleetSim(hosts=4, chips_per_host=8,
+                            slo=ServeSLO(target_p99_s=0.6), base_world=2,
+                            max_world=16, cooldown_s=0.5,
+                            control_interval_s=0.5)
+        train = VirtualTrainTenant("t0", sim.engine, world=28,
+                                   min_world=4)
+        out[mode] = sim.run(request_stream(150, 6.0, seed=7,
+                                           regime="burst", vocab=64),
+                            train=train, train_mode=mode)
+    drain, pre = out["drain"], out["preempt"]
+    # identical serve outcomes: the burst is absorbed either way...
+    assert drain.token_lat_p99 == pre.token_lat_p99 <= 0.6
+    assert drain.train_min_world == pre.train_min_world < 28
+    # ...but only the kill path burns checkpoint-rollback work
+    assert drain.train_lost_work == 0.0
+    assert pre.train_lost_work > 0.0
+    assert drain.train_progress > pre.train_progress
+    assert drain.train_backfilled > 0.0           # grew back after burst
+
+
+def test_fabric_grow_with_drain_reclaims_from_donors():
+    print(run_sub("""
+        from repro.configs.registry import reduced_config
+        from repro.data.pipeline import DataConfig
+        from repro.optim.adamw import AdamWConfig
+        from repro.core.fabric import Fabric
+        from repro.runtime.gang_workloads import ServeWorkload, TrainWorkload
+
+        cfg = reduced_config("llama3.2-1b").with_(n_layers=1, vocab=128)
+        dcfg = DataConfig(vocab=128, seq_len=8, global_batch=8)
+        ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+
+        fab = Fabric(chips_per_host=2)              # 8 chips
+        t = fab.allocate("train0", 6, priority=0)
+        s = fab.allocate("serve0", 2, priority=5)
+        twl = TrainWorkload(cfg, ocfg, dcfg, total_steps=8)
+        twl.bind(t); twl.init_state(t); twl.run_step(t)
+        swl = ServeWorkload(cfg, new_tokens=3, batch=2, max_len=16)
+        swl.bind(s); swl.init_state(s); swl.run_step(s)
+        # a serve spike wants 4 chips; the pool has 0 idle -> the
+        # training donor drains (graceful shrink, zero lost work)
+        state, donors = fab.grow_with_drain(
+            s, swl.state, 4, donors=[(t, twl.state, 2)])
+        assert s.n == 4 and t.n == 3, (s.n, t.n)
+        assert set(donors) == {"train0"}
+        twl.state = donors["train0"]; twl.bind(t)
+        swl.state = state; swl.bind(s)
+        # both gangs keep running on their new placements
+        twl.run_step(t); swl.run_step(s)
+        assert len(twl.losses) == 2
+        # donors exhausted at their floor -> the grow raises
+        try:
+            fab.grow_with_drain(s, swl.state, 8,
+                                donors=[(t, twl.state, 2)])
+            raise AssertionError("grow past the pool must raise")
+        except RuntimeError:
+            pass
+        print("grow-with-drain-ok")
+    """))
+
+
+# ---------------------------------------------------------------------------
+# Engine parity + mixed-slot snapshot/resume (real models)
+# ---------------------------------------------------------------------------
+PARITY_ARCHS = ["llama3.2-1b", "zamba2-2.7b", "granite-moe-1b-a400m"]
+
+
+@pytest.mark.parametrize("arch", PARITY_ARCHS)
+def test_continuous_matches_fixed_batch_tokens(arch):
+    import jax
+
+    from repro.configs.registry import reduced_config
+    from repro.models import transformer as tf
+    from repro.runtime.serve_loop import (ContinuousServeLoop, Request,
+                                          ServeLoop)
+
+    cfg = reduced_config(arch).with_(n_layers=2, vocab=64)
+    if arch == "granite-moe-1b-a400m":
+        cfg = cfg.with_(capacity_factor=8.0)      # no-drop: lane-independent
+    params = jax.jit(lambda k: tf.init_params(k, cfg))(
+        jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+
+    def mk():
+        return [Request(rid=i, prompt=rng.integers(0, 64, 8,
+                                                   dtype=np.int32).copy(),
+                        max_new_tokens=5) for i in range(2)]
+    rng = np.random.default_rng(1)
+    fixed_reqs = mk()
+    ref = ServeLoop(cfg, params, max_len=32).run(fixed_reqs)
+    rng = np.random.default_rng(1)
+    cont_reqs = mk()
+    cont = ContinuousServeLoop(cfg, params, slots=2, max_len=32)
+    cont.run(cont_reqs)
+    for a, b in zip(ref, cont_reqs):
+        assert a.out == b.out, (arch, a.out, b.out)
+    # satellite fix: decoded_tokens counts real tokens, not batch*steps
+    total = sum(len(r.out) for r in cont_reqs)
+    assert cont.stats.decoded_tokens == total
+    assert cont.stats.finished == len(cont_reqs)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "zamba2-2.7b"])
+def test_mixed_slot_snapshot_resume_with_midstream_join(arch):
+    import jax
+
+    from repro.configs.registry import reduced_config
+    from repro.models import transformer as tf
+    from repro.runtime.serve_loop import ContinuousServeLoop, Request
+
+    cfg = reduced_config(arch).with_(n_layers=2, vocab=64)
+    params = jax.jit(lambda k: tf.init_params(k, cfg))(
+        jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+
+    def mk():
+        # ragged prompts across power-of-two buckets
+        return [Request(rid=i, prompt=rng.integers(
+                    0, 64, [5, 3, 9][i], dtype=np.int32).copy(),
+                        max_new_tokens=[6, 3, 4][i]) for i in range(3)]
+
+    def drive(loop, reqs, snapshot_at=None):
+        loop.admit(reqs[0]); loop.admit(reqs[1])
+        snap = None
+        for step in range(4):
+            loop.decode_step()
+            if step == 2:                 # r1 (max_new=3) just freed
+                assert loop.admit(reqs[2]) is not None
+            if snapshot_at == step:
+                snap = loop.serve_state()
+        return snap
+
+    rng = np.random.default_rng(2)
+    ref = mk()
+    ref_loop = ContinuousServeLoop(cfg, params, slots=2, max_len=32)
+    drive(ref_loop, ref)
+    while not ref_loop.done:
+        ref_loop.decode_step()
+
+    rng = np.random.default_rng(2)
+    mine = mk()
+    loop1 = ContinuousServeLoop(cfg, params, slots=2, max_len=32)
+    # snapshot at step 3: r1 finished (slot freed), r2 spliced into the
+    # freed lane mid-generation, r0 still decoding -> mixed occupancy
+    snap = drive(loop1, mine, snapshot_at=3)
+    assert loop1.done_rids == [1] and set(loop1.occupied_rids()) == {0, 2}
+
+    # restore into a FRESH loop (new driver process semantics)
+    loop2 = ContinuousServeLoop(cfg, params, slots=2, max_len=32)
+    loop2.load_serve_state(snap)
+    loop2.adopt_requests(mine)
+    while not loop2.done:
+        loop2.decode_step()
+    for a, b in zip(ref, mine):
+        assert a.out == b.out, (arch, a.out, b.out)
+    assert sorted(loop2.done_rids) == [0, 1, 2]
+
+
+def test_adopt_requests_rolls_outputs_back_to_snapshot():
+    import jax
+
+    from repro.configs.registry import reduced_config
+    from repro.models import transformer as tf
+    from repro.runtime.serve_loop import ContinuousServeLoop, Request
+
+    cfg = reduced_config("llama3.2-1b").with_(n_layers=1, vocab=64)
+    params = jax.jit(lambda k: tf.init_params(k, cfg))(
+        jax.random.PRNGKey(0))
+    req = Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                  max_new_tokens=6)
+    loop = ContinuousServeLoop(cfg, params, slots=2, max_len=16)
+    loop.admit(req)
+    loop.decode_step(); loop.decode_step()
+    snap = loop.serve_state()
+    loop.decode_step(); loop.decode_step()       # post-snapshot progress
+    assert len(req.out) == 4
+    fresh = ContinuousServeLoop(cfg, params, slots=2, max_len=16)
+    fresh.load_serve_state(snap)
+    fresh.adopt_requests([req])
+    assert len(req.out) == 2                     # rolled back, same object
+    while not fresh.done:
+        fresh.decode_step()
+    assert len(req.out) == 6
+
+
+def test_serve_workload_migrates_mid_generation_with_join_after():
+    print(run_sub("""
+        import numpy as np
+        from repro.configs.registry import reduced_config
+        from repro.core.fabric import Fabric
+        from repro.runtime.gang_workloads import ServeWorkload
+        from repro.runtime.serve_loop import Request
+
+        cfg = reduced_config("llama3.2-1b").with_(n_layers=1, vocab=128)
+        rng = np.random.default_rng(4)
+        def mk():
+            # ragged prompts; r2/r3 arrive later than the slot count, so
+            # the batch always has mixed occupied/free slots in flight
+            return [Request(rid=i,
+                            prompt=rng.integers(0, 128, [7, 4, 6, 3][i],
+                                                dtype=np.int32).copy(),
+                            max_new_tokens=[6, 3, 5, 4][i],
+                            arrival=float([0, 0, 2, 6][i]))
+                    for i in range(4)]
+
+        # reference: uninterrupted run on one placement
+        fab = Fabric(chips_per_host=2)
+        rng = np.random.default_rng(4)
+        h = fab.allocate("ref", 2)
+        ref_wl = ServeWorkload(cfg, requests=mk(), slots=2, max_len=32)
+        ref_wl.bind(h); ref_wl.init_state(h)
+        while not ref_wl.done:
+            ref_wl.run_step(h)
+        ref = [list(r.out) for r in ref_wl.requests]
+        h.release()
+
+        # interrupted: 3 steps (r2 joined mid-generation at step 2,
+        # slots mixed occupied/free), then preempt + resume on a
+        # DIFFERENT placement; r3 joins only after the move
+        rng = np.random.default_rng(4)
+        a = fab.allocate("serve", 2, priority=0)
+        wl = ServeWorkload(cfg, requests=mk(), slots=2, max_len=32)
+        wl.bind(a); wl.init_state(a)
+        for _ in range(3):
+            wl.run_step(a)
+        assert wl.loop.active > 0 and not wl.done
+        a.preempt(wl.state, wl.steps_done)
+        blocker = fab.allocate("blocker", 4, priority=5)  # old chips busy
+        state, step = a.resume()
+        assert step == 3 and a.n == 2
+        wl.state = state
+        wl.bind(a)                  # reconcile + re-place mid-generation
+        while not wl.done:
+            wl.run_step(a)
+        live = [list(r.out) for r in wl.requests]
+        assert live == ref, (live, ref)
+        blocker.release(); a.release()
+        print("serve-migrate-ok", live)
+    """))
+
+
+def test_run_trace_serve_actions_match_prediction_all_regimes():
+    print(run_sub("""
+        from repro.configs.registry import reduced_config
+        from repro.core import simulator as sim
+        from repro.core.fabric import Fabric
+        from repro.data.pipeline import DataConfig
+        from repro.optim.adamw import AdamWConfig
+        from repro.runtime.gang_workloads import workload_factory
+
+        cfg = reduced_config("llama3.2-1b").with_(n_layers=1, vocab=128)
+        dcfg = DataConfig(vocab=128, seq_len=8, global_batch=8)
+        ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+        for regime in sim.ARRIVAL_REGIMES:
+            jobs = sim.mixed_trace(5, seed=2, chips_per_host=2,
+                                   arrival_rate=0.2,
+                                   priority_classes=[(0, 0.7), (5, 0.3)],
+                                   arrival_regime=regime)
+            for j in jobs:
+                j.parallelism = min(j.parallelism, 4)
+            fab = Fabric(chips_per_host=2)
+            predicted = fab.predict_trace(jobs)
+            ex = fab.run_trace(jobs, workload_factory(cfg, ocfg, dcfg,
+                                                      train_steps=2,
+                                                      serve_tokens=3))
+            assert ex.result.actions == predicted.actions, regime
+            assert ex.result.finish_order == predicted.finish_order
+            serve_recs = [r for r in ex.live.values()
+                          if r.get("workload") == "ServeWorkload"]
+            assert serve_recs, "trace exercised no serve gangs"
+            for rec in serve_recs:
+                outs = rec["final_metrics"]["outputs"]
+                assert all(len(o) > 0 for o in outs)
+            print(regime, "actions-match-ok", len(ex.result.actions))
+    """))
