@@ -22,6 +22,16 @@ trace, each averaged over three churn-schedule seeds:
   interval).  The makespan optimum is interior, and
   ``fleet.optimal_checkpoint_interval`` (tau* = sqrt(2·delta·MTBF), fed
   by ``churn_mtbf``) lands near it.
+
+* **risk-aware vs risk-blind** — every churn regime run twice at the
+  same Young/Daly cadence: once with the stock placement (stranded
+  gangs roll back to their checkpoint), once with
+  ``CostModel.risk_tau_s`` pricing expected lost work into every
+  placement decision and shrink-before-rollback refitting stranded
+  gangs into surviving capacity (DESIGN.md §13).  The aware arm must
+  lose no more work and inflate the makespan no more in each regime,
+  and the correlated-rack case must recover at least one stranded gang
+  by shrinking instead of rolling back.
 """
 from __future__ import annotations
 
@@ -32,19 +42,26 @@ from repro.core import simulator as S
 
 SHARD_HOSTS = 16
 SEEDS = (11, 19, 31)
+# the risk-aware section averages over more churn schedules: a single
+# rack failure's effect on a queue-dominated tail is high-variance, so
+# three seeds are not enough to separate the arms
+RISK_SEEDS = SEEDS + (43, 53)
 # fleet config stamped into results/BENCH_bench_churn.json by run.py
 FLEET = {"hosts": 32, "chips_per_host": 8,
          "sched": ["central", "sharded"], "shard_hosts": SHARD_HOSTS,
          "policy": "binpack", "regimes": list(F.CHURN_REGIMES),
-         "schedule_seeds": list(SEEDS)}
+         "schedule_seeds": list(SEEDS),
+         "risk_schedule_seeds": list(RISK_SEEDS)}
 
 
-def _sim(hosts, sched="central", ckpt=None, cost_model=None):
+def _sim(hosts, sched="central", ckpt=None, cost_model=None,
+         shrink=False):
     return S.Simulator(hosts, 8, "granular", migrate=True,
                        policy="binpack", sched=sched,
                        shard_hosts=SHARD_HOSTS,
                        cost_model=cost_model,
-                       checkpoint_interval=ckpt)
+                       checkpoint_interval=ckpt,
+                       shrink_recovery=shrink)
 
 
 def _fail_schedule(hosts, horizon, seed, rate, cph=8, rejoin=4.0):
@@ -260,3 +277,87 @@ def run(report, tiny=False):
            int(r_one.actions == r_full.actions), "bool",
            "delta charging is deterministic: fraction=1.0 reproduces "
            "the full-cost Action log event for event")
+
+    # ---- risk-aware placement + shrink-before-rollback ----
+    # Two arms per churn regime at the same Young/Daly cadence: the
+    # risk-blind stock placement (every stranded gang rolls back to its
+    # checkpoint) vs CostModel.risk_tau_s pricing expected lost work
+    # into placements plus shrink-before-rollback refitting stranded
+    # gangs into surviving capacity.  Any saving is pure placement +
+    # recovery — checkpoint charging is identical across the arms.
+    tau_ck = tau_star
+
+    def _risk_arm(cost_model, shrink, make_events):
+        mks, recs, losts, shrs = [], [], [], []
+        for seed in RISK_SEEDS:
+            sim = _sim(hosts, ckpt=tau_ck, cost_model=cost_model,
+                       shrink=shrink)
+            r = sim.run(list(jobs), fleet_events=make_events(seed))
+            assert len(r.finish_order) == len(jobs), "jobs stranded"
+            mks.append(r.makespan)
+            recs.append(r.recoveries)
+            losts.append(r.lost_work_s)
+            shrs.append(r.shrinks)
+        return (float(np.mean(mks)), float(np.mean(recs)),
+                float(np.mean(losts)), float(np.mean(shrs)))
+
+    def _regime_events(regime):
+        def make(seed):
+            return F.churn_schedule(regime, hosts, 8, horizon,
+                                    seed=seed + 13, rate=0.02,
+                                    drain_s=5.0)
+        return make
+
+    for regime in F.CHURN_REGIMES:
+        make = _regime_events(regime)
+        mk_b, rec_b, lost_b, _ = _risk_arm(None, False, make)
+        mk_a, rec_a, lost_a, shr_a = _risk_arm(
+            CostModel(risk_tau_s=tau_ck), True, make)
+        infl_b = (mk_b - base["central"].makespan) \
+            / base["central"].makespan * 100.0
+        infl_a = (mk_a - base["central"].makespan) \
+            / base["central"].makespan * 100.0
+        report(f"risk/{regime}/lost_work_blind_s", round(lost_b, 1),
+               "s", "work rolled back, risk-blind placement")
+        report(f"risk/{regime}/lost_work_aware_s", round(lost_a, 1),
+               "s", "risk term + shrink-before-rollback")
+        report(f"risk/{regime}/inflation_pct_blind", round(infl_b, 2),
+               "% makespan", "vs the churn-free baseline")
+        report(f"risk/{regime}/inflation_pct_aware", round(infl_a, 2),
+               "% makespan", "vs the churn-free baseline")
+        report(f"risk/{regime}/recoveries_blind", round(rec_b, 1),
+               "jobs", "checkpoint rollbacks")
+        report(f"risk/{regime}/recoveries_aware", round(rec_a, 1),
+               "jobs", "rollbacks shrink could not avert")
+        report(f"risk/{regime}/shrinks", round(shr_a, 1), "gangs",
+               "stranded gangs refit into surviving capacity")
+        report(f"risk/{regime}/improves",
+               int(lost_a <= lost_b and mk_a <= mk_b), "bool",
+               "acceptance: aware arm loses no more work and no more "
+               "makespan than blind")
+        if regime == "correlated-rack-failure":
+            report("risk/correlated-rack-failure/shrink_recoveries",
+                   round(shr_a, 1), "gangs",
+                   "acceptance: >=1 gang stranded by the rack failure "
+                   "recovers by shrinking, not rolling back")
+
+    # determinism pins: the risk-aware path replays bit-identically,
+    # and the default-off CostModel (risk_tau_s=None, no shrink) stays
+    # action-for-action identical to the stock simulator
+    make = _regime_events("correlated-rack-failure")
+    ra = _sim(hosts, ckpt=tau_ck, cost_model=CostModel(
+        risk_tau_s=tau_ck), shrink=True).run(
+        list(jobs), fleet_events=make(SEEDS[0]))
+    rb = _sim(hosts, ckpt=tau_ck, cost_model=CostModel(
+        risk_tau_s=tau_ck), shrink=True).run(
+        list(jobs), fleet_events=make(SEEDS[0]))
+    report("risk/aware_identical_rerun",
+           int(ra.actions == rb.actions), "bool",
+           "risk-aware + shrink replays bit-identically")
+    r_off = _sim(hosts, ckpt=tau_ck, cost_model=CostModel()).run(
+        list(jobs), fleet_events=make(SEEDS[0]))
+    r_stock = _sim(hosts, ckpt=tau_ck).run(
+        list(jobs), fleet_events=make(SEEDS[0]))
+    report("risk/off_bit_identical",
+           int(r_off.actions == r_stock.actions), "bool",
+           "risk term default-off reproduces the stock Action log")

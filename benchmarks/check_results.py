@@ -40,6 +40,13 @@ REQUIRED_METRICS = {
                       "burst_autoscaler/p99_within_target",
                       "train_serve/drain_saves_work_s",
                       "train_serve/p99_within_target"),
+    "bench_churn": tuple(
+        [f"risk/{r}/{m}" for r in ("spot-heavy", "steady-join",
+                                   "correlated-rack-failure")
+         for m in ("lost_work_blind_s", "lost_work_aware_s",
+                   "inflation_pct_aware", "improves")]
+        + ["risk/correlated-rack-failure/shrink_recoveries",
+           "risk/aware_identical_rerun", "risk/off_bit_identical"]),
 }
 REGRESSION_FACTOR = 2.0
 
@@ -61,16 +68,28 @@ FULL_TIER_GATES = {
 }
 
 # gates enforced on BOTH tiers (BENCH_* and SMOKE_*): bench_serving
-# runs on deterministic virtual clocks, so its acceptance criteria —
-# continuous batching strictly out-throughputs fixed batching at every
-# offered load, and the autoscaler holds the p99 SLO under burst /
-# combined train+serve load — are exact even at smoke sizes
+# and bench_churn run on deterministic virtual clocks, so their
+# acceptance criteria — continuous batching strictly out-throughputs
+# fixed batching at every offered load, the autoscaler holds the p99
+# SLO under burst / combined train+serve load, and risk-aware placement
+# + shrink-before-rollback loses no more work and no more makespan than
+# the risk-blind arm in every churn regime (with the correlated-rack
+# case recovering stranded gangs by shrinking, and the risk term
+# staying bit-identical when off) — are exact even at smoke sizes
 ALL_TIER_GATES = {
     "bench_serving": (
         ("continuous_vs_fixed/min_throughput_ratio", 1.0),
         ("burst_autoscaler/p99_within_target", 0.0),
         ("train_serve/drain_saves_work_s", 0.0),
         ("train_serve/p99_within_target", 0.0),
+    ),
+    "bench_churn": (
+        ("risk/spot-heavy/improves", 0.0),
+        ("risk/steady-join/improves", 0.0),
+        ("risk/correlated-rack-failure/improves", 0.0),
+        ("risk/correlated-rack-failure/shrink_recoveries", 0.0),
+        ("risk/aware_identical_rerun", 0.0),
+        ("risk/off_bit_identical", 0.0),
     ),
 }
 

@@ -5,6 +5,14 @@ loses its host to a hard failure and recovers *bit-exactly* from its
 last snapshot, and a replacement host leases in from the spare pool
 (core.fleet + the rFaaS-style reclaimable-executor story).
 
+Act 2 replays the same hard failure against a *risk-aware* fabric
+(``CostModel(risk_tau_s=...)`` + ``shrink_recovery=True``): the wide
+training gang that act 1 would have rolled back instead sheds the dead
+host's chips, keeps training at reduced width on the survivors, and
+regrows to its submitted width the moment the replacement host joins —
+zero lost work, and the live Action log still matches the simulator's
+prediction step for step.
+
 Run:
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
         PYTHONPATH=src python examples/spot_fleet.py
@@ -92,6 +100,53 @@ def main():
           f"final loss {train['final_metrics']['loss']:.4f}")
     print("spot wave survived: completion order", res.finish_order,
           "makespan", round(res.makespan, 1), "s ✓")
+
+    # ---- act 2: the same failure, but risk-aware ----------------------
+    # a 4-chip gang spans two hosts; losing one would roll it back to
+    # its last snapshot.  With the risk term on and shrink_recovery
+    # enabled it sheds the dead host instead (live reshard from a
+    # surviving replica), then regrows when the spare host joins.
+    from repro.core.placement import CostModel
+
+    fabric2 = Fabric(devices=devs[:6], chips_per_host=2,
+                     spares=devs[6:8],
+                     cost_model=CostModel(risk_tau_s=4.0))
+    jobs2 = [
+        Job("train-wide", "mpi-compute", 4, 200.0, arrival=0.0,
+            workload="train"),
+        Job("serve-1", "omp", 2, 120.0, arrival=0.0, priority=1,
+            workload="serve"),
+    ]
+    wave2 = [
+        FleetEvent(6.0, "fail", hosts=[0]),
+        FleetEvent(10.0, "join", capacities=[2]),
+    ]
+    predicted2 = fabric2.predict_trace(jobs2, preempt=True,
+                                       fleet_events=wave2,
+                                       checkpoint_interval=4.0,
+                                       shrink_recovery=True)
+    ex2 = fabric2.run_trace(
+        jobs2, workload_factory(cfg, ocfg, dcfg, train_steps=4,
+                                serve_tokens=serve_tokens),
+        preempt=True, fleet_events=wave2, checkpoint_interval=4.0,
+        shrink_recovery=True)
+    res2 = ex2.result
+
+    assert res2.actions == predicted2.actions, \
+        "risk-aware live run diverged from the simulator's prediction"
+    assert res2.shrinks >= 1, "gang should shrink onto survivors"
+    assert res2.regrows >= 1, "gang should regrow when the spare joins"
+    assert res2.recoveries == 0 and res2.lost_work_s == 0.0, \
+        "shrink-before-rollback should make the rollback unnecessary"
+    train2 = ex2.live["train-wide"]
+    print(f"train-wide shrank {train2.get('shrinks', 0)}x and regrew "
+          f"{train2.get('regrows', 0)}x instead of rolling back: "
+          f"0.0s lost work (act 1's train-0 lost "
+          f"{round(res.lost_work_s, 1)}s), final loss "
+          f"{train2['final_metrics']['loss']:.4f}")
+    print("risk-aware wave survived: completion order",
+          res2.finish_order, "makespan", round(res2.makespan, 1),
+          "s ✓")
 
 
 if __name__ == "__main__":

@@ -14,7 +14,7 @@ keeping the *global* batch size and the loss trajectory unchanged:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Sequence
+from typing import Any, List, Optional, Sequence
 
 import jax
 import numpy as np
@@ -49,6 +49,27 @@ def reshard_gang(state, new_devices: Sequence[Any]):
     new_state = migration.migrate_live(state, replicated_shardings(state,
                                                                    mesh))
     return new_state, mesh
+
+
+def shrink_worlds(n: int, floor: Optional[int] = None) -> List[int]:
+    """Candidate world sizes for shrink-before-rollback, largest first:
+    the gang's full width ``n`` (a refit onto surviving capacity keeps
+    everything), then each power of two below it down to ``floor``
+    (powers of two keep the global batch dividing evenly, the same
+    snapping ``ElasticPolicy`` uses).  ``floor`` defaults to
+    ``max(1, n // 4)``: shrinking more than 4x runs so slowly that a
+    checkpoint rollback + full-width requeue wins once capacity
+    returns."""
+    if floor is None:
+        floor = max(1, n // 4)
+    worlds = [n]
+    p = 1
+    while p * 2 < n:
+        p *= 2
+    while p >= max(1, floor) and p < n:
+        worlds.append(p)
+        p //= 2
+    return worlds
 
 
 @dataclasses.dataclass

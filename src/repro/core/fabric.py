@@ -788,7 +788,9 @@ class Fabric:
                   preempt: Union[bool, PreemptPolicy] = True,
                   migrate: bool = False, backfill: bool = False,
                   fleet_events: Optional[Sequence[Any]] = None,
-                  checkpoint_interval: Optional[float] = None
+                  checkpoint_interval: Optional[float] = None,
+                  shrink_recovery: bool = False,
+                  adapt_cadence: bool = False
                   ) -> "TraceExecution":
         """Execute an arrival-time trace — Poisson arrivals, priority
         classes, preemption — against real concurrent gangs on this
@@ -797,13 +799,21 @@ class Fabric:
         fleet churn (``core.fleet``): joins draw staged ``spares``,
         reclaims drain and evacuate live gangs, hard failures roll gangs
         back to their last real snapshot; ``checkpoint_interval`` sets
-        the periodic live-checkpoint cadence.  See ``LiveTraceRunner``."""
+        the periodic live-checkpoint cadence.  ``shrink_recovery`` turns
+        on shrink-before-rollback (stranded gangs reshard onto
+        surviving capacity instead of rolling back; DESIGN.md §13) and
+        ``adapt_cadence`` re-derives the Young/Daly interval from
+        measured delta-checkpoint bytes after each rebase window (live
+        only — it breaks Action-log parity with ``predict_trace``).
+        See ``LiveTraceRunner``."""
         assert not self.gangs, "run_trace requires an idle fabric"
         runner = LiveTraceRunner(self, workload_factory,
                                  policy=policy or self.engine.default_policy,
                                  preempt=preempt, migrate=migrate,
                                  backfill=backfill,
-                                 checkpoint_interval=checkpoint_interval)
+                                 checkpoint_interval=checkpoint_interval,
+                                 shrink_recovery=shrink_recovery,
+                                 adapt_cadence=adapt_cadence)
         t0 = time.time()
         try:
             result = runner.run(list(jobs), fleet_events=fleet_events)
@@ -819,19 +829,23 @@ class Fabric:
                       preempt: Union[bool, PreemptPolicy] = True,
                       migrate: bool = False, backfill: bool = False,
                       fleet_events: Optional[Sequence[Any]] = None,
-                      checkpoint_interval: Optional[float] = None
+                      checkpoint_interval: Optional[float] = None,
+                      shrink_recovery: bool = False
                       ) -> TraceResult:
         """Pure-simulation prediction for the same trace on a fabric of
-        this shape (same hosts, capacities, per-host speeds, cost model,
-        policy, and centralised-vs-sharded engine architecture via
-        ``clone_empty``) — what ``run_trace`` should reproduce,
-        placement-for-placement, churn schedule and all."""
+        this shape (same hosts, capacities, per-host speeds, cost model
+        — risk term and all, via ``clone_empty`` copying the lease
+        metadata — policy, and centralised-vs-sharded engine
+        architecture) — what ``run_trace`` should reproduce,
+        placement-for-placement, churn schedule, shrink recoveries and
+        all."""
         pol = policy or self.engine.default_policy
         engine = self.engine.clone_empty()
         sim = Simulator(engine.hosts, self.chips_per_host, "granular",
                         migrate=migrate, policy=pol, backfill=backfill,
                         preempt=preempt, engine=engine,
-                        checkpoint_interval=checkpoint_interval)
+                        checkpoint_interval=checkpoint_interval,
+                        shrink_recovery=shrink_recovery)
         return sim.run(list(jobs), fleet_events=fleet_events)
 
 
@@ -870,12 +884,15 @@ class LiveTraceRunner(Simulator):
                  policy: Union[str, PlacementPolicy] = "binpack",
                  preempt: Union[bool, PreemptPolicy] = True,
                  migrate: bool = False, backfill: bool = False,
-                 checkpoint_interval: Optional[float] = None):
+                 checkpoint_interval: Optional[float] = None,
+                 shrink_recovery: bool = False,
+                 adapt_cadence: bool = False):
         super().__init__(fabric.engine.hosts, fabric.chips_per_host,
                          "granular", migrate=migrate, policy=policy,
                          backfill=backfill, preempt=preempt,
                          engine=fabric.engine,
-                         checkpoint_interval=checkpoint_interval)
+                         checkpoint_interval=checkpoint_interval,
+                         shrink_recovery=shrink_recovery)
         self.fabric = fabric
         self.factory = workload_factory
         self.workloads: Dict[str, GangWorkload] = {}
@@ -884,6 +901,13 @@ class LiveTraceRunner(Simulator):
         # set per run(): with churn possible, every gang start takes a
         # baseline snapshot so a hard failure always has a rollback point
         self._churn = checkpoint_interval is not None
+        # adaptive Young/Daly cadence (opt-in; breaks Action-log parity
+        # with predict_trace, which never sees the measured bytes):
+        # after each rebase window the interval is re-derived from the
+        # observed delta fraction — tau* scales as sqrt(delta), so
+        # tau = tau0 * sqrt(eff_observed / eff_configured)
+        self.adapt_cadence = adapt_cadence
+        self._tau0 = checkpoint_interval
 
     def run(self, jobs, fleet_events=None):
         self._churn = bool(fleet_events) \
@@ -1013,6 +1037,42 @@ class LiveTraceRunner(Simulator):
         # charging the configured fraction so Action logs stay
         # identical to predict_trace
         self.model.observe_checkpoint(stat["bytes"], stat["full_bytes"])
+        if self.adapt_cadence and self.checkpoint_interval is not None \
+                and len(self.model.ckpt_observed) \
+                % self.model.ckpt_rebase_every == 0:
+            # rebase window closed: fold the *measured* delta fraction
+            # into the Young/Daly interval (tau* ∝ sqrt(delta))
+            frac = self.model.observed_delta_fraction()
+            eff0 = self.model.effective_checkpoint_cost_s()
+            if frac is not None and eff0 > 0:
+                eff = self.model.effective_checkpoint_cost_s(
+                    fraction=frac)
+                self.checkpoint_interval = float(
+                    self._tau0 * np.sqrt(eff / eff0))
+                rec["adapted_interval_s"] = self.checkpoint_interval
+
+    def _on_shrink(self, rj, survivors) -> None:
+        # shrink-before-rollback (or a regrow back to full width),
+        # live: the event loop already settled engine accounting
+        # (apply_migration mid-drain, bind after a hard fail) and
+        # rj.alloc carries the new placement.  State is replicated
+        # across the gang, so any surviving replica reshards it onto
+        # the new devices with nothing lost; dead and draining devices
+        # are dropped by the pool's reclaim.
+        job_id = rj.job.job_id
+        handle = self.handles[job_id]
+        wl = self.workloads[job_id]
+        old_width = len(handle.devices)
+        self.fabric.reclaim(handle.devices)
+        new_devices = self.fabric.claim(rj.alloc.placement)
+        wl.state, _ = elastic_mod.reshard_gang(wl.state, new_devices)
+        handle.attach(rj.alloc, devices=new_devices)
+        self.fabric.gangs[job_id] = handle
+        wl.bind(handle)
+        rec = self._record(job_id)
+        key = "shrinks" if len(new_devices) < old_width else "regrows"
+        rec[key] = rec.get(key, 0) + 1
+        rec["epochs"].append(handle.group.epoch)
 
     def _on_fail(self, rj, hosts) -> None:
         # the gang's host died: live state is gone; fall back to the

@@ -54,7 +54,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Mapping, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -63,6 +63,13 @@ from repro.core.placement import Placement, PlacementEngine
 # Default drain window for spot reclaims (the cloud's two-minute warning,
 # scaled to the simulator's seconds-long jobs).
 DEFAULT_DRAIN_S = 5.0
+
+# Drain-deadline evacuation retries: capped exponential backoff.  The
+# base/cap are fractions of typical drain windows (a 5 s spot drain gets
+# ~3 retries, a 30 s reserved drain ~8) and the deterministic jitter
+# de-synchronises concurrent drains in large fleets.
+RETRY_BASE_S = 0.5
+RETRY_CAP_S = 4.0
 
 
 @dataclasses.dataclass
@@ -148,6 +155,35 @@ class FleetController:
         """Retire ``hosts`` for good (hard failure / drain expiry)."""
         return self.engine.fail_hosts(hosts)
 
+    # retry backoff knobs (module defaults; per-controller overridable)
+    retry_base_s = RETRY_BASE_S
+    retry_cap_s = RETRY_CAP_S
+
+    def retry_times(self, ev: FleetEvent, now: float) -> List[float]:
+        """Evacuation-retry schedule through a reclaim's drain window:
+        capped exponential backoff (base doubling up to ``retry_cap_s``)
+        with deterministic jitter, strictly inside ``(now, deadline)``.
+        Capacity freed mid-drain (a finish, a join) is caught at the
+        next retry instead of only at the deadline.  The jitter derives
+        from the event's own timestamp and the attempt index — never
+        per-process state — so simulator and live runtime (and
+        ``predict_trace`` vs ``run_trace``) compute identical schedules,
+        while concurrent drains across a large fleet land at different
+        offsets instead of thundering-herding the engine."""
+        deadline = now + ev.drain_s
+        times: List[float] = []
+        delay = self.retry_base_s
+        t = now
+        for k in range(32):             # far beyond any real window
+            rng = np.random.default_rng(
+                [int(round(ev.t * 1e6)) % (2 ** 31), k, 73])
+            t += delay * (1.0 + 0.25 * float(rng.random()))
+            if t >= deadline - 1e-9:
+                break
+            times.append(t)
+            delay = min(delay * 2.0, self.retry_cap_s)
+        return times
+
 
 # ---------------------------------------------------------------------------
 # Checkpoint-interval policy (Young/Daly)
@@ -177,20 +213,170 @@ def optimal_checkpoint_interval(mtbf_s: float,
     return math.sqrt(2.0 * checkpoint_cost_s * mtbf_s)
 
 
-def churn_mtbf(events: Sequence[FleetEvent], horizon_s: float,
-               hosts: int = 0) -> float:
-    """MTBF estimate feeding ``optimal_checkpoint_interval``: mean time
-    between *disruptive* events (reclaim/fail) over the horizon, scaled
-    by the fraction of the fleet each one takes when ``hosts`` is given
-    (an event killing 2 of 32 hosts disrupts a given gang ~1/16th as
-    often as a full-fleet outage).  ``inf`` with no disruptions."""
-    weight = 0.0
+# ---------------------------------------------------------------------------
+# Hazard estimation (per-host / per-group failure rates)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class HazardEstimate:
+    """Per-host disruption-rate estimates over a schedule horizon — the
+    one estimator both Young/Daly (via ``fleet_mtbf``) and the
+    ``CostModel`` risk term's failure-history component consume, so a
+    host the cadence policy considers flaky is exactly the host
+    placement steers away from."""
+
+    rates: np.ndarray                   # disruptions/s per host
+    horizon_s: float
+    events_seen: int                    # disruptive events counted
+
+    def host_rate(self, host: int) -> float:
+        return float(self.rates[host]) if host < len(self.rates) else 0.0
+
+    def group_rates(self, blast_groups: Sequence[int]
+                    ) -> Dict[int, float]:
+        """Max per-host rate within each blast-radius group — the
+        correlated (one event kills the whole group) view of the same
+        estimates."""
+        out: Dict[int, float] = {}
+        for h, g in enumerate(blast_groups):
+            g = int(g)
+            r = float(self.rates[h]) if h < len(self.rates) else 0.0
+            if r > out.get(g, -1.0):
+                out[g] = r
+        return out
+
+    def fleet_mtbf(self) -> float:
+        """Blast-weighted fleet MTBF: the reciprocal of the mean
+        per-host rate — an event killing 2 of 32 hosts disrupts a given
+        gang ~1/16th as often as a full-fleet outage (the historical
+        ``churn_mtbf`` scalar, re-derived from the per-host rates)."""
+        if self.events_seen == 0 or not len(self.rates):
+            return float("inf")
+        mean = float(self.rates.mean())
+        return 1.0 / mean if mean > 0 else float("inf")
+
+
+def estimate_hazards(events: Sequence[FleetEvent], horizon_s: float,
+                     hosts: int) -> HazardEstimate:
+    """Per-host disruption rates from a churn schedule: each
+    reclaim/fail event counts one disruption against every host it
+    targets, over ``horizon_s`` seconds.  Hosts the schedule never
+    touches (including join indices past the initial fleet) estimate at
+    rate 0."""
+    counts = np.zeros(hosts)
+    seen = 0
     for e in events:
         if e.kind in ("reclaim", "fail"):
-            weight += (len(e.hosts) / hosts) if hosts else 1.0
-    if weight <= 0:
+            seen += 1
+            for h in e.hosts:
+                if 0 <= h < hosts:
+                    counts[h] += 1.0
+    horizon = max(float(horizon_s), 1e-9)
+    return HazardEstimate(rates=counts / horizon, horizon_s=horizon,
+                          events_seen=seen)
+
+
+def churn_mtbf(events: Sequence[FleetEvent], horizon_s: float,
+               hosts: int = 0) -> float:
+    """MTBF estimate feeding ``optimal_checkpoint_interval`` — a thin
+    wrapper over ``estimate_hazards``: mean time between *disruptive*
+    events (reclaim/fail) over the horizon, blast-weighted by the
+    fraction of the fleet each one takes when ``hosts`` is given.
+    ``hosts=0`` keeps the unweighted event spacing.  ``inf`` with no
+    disruptions."""
+    if hosts:
+        return estimate_hazards(events, horizon_s, hosts).fleet_mtbf()
+    count = sum(1 for e in events if e.kind in ("reclaim", "fail"))
+    if count == 0:
         return float("inf")
-    return horizon_s / weight
+    return horizon_s / count
+
+
+class HazardEstimator:
+    """Online per-host failure-rate estimation from *observed*
+    ``FleetEvent`` history — the live twin of ``estimate_hazards`` (one
+    counts a schedule ahead of time, this one accumulates events as the
+    controller applies them; both expose per-host rates).
+
+    ``rate_h(now) = (prior_events + count_h) / max(now, min_horizon_s)``
+    — a Laplace-smoothed event rate.  ``prior_events > 0`` gives every
+    host a small uniform hazard before any history exists, which
+    activates blast-radius correlation from t=0: with all rates equal,
+    the risk penalty reduces to the number of blast groups a gang
+    touches, so gangs pack within failure domains even before the first
+    observed event."""
+
+    def __init__(self, hosts: int, prior_events: float = 0.25,
+                 min_horizon_s: float = 1.0):
+        self.counts = np.zeros(hosts)
+        self.prior_events = float(prior_events)
+        self.min_horizon_s = float(min_horizon_s)
+
+    def _ensure(self, hosts: int) -> None:
+        if hosts > len(self.counts):
+            self.counts = np.concatenate(
+                [self.counts, np.zeros(hosts - len(self.counts))])
+
+    def observe(self, ev: FleetEvent) -> None:
+        """Record one applied event (joins are not disruptions)."""
+        if ev.kind not in ("reclaim", "fail"):
+            return
+        if ev.hosts:
+            self._ensure(max(ev.hosts) + 1)
+            for h in ev.hosts:
+                self.counts[h] += 1.0
+
+    def rates(self, hosts: int, now: float) -> np.ndarray:
+        """Per-host rate estimates sized to the current fleet."""
+        self._ensure(hosts)
+        horizon = max(float(now), self.min_horizon_s)
+        return (self.counts[:hosts] + self.prior_events) / horizon
+
+
+def lease_expiries(events: Sequence[FleetEvent],
+                   hosts: int) -> np.ndarray:
+    """Per-host absolute lease-expiry times from a schedule's *reclaim*
+    events — the contractual part of churn: a reclaim at ``t`` is the
+    lease term the provider sold (rFaaS leases carry their duration),
+    so placement may legitimately know it ahead.  Hard ``fail`` events
+    are surprises and deliberately NOT included — they reach the risk
+    term only through observed hazard history.  ``inf`` = no scheduled
+    reclaim (reserved, or a joiner)."""
+    out = np.full(hosts, np.inf)
+    for e in events:
+        if e.kind == "reclaim":
+            for h in e.hosts:
+                if 0 <= h < hosts:
+                    out[h] = min(out[h], e.t)
+    return out
+
+
+def blast_groups(events: Sequence[FleetEvent], hosts: int) -> np.ndarray:
+    """Blast-radius group ids from the fleet topology a schedule
+    encodes: hosts listed together in one multi-host disruptive event
+    share a failure domain (the rack/switch/power the
+    correlated-rack generator models — topology an operator knows
+    statically), so they union into one group; everything else keeps a
+    singleton group.  Group ids are the union-find roots, stable under
+    host-index growth."""
+    parent = list(range(hosts))
+
+    def find(x: int) -> int:
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for e in events:
+        if e.kind in ("reclaim", "fail") and len(e.hosts) > 1:
+            anchor = None
+            for h in e.hosts:
+                if not 0 <= h < hosts:
+                    continue
+                if anchor is None:
+                    anchor = find(h)
+                else:
+                    parent[find(h)] = anchor
+    return np.array([find(h) for h in range(hosts)], dtype=np.int64)
 
 
 # ---------------------------------------------------------------------------

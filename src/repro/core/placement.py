@@ -78,6 +78,20 @@ moves off doomed hosts (the graceful-drain path, applied through the
 same ``apply_migration`` machinery as barrier migration).  With no
 churn (``draining`` never set, host count constant) every decision is
 bit-identical to the pre-churn engine — pinned by tests.
+
+**Risk-aware placement** (DESIGN.md §13): the engine carries per-host
+lease-expiry times, online hazard estimates (fed from observed
+``FleetEvent`` history via ``core.fleet.HazardEstimator``), and
+blast-radius group ids.  With ``CostModel.risk_tau_s`` opted in, views
+grow a ``RiskContext`` and every policy steers gangs away from
+short-lease / historically-flaky hosts in proportion to the expected
+lost work of landing there (blast-correlated hazard × half a
+checkpoint interval); per-kind ``risk_weights`` let cheap restartable
+work soak up risky capacity at weight 0.  Default-off keeps every
+decision bit-identical to the risk-blind engine — pinned by tests.
+``shrink_plan`` is the recovery half: the largest shrunken world of a
+stranded gang that still fits on surviving capacity, tried before any
+checkpoint rollback.
 """
 from __future__ import annotations
 
@@ -213,7 +227,11 @@ class CostModel:
                  compress_frac: float = 0.05,
                  serve_token_s: float = 0.05,
                  serve_slo_s: Optional[float] = None,
-                 serve_kinds: Sequence[str] = ("omp", "serve")):
+                 serve_kinds: Sequence[str] = ("omp", "serve"),
+                 risk_tau_s: Optional[float] = None,
+                 risk_weights: Optional[Mapping[str, float]] = None,
+                 default_risk_weight: float = 1.0,
+                 risk_lease_floor_s: float = 1.0):
         self.betas = dict(self.DEFAULT_BETAS if betas is None else betas)
         self.default_beta = default_beta
         # serve SLO term: ``serve_token_s`` is the base per-token decode
@@ -261,6 +279,22 @@ class CostModel:
         self.ckpt_delta_fraction = ckpt_delta_fraction
         self.ckpt_rebase_every = max(1, int(ckpt_rebase_every))
         self.ckpt_observed: List[Tuple[int, int]] = []
+        # risk term (DESIGN.md §13): with ``risk_tau_s`` set (the gang
+        # checkpoint cadence, opt-in like collective_bytes /
+        # serve_slo_s), ``score``-consuming policies multiply candidates
+        # by the expected lost work of placing there — per-host hazard
+        # (lease expiry + observed failure rate, correlated across a
+        # blast-radius group) times half a checkpoint interval of
+        # rollback.  ``risk_weights`` scales the term per job kind
+        # (weight 0 = restartable work that happily soaks up risky
+        # capacity).  Like the serve SLO term it deliberately does NOT
+        # enter ``slowdown`` — risk steers *choices*, not physics.
+        # None (the default) keeps every decision bit-identical.
+        self.risk_tau_s = risk_tau_s
+        self.risk_weights = (None if risk_weights is None
+                             else dict(risk_weights))
+        self.default_risk_weight = float(default_risk_weight)
+        self.risk_lease_floor_s = float(risk_lease_floor_s)
 
     # ---- delta-checkpoint costs (core.diffsync chains) --------------------
     def checkpoint_cost(self, index: int = 0) -> float:
@@ -274,15 +308,20 @@ class CostModel:
             return self.checkpoint_cost_s
         return self.checkpoint_cost_s * self.ckpt_delta_fraction
 
-    def effective_checkpoint_cost_s(self) -> float:
+    def effective_checkpoint_cost_s(
+            self, fraction: Optional[float] = None) -> float:
         """Amortised per-checkpoint cost over one rebase period — the
         ``delta`` that ``fleet.optimal_checkpoint_interval`` (Young/Daly)
-        consumes, so cheaper delta checkpoints buy a tighter cadence."""
-        if self.ckpt_delta_fraction is None:
+        consumes, so cheaper delta checkpoints buy a tighter cadence.
+        ``fraction`` overrides the configured ``ckpt_delta_fraction``
+        with a *measured* one (``observed_delta_fraction``) — the live
+        runner's adaptive cadence re-derives its Young/Daly interval
+        from it after each rebase window."""
+        frac = self.ckpt_delta_fraction if fraction is None else fraction
+        if frac is None:
             return self.checkpoint_cost_s
         r = self.ckpt_rebase_every
-        return self.checkpoint_cost_s * (
-            1.0 + (r - 1) * self.ckpt_delta_fraction) / r
+        return self.checkpoint_cost_s * (1.0 + (r - 1) * frac) / r
 
     def observe_checkpoint(self, delta_bytes: int, full_bytes: int) -> None:
         """Record one live checkpoint's measured (shipped, full) bytes.
@@ -474,6 +513,30 @@ class CostModel:
         """Fig 14: consolidation pays off except near the finish line."""
         return progress <= self.migrate_progress_cap
 
+    # ---- risk term (leases / failure history; DESIGN.md §13) --------------
+    @property
+    def risk_aware(self) -> bool:
+        return self.risk_tau_s is not None
+
+    def risk_weight(self, kind: Optional[str] = None) -> float:
+        """Per-job-kind sensitivity to host risk.  High-priority or
+        expensive-to-checkpoint kinds keep the default weight; cheap
+        restartable kinds can be configured at 0 so they soak up risky
+        capacity instead of competing for safe hosts."""
+        if not self.risk_aware:
+            return 0.0
+        if self.risk_weights is None:
+            return self.default_risk_weight
+        return float(self.risk_weights.get(kind,
+                                           self.default_risk_weight))
+
+    def risk_loss_s(self) -> float:
+        """Expected seconds lost per gang-wide disruption: on average
+        half a checkpoint interval of progress rolls back, plus the
+        requeue/restart overhead — the lost-work magnitude the hazard
+        rate multiplies in the risk penalty."""
+        return (self.risk_tau_s or 0.0) / 2.0 + self.preempt_cost_s
+
 
 @dataclasses.dataclass
 class Allocation:
@@ -496,6 +559,112 @@ class Allocation:
         return placement_cross_host_fraction(self.placement)
 
 
+class RiskContext:
+    """Per-host risk snapshot handed to policies inside a ``ClusterView``
+    (attached by the engine only when its cost model opted into the risk
+    term, so risk-blind decisions never see one — bit-identity).
+
+    The combined per-host hazard rate is
+
+        rate_h = hazard_h + 1 / max(lease_until_h - now, lease_floor)
+
+    — the online failure-rate estimate from observed ``FleetEvent``
+    history plus the certain disruption of an approaching lease expiry
+    (an infinite lease contributes 0).  A gang placement's disruption
+    rate correlates hazards across blast-radius groups: any host of a
+    group failing kills the whole gang, and failures *within* a group
+    are one event (shared rack/switch/power), so
+
+        Lambda(P) = sum over groups g touched by P of max rate_h, h in g∩P
+
+    — spanning extra groups adds independent failure sources; packing
+    deeper into one already-touched group costs nothing extra.  The
+    score penalty is ``1 + w_kind · Lambda(P) · risk_loss_s`` (expected
+    lost-work fraction), and greedy policies order hosts by the
+    risk-discounted effective throughput ``free·s / (1 + w·rate·loss)``.
+    """
+
+    __slots__ = ("model", "lease_until_s", "hazards", "blast_group",
+                 "now", "_rates")
+
+    def __init__(self, model: CostModel, lease_until_s: np.ndarray,
+                 hazards: np.ndarray, blast_group: np.ndarray,
+                 now: float, rates: Optional[np.ndarray] = None):
+        self.model = model
+        self.lease_until_s = lease_until_s
+        self.hazards = hazards
+        self.blast_group = blast_group
+        self.now = now
+        self._rates = rates
+
+    def rates(self) -> np.ndarray:
+        """Combined per-host disruption rate (cached per context)."""
+        if self._rates is None:
+            left = self.lease_until_s - self.now
+            lease_rate = np.where(
+                np.isfinite(self.lease_until_s),
+                1.0 / np.maximum(left, self.model.risk_lease_floor_s),
+                0.0)
+            self._rates = self.hazards + lease_rate
+        return self._rates
+
+    def sliced(self, lo: int, hi: int) -> "RiskContext":
+        """Shard-slice view of the same snapshot (local host indices)."""
+        return RiskContext(self.model, self.lease_until_s[lo:hi],
+                           self.hazards[lo:hi], self.blast_group[lo:hi],
+                           self.now, rates=self.rates()[lo:hi])
+
+    def discounts(self, kind: Optional[str] = None) -> Optional[np.ndarray]:
+        """Per-host multiplicative discount ``1/(1 + w·rate·loss)`` for
+        greedy host ordering; None when the kind is risk-indifferent
+        (weight 0) so its decisions keep the exact risk-blind path."""
+        w = self.model.risk_weight(kind)
+        if w <= 0.0:
+            return None
+        return 1.0 / (1.0 + w * self.rates() * self.model.risk_loss_s())
+
+    def order_speeds(self, kind: Optional[str],
+                     speeds: Optional[np.ndarray]) -> Optional[np.ndarray]:
+        """Risk-discounted speed factors for ``_host_order`` — ordering
+        only, never fed to any charged quantity (choices, not physics)."""
+        disc = self.discounts(kind)
+        if disc is None:
+            return None
+        return disc if speeds is None else speeds * disc
+
+    def gang_rate(self, placement: Sequence[Tuple[int, int]]) -> float:
+        """Blast-correlated disruption rate Lambda(P) of a placement."""
+        rates = self.rates()
+        worst: Dict[int, float] = {}
+        for h, _ in placement:
+            g = int(self.blast_group[h])
+            r = float(rates[h])
+            if r > worst.get(g, -1.0):
+                worst[g] = r
+        return sum(worst.values())
+
+    def penalty(self, placement: Sequence[Tuple[int, int]],
+                kind: Optional[str] = None) -> float:
+        """Multiplicative score penalty ``1 + w·Lambda(P)·loss_s``."""
+        w = self.model.risk_weight(kind)
+        if w <= 0.0:
+            return 1.0
+        return 1.0 + w * self.gang_rate(placement) \
+            * self.model.risk_loss_s()
+
+    def penalty_batch(self, placements: Sequence[Sequence[Tuple[int,
+                                                                int]]],
+                      kind: Optional[str] = None) -> np.ndarray:
+        """``penalty`` over a candidate batch (candidate sets are tiny,
+        so the per-candidate group reduction stays a Python loop)."""
+        w = self.model.risk_weight(kind)
+        if w <= 0.0:
+            return np.ones(len(placements))
+        loss = self.model.risk_loss_s()
+        return np.array([1.0 + w * self.gang_rate(p) * loss
+                         for p in placements])
+
+
 class ClusterView:
     """Read-only free-chip snapshot handed to policies (keeps them pure).
 
@@ -511,16 +680,20 @@ class ClusterView:
     they are computed lazily, once, on first access."""
 
     __slots__ = ("free", "chips_per_host", "capacities", "speeds",
-                 "_hetero", "_idle", "_idle_eff")
+                 "_hetero", "_idle", "_idle_eff", "risk")
 
     def __init__(self, free: np.ndarray, chips_per_host: int,
                  capacities: Optional[np.ndarray] = None,
                  speeds: Optional[np.ndarray] = None,
                  hetero: Optional[bool] = None,
                  idle: Optional[int] = None,
-                 idle_eff: Optional[float] = None):
+                 idle_eff: Optional[float] = None,
+                 risk: Optional[RiskContext] = None):
         self.free = free
         self.chips_per_host = chips_per_host
+        # per-host risk metadata (None unless the engine's cost model
+        # opted into the risk term — the risk-blind path never sees it)
+        self.risk = risk
         self.capacities = (np.full(len(free), chips_per_host,
                                    dtype=np.int64)
                            if capacities is None
@@ -658,6 +831,14 @@ class BinpackPolicy(PlacementPolicy):
               kind: Optional[str] = None) -> Optional[Placement]:
         if n > view.idle_chips():
             return None
+        if view.risk is not None:
+            # risk-discounted greedy order: short-lease / flaky hosts
+            # sort as if slower, so the gang packs onto safe capacity
+            # first (risk-indifferent kinds get None back and keep the
+            # exact risk-blind order)
+            rw = view.risk.order_speeds(kind, view.speeds)
+            if rw is not None:
+                return _greedy_most_free(view.free, n, rw)
         speeds = view.speeds if view.heterogeneous else None
         return _greedy_most_free(view.free, n, speeds)
 
@@ -731,6 +912,10 @@ class SpreadPolicy(PlacementPolicy):
               kind: Optional[str] = None) -> Optional[Placement]:
         if n > view.idle_chips():
             return None
+        if view.risk is not None:
+            rw = view.risk.order_speeds(kind, view.speeds)
+            if rw is not None:
+                return _spread_fill(view.free, n, rw)
         speeds = view.speeds if view.heterogeneous else None
         return _spread_fill(view.free, n, speeds)
 
@@ -756,6 +941,10 @@ class FixedSlicePolicy(PlacementPolicy):
         n_slices = -(-n // slice_size)
         free = view.free
         speeds = view.speeds if view.heterogeneous else None
+        if view.risk is not None:
+            rw = view.risk.order_speeds(kind, view.speeds)
+            if rw is not None:
+                speeds = rw          # host *ordering* only
         if not _VECTORIZED:
             return self._place_loop(free, n_slices, speeds)
         # vectorized: whole slices per host in greedy order, cumulative
@@ -837,7 +1026,9 @@ class LocalityScoredPolicy(PlacementPolicy):
     def _stranded(self, view: ClusterView, placement: Placement) -> int:
         return sum(int(view.free[h]) - c for h, c in placement)
 
-    def _candidates(self, view: ClusterView, n: int) -> List[Placement]:
+    def _candidates(self, view: ClusterView, n: int,
+                    kind: Optional[str] = None,
+                    risk: Optional[RiskContext] = None) -> List[Placement]:
         free = view.free
         candidates: List[Placement] = []
         fits = np.nonzero(free >= n)[0]
@@ -872,6 +1063,23 @@ class LocalityScoredPolicy(PlacementPolicy):
             bal = self._balanced_split(free, n)
             if bal is not None and bal not in candidates:
                 candidates.append(bal)
+        if risk is not None:
+            # risk-avoiding candidates: the safest single host that
+            # fits, and the risk-discounted greedy fill — only the
+            # penalised score can rank them, so they are gated to the
+            # risk-aware mode and the default set stays
+            # decision-identical
+            if fits.size:
+                rates = risk.rates()
+                hs = int(fits[np.argmin(rates[fits])])
+                cand = [(hs, n)]
+                if cand not in candidates:
+                    candidates.append(cand)
+            rw = risk.order_speeds(kind, view.speeds)
+            if rw is not None:
+                safe = _greedy_most_free(free, n, rw)
+                if safe is not None and safe not in candidates:
+                    candidates.append(safe)
         return candidates
 
     @staticmethod
@@ -898,18 +1106,25 @@ class LocalityScoredPolicy(PlacementPolicy):
         if n > view.idle_chips():
             return None
         hetero = view.heterogeneous
-        if _VECTORIZED and not hetero:
+        # risk term active for this kind?  (weight 0 keeps the exact
+        # risk-blind decision path, including the short-circuit below)
+        risk = view.risk
+        if risk is not None and self.cost_model.risk_weight(kind) <= 0.0:
+            risk = None
+        if _VECTORIZED and not hetero and risk is None:
             # best-fit short-circuit: when some host fits the whole
             # gang, every candidate is single-host (chi = 0 for all, so
             # the score ties) and best-fit strands the fewest chips —
             # greedy's most-free host can never win the (score,
             # stranded) key, and exact-fill's first probe *is* the
             # best-fit host.  Decision-identical to scoring the full
-            # candidate set, without the fills.
+            # candidate set, without the fills.  With the risk term
+            # active single-host candidates no longer tie (hazards
+            # differ), so risk-aware decisions must score the full set.
             fits = np.nonzero(view.free >= n)[0]
             if fits.size:
                 return [(int(fits[np.argmin(view.free[fits])]), n)]
-        candidates = self._candidates(view, n)
+        candidates = self._candidates(view, n, kind=kind, risk=risk)
         if not candidates:
             return None
         if _VECTORIZED:
@@ -929,6 +1144,10 @@ class LocalityScoredPolicy(PlacementPolicy):
                 # the exact pre-CostModel homogeneous key 1 + beta*chi
                 scores = 1.0 + self.cost_model.beta(kind) \
                     * _chi_batch(candidates)
+            if risk is not None:
+                # expected-lost-work penalty (DESIGN.md §13): steers
+                # the argmin, never the charged rate
+                scores = scores * risk.penalty_batch(candidates, kind)
             k = len(candidates)
             sizes = np.array([len(p) for p in candidates])
             seg = np.repeat(np.arange(k), sizes)
@@ -945,13 +1164,15 @@ class LocalityScoredPolicy(PlacementPolicy):
             model = self.cost_model
             speeds = view.speeds if hetero else None
             return min(candidates, key=lambda p: (
-                model.score(p, kind, speeds),
+                model.score(p, kind, speeds)
+                * (risk.penalty(p, kind) if risk is not None else 1.0),
                 self._stranded(view, p)))
         # homogeneous: Σ n_h·s_h is constant, so T reduces to the
         # slowdown — the exact pre-CostModel scoring key
         beta = self.cost_model.beta(kind)
         return min(candidates, key=lambda p: (
-            1.0 + beta * placement_cross_host_fraction(p),
+            (1.0 + beta * placement_cross_host_fraction(p))
+            * (risk.penalty(p, kind) if risk is not None else 1.0),
             self._stranded(view, p)))
 
     @staticmethod
@@ -1197,6 +1418,17 @@ class PlacementEngine:
         # keeps every churn-free hot path on its exact pre-churn code
         self.draining = np.zeros(hosts, dtype=bool)
         self._any_draining = False
+        # per-host risk metadata (DESIGN.md §13): absolute lease-expiry
+        # times (inf = reserved / no known end), online hazard estimates
+        # (events/s, fed from observed FleetEvent history), and
+        # blast-radius group ids (default: every host its own group).
+        # Benign defaults; inert until the cost model opts into the risk
+        # term, so risk-blind decisions are bit-identical.
+        self.lease_until_s = np.full(hosts, np.inf)
+        self.hazards = np.zeros(hosts)
+        self.blast_group = np.arange(hosts, dtype=np.int64)
+        self.risk_now = 0.0
+        self._risk_cache: Optional[RiskContext] = None
 
     @classmethod
     def for_chips(cls, n_chips: int, chips_per_host: int,
@@ -1243,26 +1475,78 @@ class PlacementEngine:
         return ClusterView(self.free, self.chips_per_host,
                            self.capacities, self.speeds,
                            hetero=self._hetero, idle=self._idle_chips,
-                           idle_eff=self._idle_eff)
+                           idle_eff=self._idle_eff,
+                           risk=self._risk_context())
 
     def view_with(self, free: np.ndarray) -> ClusterView:
         """A policy view over an alternative free map (scratch planning)
         that still carries this engine's capacities and speeds."""
         return ClusterView(free, self.chips_per_host,
                            self.capacities, self.speeds,
-                           hetero=self._hetero)
+                           hetero=self._hetero,
+                           risk=self._risk_context())
+
+    # ---- risk metadata (leases / failure history; DESIGN.md §13) ----------
+    def _risk_context(self) -> Optional[RiskContext]:
+        """The RiskContext views carry — None unless the cost model
+        opted into the risk term, cached until the metadata or the
+        clock moves (rates are free-map-independent)."""
+        if not self.cost_model.risk_aware:
+            return None
+        ctx = self._risk_cache
+        if ctx is None or ctx.now != self.risk_now:
+            ctx = RiskContext(self.cost_model, self.lease_until_s,
+                              self.hazards, self.blast_group,
+                              self.risk_now)
+            self._risk_cache = ctx
+        return ctx
+
+    def set_host_risk(self,
+                      lease_until_s: Optional[Sequence[float]] = None,
+                      hazards: Optional[Sequence[float]] = None,
+                      blast_groups: Optional[Sequence[int]] = None
+                      ) -> None:
+        """Bulk-install risk metadata (lease table from the provider,
+        hazard estimates from ``fleet.HazardEstimator``, blast groups
+        from rack topology).  Lengths must match the current fleet."""
+        if lease_until_s is not None:
+            arr = np.asarray(lease_until_s, dtype=np.float64)
+            assert len(arr) == self.hosts
+            self.lease_until_s = arr
+        if hazards is not None:
+            arr = np.asarray(hazards, dtype=np.float64)
+            assert len(arr) == self.hosts
+            self.hazards = arr
+        if blast_groups is not None:
+            arr = np.asarray(blast_groups, dtype=np.int64)
+            assert len(arr) == self.hosts
+            self.blast_group = arr
+        self._risk_cache = None
+
+    def risk_tick(self, now: float) -> None:
+        """Advance the clock lease-remaining is measured against (the
+        scheduling loop calls this before placing under risk)."""
+        self.risk_now = float(now)
+
+    def _copy_risk_to(self, eng: "PlacementEngine") -> None:
+        eng.lease_until_s = self.lease_until_s.copy()
+        eng.hazards = self.hazards.copy()
+        eng.blast_group = self.blast_group.copy()
+        eng.risk_now = self.risk_now
 
     def clone_empty(self) -> "PlacementEngine":
         """A fresh, idle engine of the same shape (hosts, capacities,
         speeds, policy, cost model) — what ``Fabric.predict_trace``
         simulates against so prediction and live execution share one
         accounting configuration."""
-        return type(self)(self.hosts, self.chips_per_host,
-                          policy=self.default_policy,
-                          capacities=list(self.capacities),
-                          speeds=None if self.speeds is None
-                          else list(self.speeds),
-                          cost_model=self.cost_model)
+        eng = type(self)(self.hosts, self.chips_per_host,
+                         policy=self.default_policy,
+                         capacities=list(self.capacities),
+                         speeds=None if self.speeds is None
+                         else list(self.speeds),
+                         cost_model=self.cost_model)
+        self._copy_risk_to(eng)        # prediction sees the same leases
+        return eng
 
     # ---- free-map mutation (the one place chips move) ----------------------
     def _take(self, placement: Sequence[Tuple[int, int]]) -> None:
@@ -1607,6 +1891,17 @@ class PlacementEngine:
         self.free = np.concatenate([self.free, caps])
         self.draining = np.concatenate(
             [self.draining, np.zeros(k, dtype=bool)])
+        # risk metadata grows with benign defaults: fresh leases with
+        # no known end, no failure history, each joiner its own blast
+        # group (callers refine via set_host_risk)
+        self.lease_until_s = np.concatenate(
+            [self.lease_until_s, np.full(k, np.inf)])
+        self.hazards = np.concatenate([self.hazards, np.zeros(k)])
+        nb = (int(self.blast_group.max()) + 1 if len(self.blast_group)
+              else 0)
+        self.blast_group = np.concatenate(
+            [self.blast_group, np.arange(nb, nb + k, dtype=np.int64)])
+        self._risk_cache = None
         self.jobs_on_host.extend(set() for _ in range(k))
         self.hosts += k
         self._idle_chips += int(caps.sum())
@@ -1725,6 +2020,35 @@ class PlacementEngine:
             plans.append((alloc.job_id, cand))
         return plans, stranded
 
+    def shrink_plan(self, worlds: Sequence[int],
+                    credit: Sequence[Tuple[int, int]] = (),
+                    avoid: Sequence[int] = (),
+                    policy: Union[str, PlacementPolicy, None] = None,
+                    kind: Optional[str] = None
+                    ) -> Optional[Placement]:
+        """Shrink-before-rollback (DESIGN.md §13): the largest world in
+        ``worlds`` (descending; see ``elastic.shrink_worlds``) placeable
+        on surviving capacity — draining hosts and ``avoid`` are
+        excluded, and the stranded gang's own chips on safe hosts
+        (``credit``) count as landing room.  Returns the placement for
+        the first world that fits, or None when checkpoint rollback is
+        the only option left.  Like ``evacuation_plan`` this is a
+        global (cross-shard) recovery decision, so the sharded engine
+        inherits it unchanged."""
+        pol = self._resolve(policy)
+        free = self.free.copy()
+        if self._any_draining:
+            free[self.draining] = 0
+        for h in avoid:
+            free[int(h)] = 0
+        for h, c in credit:
+            free[h] += c
+        for w in worlds:
+            p = pol.place(self.view_with(free), w, kind=kind)
+            if p is not None:
+                return p
+        return None
+
 
 # ---------------------------------------------------------------------------
 # Sharded engine (decentralised scheduling, the Fig 11 fix)
@@ -1754,9 +2078,12 @@ class _ShardScope:
 
     def view_with(self, free: np.ndarray) -> ClusterView:
         e, lo, hi = self._engine, self._lo, self._hi
+        ctx = e._risk_context()
         return ClusterView(free, e.chips_per_host, e.capacities[lo:hi],
                            None if e.speeds is None else e.speeds[lo:hi],
-                           hetero=e.shard_hetero[self._shard])
+                           hetero=e.shard_hetero[self._shard],
+                           risk=None if ctx is None
+                           else ctx.sliced(lo, hi))
 
 
 class ShardedPlacementEngine(PlacementEngine):
@@ -1902,13 +2229,15 @@ class ShardedPlacementEngine(PlacementEngine):
         return self.hosts_per_shard
 
     def clone_empty(self) -> "ShardedPlacementEngine":
-        return ShardedPlacementEngine(
+        eng = ShardedPlacementEngine(
             self.hosts, self.chips_per_host,
             hosts_per_shard=self._shard_spec,
             steal_budget=self.steal_budget,
             policy=self.default_policy, capacities=list(self.capacities),
             speeds=None if self.speeds is None else list(self.speeds),
             cost_model=self.cost_model)
+        self._copy_risk_to(eng)
+        return eng
 
     # ---- summary index ------------------------------------------------------
     def _take(self, placement: Sequence[Tuple[int, int]]) -> None:
@@ -1937,6 +2266,26 @@ class ShardedPlacementEngine(PlacementEngine):
                 self._shard_eff[s] = float(self._shard_idle[s])
             self._shard_dirty[s] = True
 
+    def _shard_risk_eff(self, kind: Optional[str]
+                        ) -> Optional[np.ndarray]:
+        """Summary index under risk: per-shard idle throughput with
+        each host's contribution scaled by its risk discount — the
+        lease/hazard metadata's entry into shard ranking, so decisions
+        forward toward shards of safe capacity first.  One vectorized
+        O(hosts) bincount, paid only in risk-aware mode (None keeps
+        the exact incremental ``_shard_eff`` ordering)."""
+        ctx = self._risk_context()
+        if ctx is None:
+            return None
+        disc = ctx.discounts(kind)
+        if disc is None:
+            return None
+        w = self.free * disc
+        if self.speeds is not None:
+            w = w * self.speeds
+        return np.bincount(self._shard_of, weights=w,
+                           minlength=self.n_shards)
+
     def _shard_max_free(self) -> np.ndarray:
         """Max contiguous free block per shard (lazily refreshed for
         shards whose free map moved since the last read)."""
@@ -1953,13 +2302,16 @@ class ShardedPlacementEngine(PlacementEngine):
 
     def _shard_view(self, shard: int) -> ClusterView:
         lo, hi = self.shard_bounds[shard]
+        ctx = self._risk_context()
         return ClusterView(self.free[lo:hi], self.chips_per_host,
                            self.capacities[lo:hi],
                            None if self.speeds is None
                            else self.speeds[lo:hi],
                            hetero=self.shard_hetero[shard],
                            idle=int(self._shard_idle[shard]),
-                           idle_eff=float(self._shard_eff[shard]))
+                           idle_eff=float(self._shard_eff[shard]),
+                           risk=None if ctx is None
+                           else ctx.sliced(lo, hi))
 
     # ---- placement ----------------------------------------------------------
     def reserve(self, n: int,
@@ -1979,8 +2331,11 @@ class ShardedPlacementEngine(PlacementEngine):
         fits_host = self._shard_max_free() >= n
         candidates = np.nonzero(self._shard_idle >= n)[0]
         if candidates.size:
+            eff = self._shard_risk_eff(kind)
+            if eff is None:
+                eff = self._shard_eff
             order = candidates[np.lexsort(
-                (-self._shard_eff[candidates],
+                (-eff[candidates],
                  ~fits_host[candidates]))]
             for s in order:
                 # forwarding beyond the home shard spends steal budget
@@ -2011,7 +2366,10 @@ class ShardedPlacementEngine(PlacementEngine):
         shards contribute greedily in idle-throughput order, each
         placing its part through the policy on its own slice."""
         order = np.nonzero(self._shard_idle > 0)[0]
-        order = order[np.lexsort((-self._shard_eff[order],))]
+        eff = self._shard_risk_eff(kind)
+        if eff is None:
+            eff = self._shard_eff
+        order = order[np.lexsort((-eff[order],))]
         parts: Placement = []
         remaining = n
         consults = 0

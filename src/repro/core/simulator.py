@@ -64,6 +64,22 @@ Young/Daly cadence-vs-lost-work tradeoff of ``bench_churn``).  With no
 churn schedule and no checkpoint interval the event loop is
 bit-identical to the pre-churn simulator (pinned).
 
+**Risk-aware churn** (DESIGN.md §13): when the engine's ``CostModel``
+carries ``risk_tau_s`` the event loop feeds the placement layer's risk
+metadata — per-host lease expiries and blast groups read off the churn
+schedule at trace start (the contractual part a provider publishes),
+plus an online ``fleet.HazardEstimator`` updated at every applied
+fleet event — so every policy decision sees the same leases/hazards
+the live runtime would.  ``shrink_recovery=True`` adds
+shrink-before-rollback: a gang stranded by a drain reshards onto
+surviving capacity at a smaller power-of-two world
+(``elastic.shrink_worlds``) while its chips are still alive, retried
+on the drain's backoff schedule (``FleetController.retry_times``)
+through the deadline; a gang stranded by a hard fail shrinks onto the
+survivors when it kept at least one live replica chip.  Only when no
+shrink world fits does the checkpoint-rollback path run.  Both knobs
+default off and the default paths stay bit-identical (pinned).
+
 The event loop exposes overridable hooks (``_on_start`` / ``_on_advance``
 / ``_on_preempt`` / ``_on_migrate`` / ``_on_finish`` and the churn hooks
 ``_on_join`` / ``_on_drain`` / ``_on_hosts_down`` / ``_on_checkpoint``
@@ -84,7 +100,9 @@ import numpy as np
 
 from repro.core import placement as placement_mod
 from repro.core.control import Action
-from repro.core.fleet import FleetController, FleetEvent
+from repro.core.fleet import (FleetController, FleetEvent,
+                              HazardEstimator, blast_groups,
+                              lease_expiries)
 from repro.core.placement import (DEFAULT_SHARD_HOSTS, Allocation,
                                   CostModel, FixedSlicePolicy,
                                   PlacementEngine, PlacementPolicy,
@@ -143,6 +161,11 @@ class RunningJob:
     # delta charging, reset by requeue so live GangHandle chains (which
     # rebase on fail/resume) and the simulator stay in lockstep
     ckpt_count: int = 0
+    # shrink-before-rollback: the gang's current DP world when it has
+    # been resharded below the submitted parallelism (None = full
+    # width); a later rollback requeues the *original* Job, so shrink
+    # never sticks past a recovery
+    world: Optional[int] = None
 
     def rate(self) -> float:
         """Fraction of work per second under the current placement —
@@ -161,7 +184,8 @@ class RunningJob:
         overhead = self.model.slowdown(self.alloc.placement, j.kind)
         runtime = WASM_OVERHEAD_OMP if (
             j.kind == "omp" and self.alloc.slice_size == 0) else 1.0
-        if j.parallelism > self.alloc.n:     # overcommitted container
+        world = self.world if self.world is not None else j.parallelism
+        if world > self.alloc.n:             # overcommitted container
             runtime *= OVERCOMMIT_PENALTY
         eff = self.model.effective_parallelism(
             self.alloc.placement, self.speeds,
@@ -192,6 +216,11 @@ class TraceResult:
     recoveries: int = 0
     lost_work_s: float = 0.0
     evacuations: int = 0
+    # shrink-before-rollback: gangs saved by resharding onto surviving
+    # capacity instead of rolling back to checkpoint, and shrunk gangs
+    # restored to their submitted width once capacity returned
+    shrinks: int = 0
+    regrows: int = 0
 
     def makespans(self, jobs: Sequence[Job]) -> Dict[str, float]:
         """Per-job makespan (finish - arrival) for the jobs that finished."""
@@ -382,7 +411,8 @@ class Simulator:
                  sched: str = "central",
                  shard_hosts: Union[int, str, None] = None,
                  steal_budget: int = 0,
-                 checkpoint_interval: Optional[float] = None):
+                 checkpoint_interval: Optional[float] = None,
+                 shrink_recovery: bool = False):
         """mode: 'granular' (Faabric) or 'slices' (fixed baseline).
 
         ``policy`` selects the granular placement policy (binpack /
@@ -409,6 +439,12 @@ class Simulator:
         fleet-churn hard failure rolls a gang back to; None keeps the
         pre-churn behaviour (failures roll back to the last preemption
         checkpoint or job start).
+        ``shrink_recovery`` (granular mode) turns on
+        shrink-before-rollback: gangs stranded by a drain or hard fail
+        first try to reshard onto surviving capacity at a
+        ``elastic.shrink_worlds`` world size and only roll back to
+        checkpoint when no shrink fits (see the module docstring);
+        False keeps the rollback-only recovery path bit-identical.
         ``engine`` adopts an externally-owned (fresh) ``PlacementEngine``
         instead of building one — used by ``core.fabric`` so live
         execution and prediction share one accounting code path; the
@@ -456,6 +492,8 @@ class Simulator:
         self.barrier_interval = barrier_interval
         self.backfill = backfill
         self.checkpoint_interval = checkpoint_interval
+        # slice allocations never migrate, so they never shrink either
+        self.shrink_recovery = shrink_recovery and mode == "granular"
         # per-decision scheduler latency: the host count one decision
         # scans — the whole fleet for a centralised engine, one shard
         # for a sharded one (+ forwarding hops charged per decision).
@@ -495,6 +533,15 @@ class Simulator:
     def _on_fail(self, rj: RunningJob, hosts: Sequence[int]) -> None:
         pass
 
+    def _on_shrink(self, rj: RunningJob,
+                   survivors: Sequence[Tuple[int, int]]) -> None:
+        """A shrink-before-rollback move (or its inverse, a regrow back
+        to the submitted width) was applied: ``rj.alloc`` already
+        carries the new placement and ``survivors`` the chips that
+        still hold a live replica to reshard from (the gang's safe
+        chips mid-drain, its surviving chips after a hard fail, or its
+        whole shrunken placement on a regrow)."""
+
     # ---- placement --------------------------------------------------------
     def _try_place(self, job: Job) -> Optional[Allocation]:
         if self.mode != "granular" and job.kind == "omp":
@@ -532,14 +579,14 @@ class Simulator:
         chis: List[float] = []
         actions: List[Action] = []
         migrations = preemptions = 0
-        recoveries = evacuations = 0
+        recoveries = evacuations = shrinks = regrows = 0
         lost_work = 0.0
         # progress of checkpointed (preempted) jobs awaiting resume
         suspended: Dict[str, float] = {}
         first_start: Dict[str, float] = {}
         finish_order: List[str] = []
         finish_times: Dict[str, float] = {}
-        ARRIVE, FINISH, FLEET, DEADLINE, CKPT = 0, 1, 2, 3, 4
+        ARRIVE, FINISH, FLEET, DEADLINE, CKPT, RETRY = 0, 1, 2, 3, 4, 5
         for j in arrivals:
             token += 1
             heapq.heappush(heap, (j.arrival, token, ARRIVE, j.job_id))
@@ -552,6 +599,22 @@ class Simulator:
         for i, ev in enumerate(schedule):
             token += 1
             heapq.heappush(heap, (max(0.0, ev.t), token, FLEET, i))
+        # risk-aware placement: seed the contractual lease/topology
+        # metadata off the schedule (reclaims are sold lease terms,
+        # multi-host events reveal blast domains) and estimate hazards
+        # online as events are applied — identical in the live runner,
+        # which inherits this loop, so predictions stay in parity
+        risk_aware = self.model.risk_aware
+        hazard_est: Optional[HazardEstimator] = None
+        if risk_aware:
+            self.engine.set_host_risk(
+                lease_until_s=lease_expiries(schedule, self.engine.hosts),
+                blast_groups=blast_groups(schedule, self.engine.hosts))
+            hazard_est = HazardEstimator(self.engine.hosts)
+        if self.shrink_recovery:
+            # lazy: core.elastic pulls in jax, which the simulator
+            # otherwise never needs
+            from repro.core.elastic import shrink_worlds
 
         def progress_to(t: float):
             # runs for every running job at every event: read the
@@ -680,6 +743,118 @@ class Simulator:
                 self._on_migrate(r)
                 schedule_finish(r)
 
+        def apply_shrink(rj: RunningJob, pl: list,
+                         survivors: List[Tuple[int, int]],
+                         rebind: bool):
+            """Commit one shrink-before-rollback move: the gang
+            reshards onto ``pl`` (possibly a smaller power-of-two
+            world), keeps all its progress, and pays one snapshot
+            transfer like a migration.  ``rebind`` distinguishes the
+            hard-fail flavour (the engine already dropped the
+            allocation) from the mid-drain one (still allocated)."""
+            nonlocal shrinks
+            old_n = rj.alloc.n
+            if rebind:
+                rj.alloc = self.engine.bind(rj.job.job_id, pl)
+            else:
+                rj.alloc = self.engine.apply_migration(rj.alloc, pl)
+            # the gang now runs as a world of alloc.n ranks (a DP
+            # reshard, not an overcommit); rollback requeues the
+            # original Job, so the submitted width is never lost
+            rj.world = rj.alloc.n
+            rj.eff_parallelism = rj.alloc.n
+            rj.invalidate_rate()
+            rj.progress = max(
+                0.0,
+                rj.progress - self.model.migration_cost_s * rj.rate())
+            shrinks += 1
+            actions.append(Action("shrink",
+                                  {"job": rj.job.job_id, "t": now,
+                                   "from": old_n, "to": rj.alloc.n,
+                                   "placement": list(pl)}))
+            self._on_shrink(rj, survivors)
+            schedule_finish(rj)
+
+        def shrink_stranded(jids: List[str]):
+            """Shrink-before-rollback, drain flavour: a stranded gang's
+            draining hosts are still alive, so it can reshard onto safe
+            capacity at a smaller world with nothing lost.  Its own
+            chips on non-draining hosts count as landing room."""
+            for jid in jids:
+                rj = running.get(jid)
+                if rj is None or rj.alloc.slice_size:
+                    continue
+                keep = [(h, c) for h, c in rj.alloc.placement
+                        if not self.engine.draining[h]]
+                pl = self.engine.shrink_plan(
+                    shrink_worlds(rj.alloc.n), credit=keep,
+                    policy=self.policy, kind=rj.job.kind)
+                if pl is not None:
+                    apply_shrink(rj, pl, keep, rebind=False)
+
+        def shrink_failed(jids: List[str],
+                          hosts: Sequence[int]) -> List[str]:
+            """Shrink-before-rollback, hard-fail flavour: the hosts are
+            gone (allocations already dropped), so a gang reshards only
+            if at least one chip survived to hold a live replica.
+            Returns the job_ids with no fitting shrink world — those
+            still roll back to checkpoint."""
+            dead = {int(h) for h in hosts}
+            rollback: List[str] = []
+            for jid in jids:
+                rj = running.get(jid)
+                pl = None
+                survivors: List[Tuple[int, int]] = []
+                if rj is not None and not rj.alloc.slice_size:
+                    survivors = [(h, c) for h, c in rj.alloc.placement
+                                 if h not in dead]
+                    if survivors:
+                        pl = self.engine.shrink_plan(
+                            shrink_worlds(rj.alloc.n),
+                            policy=self.policy, kind=rj.job.kind)
+                if pl is None:
+                    rollback.append(jid)
+                    continue
+                apply_shrink(rj, pl, survivors, rebind=True)
+            return rollback
+
+        def regrow_shrunk():
+            """A shrink never sticks: once capacity returns (a join, a
+            finish), a shrunk gang refits back to its submitted width —
+            the inverse move, crediting its current chips as landing
+            room and paying one more snapshot transfer.  Runs at the
+            head of each scheduling pass so stranded-then-shrunk gangs
+            reclaim width before new arrivals soak up the capacity."""
+            nonlocal regrows
+            for jid in sorted(running):
+                rj = running[jid]
+                if rj.world is None or rj.world >= rj.job.parallelism:
+                    continue
+                pl = self.engine.shrink_plan(
+                    [rj.job.parallelism], credit=rj.alloc.placement,
+                    policy=self.policy, kind=rj.job.kind)
+                if pl is None:
+                    continue
+                old_n = rj.alloc.n
+                survivors = list(rj.alloc.placement)
+                rj.alloc = self.engine.apply_migration(rj.alloc, pl)
+                rj.world = None
+                rj.eff_parallelism = self._eff_parallelism(rj.job,
+                                                           rj.alloc)
+                rj.invalidate_rate()
+                rj.progress = max(
+                    0.0,
+                    rj.progress - self.model.migration_cost_s
+                    * rj.rate())
+                regrows += 1
+                actions.append(Action("regrow",
+                                      {"job": jid, "t": now,
+                                       "from": old_n,
+                                       "to": rj.alloc.n,
+                                       "placement": list(pl)}))
+                self._on_shrink(rj, survivors)
+                schedule_finish(rj)
+
         def pump_queue():
             # one scheduling pass: the per-decision scan latency accrues
             # ONCE per pump (decisions in a pass share one scan of the
@@ -692,6 +867,12 @@ class Simulator:
             # fleet churn: cross-shard steal attempts budget per pass,
             # and adaptive resharding may have changed the shard size
             self.engine.reset_steal_budget()
+            if risk_aware:
+                # lease clocks tick down: decisions in this pass see
+                # remaining lease time as of now
+                self.engine.risk_tick(now)
+            if self.shrink_recovery:
+                regrow_shrunk()
             self.sched_latency = (SCHED_LATENCY_PER_HOST
                                   * self.engine.sched_hosts)
             charged = False
@@ -735,6 +916,11 @@ class Simulator:
                 progress_to(now)
                 self._on_advance(now)
                 out = controller.apply(ev, now, kinds=kinds_of())
+                if risk_aware:
+                    # after apply: a join's fresh hosts are sized in
+                    hazard_est.observe(ev)
+                    self.engine.set_host_risk(
+                        hazards=hazard_est.rates(self.engine.hosts, now))
                 if ev.kind == "join":
                     actions.append(Action("join",
                                           {"t": now,
@@ -750,7 +936,10 @@ class Simulator:
                                                int(h)
                                                for h in ev.hosts)}))
                     self._on_hosts_down(ev.hosts)
-                    fail_jobs(out.failed, ev.hosts)
+                    failed = out.failed
+                    if self.shrink_recovery:
+                        failed = shrink_failed(failed, ev.hosts)
+                    fail_jobs(failed, ev.hosts)
                     pump_queue()               # survivors' chips freed
                 else:                          # reclaim: drain begins
                     actions.append(Action("drain",
@@ -762,9 +951,35 @@ class Simulator:
                                                out.deadline, 6)}))
                     self._on_drain(ev)
                     apply_evacuations(out.evacuations)
+                    if self.shrink_recovery and out.stranded:
+                        shrink_stranded(out.stranded)
                     token += 1
                     heapq.heappush(heap, (out.deadline, token,
                                           DEADLINE, job_id))
+                    # evacuation retries through the drain window on
+                    # the controller's backoff schedule: capacity that
+                    # frees mid-drain rescues gangs before the deadline
+                    for rt in controller.retry_times(ev, now):
+                        token += 1
+                        heapq.heappush(heap, (rt, token, RETRY, job_id))
+                continue
+            if kind == RETRY:                  # job_id = schedule index
+                ev = schedule[job_id]
+                # stale once the drain resolved: the deadline already
+                # retired the hosts, or nothing still runs on them
+                doomed = {int(h) for h in ev.hosts
+                          if self.engine.draining[int(h)]}
+                if not doomed or not any(
+                        any(h in doomed for h, _ in r.alloc.placement)
+                        for r in running.values()):
+                    continue
+                now = max(now, t)
+                progress_to(now)
+                self._on_advance(now)
+                out = controller.expire(ev, kinds=kinds_of())
+                apply_evacuations(out.evacuations)
+                if self.shrink_recovery and out.stranded:
+                    shrink_stranded(out.stranded)
                 continue
             if kind == DEADLINE:               # job_id = schedule index
                 ev = schedule[job_id]
@@ -776,6 +991,10 @@ class Simulator:
                 # still holds chips requeues from its checkpoint
                 out = controller.expire(ev, kinds=kinds_of())
                 apply_evacuations(out.evacuations)
+                if self.shrink_recovery and out.stranded:
+                    # last call with the hosts still alive: a reshard
+                    # now keeps progress a rollback would throw away
+                    shrink_stranded(out.stranded)
                 self._on_hosts_down(ev.hosts)
                 failed = controller.fail(ev.hosts)
                 actions.append(Action("retire",
@@ -783,6 +1002,10 @@ class Simulator:
                                        "hosts": sorted(
                                            int(h) for h in ev.hosts),
                                        "failed": list(failed)}))
+                if self.shrink_recovery:
+                    # chips freed by the retirement itself may fit a
+                    # shrink for gangs that kept a surviving replica
+                    failed = shrink_failed(failed, ev.hosts)
                 fail_jobs(failed, ev.hosts)
                 pump_queue()
                 continue
@@ -870,7 +1093,8 @@ class Simulator:
                            finish_order=finish_order,
                            finish_times=finish_times, actions=actions,
                            recoveries=recoveries, lost_work_s=lost_work,
-                           evacuations=evacuations)
+                           evacuations=evacuations, shrinks=shrinks,
+                           regrows=regrows)
 
 
 def run_baselines(jobs: List[Job], hosts: int, chips_per_host: int = 8,

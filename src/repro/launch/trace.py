@@ -12,7 +12,11 @@ in and out mid-trace — spot reclaims drain and evacuate live gangs,
 hard failures roll gangs back to their last snapshot (bit-exact
 resume), and joins pull staged spare devices into the pool.  Composes
 with ``--sched sharded`` (incl. ``--shard-hosts auto``) and
-``--host-regime mixed-gen``.
+``--host-regime mixed-gen``.  ``--risk-aware`` adds the CostModel risk
+term (placement spreads away from short-lease / flaky / blast-
+correlated hosts) and shrink-before-rollback recovery; ``--adapt-
+cadence`` folds measured delta-checkpoint bytes back into the live
+Young/Daly interval (DESIGN.md §13).
 
 Example:
     XLA_FLAGS=--xla_force_host_platform_device_count=8 \
@@ -94,6 +98,19 @@ def main():
                     help="full rebase every N checkpoints when delta "
                          "checkpointing is configured (bounds the "
                          "recovery replay chain)")
+    ap.add_argument("--risk-aware", action="store_true",
+                    help="risk-aware placement + shrink-before-rollback "
+                         "(DESIGN.md §13): the CostModel risk term "
+                         "steers gangs away from short-lease / flaky / "
+                         "blast-correlated hosts (risk_tau_s = the "
+                         "checkpoint cadence), and stranded gangs "
+                         "reshard onto surviving capacity before any "
+                         "checkpoint rollback")
+    ap.add_argument("--adapt-cadence", action="store_true",
+                    help="re-derive the live Young/Daly checkpoint "
+                         "interval from measured delta bytes after each "
+                         "rebase window (live only; Action logs then "
+                         "diverge from the prediction by design)")
     args = ap.parse_args()
 
     all_devices = list(jax.devices())
@@ -161,6 +178,12 @@ def main():
         tau = fleet_mod.optimal_checkpoint_interval(
             mtbf, cost_model=cost_model)
         ckpt_interval = None if tau == float("inf") else tau
+    if args.risk_aware:
+        # the risk term's expected-lost-work scale is the gang
+        # checkpoint cadence; with no cadence a failure forfeits the
+        # run, so the horizon stands in
+        cost_model.risk_tau_s = (ckpt_interval if ckpt_interval
+                                 is not None else horizon)
     # mixed train/serve trace sized to the local fabric, two priority
     # classes (9:1 high) — the §2.1 shared-cluster economics, live
     jobs = sim.mixed_trace(args.jobs, seed=args.seed,
@@ -183,13 +206,16 @@ def main():
     preempt = not args.no_preempt
     predicted = fabric.predict_trace(jobs, preempt=preempt,
                                      fleet_events=fleet_events,
-                                     checkpoint_interval=ckpt_interval)
+                                     checkpoint_interval=ckpt_interval,
+                                     shrink_recovery=args.risk_aware)
     ex = fabric.run_trace(
         jobs, workload_factory(cfg, ocfg, dcfg,
                                train_steps=args.train_steps,
                                serve_tokens=args.serve_tokens),
         preempt=preempt, fleet_events=fleet_events,
-        checkpoint_interval=ckpt_interval)
+        checkpoint_interval=ckpt_interval,
+        shrink_recovery=args.risk_aware,
+        adapt_cadence=args.adapt_cadence)
     live = ex.result
     print(json.dumps({
         "devices": len(fabric.devices),
@@ -219,9 +245,13 @@ def main():
         "predicted_order": predicted.finish_order,
         "live_order": live.finish_order,
         "order_matches": live.finish_order == predicted.finish_order,
+        "risk_aware": args.risk_aware,
+        "adapt_cadence": args.adapt_cadence,
         "preemptions": live.preemptions,
         "recoveries": live.recoveries,
         "evacuations": live.evacuations,
+        "shrinks": live.shrinks,
+        "regrows": live.regrows,
         "lost_work_s": round(live.lost_work_s, 2),
         "virtual_makespan_s": round(live.makespan, 2),
         "per_job_makespan_s": {k: round(v, 2)

@@ -631,3 +631,104 @@ def test_run_trace_delta_checkpoints_match_prediction():
         print("delta-live-ok", rec["checkpoints"],
               rec["delta_checkpoints"], round(frac, 4))
     """))
+
+
+def test_shrink_before_rollback_live_matches_prediction():
+    # risk-aware recovery, live: a rack fail strands the training gang;
+    # instead of rolling back it reshards onto surviving chips (live
+    # reshard from a replica, no snapshot restore), then regrows to its
+    # submitted width when the replacement host joins — Action log
+    # bit-identical to predict_trace throughout
+    print(run_sub("""
+        import jax
+        from repro.configs.registry import reduced_config
+        from repro.data.pipeline import DataConfig
+        from repro.optim.adamw import AdamWConfig
+        from repro.core.fabric import Fabric
+        from repro.core.fleet import FleetEvent
+        from repro.core.placement import CostModel
+        from repro.core.simulator import Job
+        from repro.runtime.gang_workloads import workload_factory
+
+        cfg = reduced_config("llama3.2-1b").with_(n_layers=1, vocab=128)
+        dcfg = DataConfig(vocab=128, seq_len=8, global_batch=8)
+        ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=20)
+        jobs = [
+            Job("train-a", "mpi-compute", 4, 200.0, arrival=0.0,
+                workload="train"),
+            Job("serve-0", "omp", 2, 120.0, arrival=0.0, priority=1,
+                workload="serve"),
+        ]
+        devs = jax.devices()
+        events = [FleetEvent(6.0, "fail", hosts=[0]),
+                  FleetEvent(10.0, "join", capacities=[2])]
+        fab = Fabric(devices=devs[:6], chips_per_host=2,
+                     spares=devs[6:],
+                     cost_model=CostModel(risk_tau_s=4.0))
+        pred = fab.predict_trace(jobs, fleet_events=events,
+                                 checkpoint_interval=4.0,
+                                 shrink_recovery=True)
+        assert pred.shrinks >= 1 and pred.regrows >= 1, \\
+            (pred.shrinks, pred.regrows)
+        assert pred.recoveries == 0
+        ex = fab.run_trace(
+            jobs, workload_factory(cfg, ocfg, dcfg, train_steps=3,
+                                   serve_tokens=3),
+            fleet_events=events, checkpoint_interval=4.0,
+            shrink_recovery=True)
+        res = ex.result
+        assert res.actions == pred.actions
+        assert res.shrinks == pred.shrinks
+        assert res.regrows == pred.regrows
+        assert res.recoveries == 0 and res.lost_work_s == 0.0
+        assert res.finish_order == pred.finish_order
+        rec = ex.live["train-a"]
+        assert rec.get("shrinks", 0) >= 1
+        assert rec.get("regrows", 0) >= 1
+        assert rec["steps"] >= 3          # training completed resharded
+        assert set(res.finish_order) == {j.job_id for j in jobs}
+        print("shrink-live-ok", res.shrinks, res.regrows)
+    """))
+
+
+def test_adaptive_cadence_rederives_interval_from_observed_deltas():
+    # satellite: the live runner folds the observed delta fraction into
+    # the Young/Daly cadence after each rebase window — tau tightens by
+    # sqrt(eff_observed / eff_configured) when deltas run cheap
+    print(run_sub("""
+        from repro.configs.registry import reduced_config
+        from repro.data.pipeline import DataConfig
+        from repro.optim.adamw import AdamWConfig
+        from repro.core.fabric import Fabric
+        from repro.core.placement import CostModel
+        from repro.core.simulator import Job
+        from repro.runtime.gang_workloads import workload_factory
+
+        cfg = reduced_config("llama3.2-1b").with_(n_layers=1, vocab=128)
+        dcfg = DataConfig(vocab=128, seq_len=8, global_batch=8)
+        ocfg = AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=40)
+        jobs = [Job("train-a", "mpi-compute", 4, 400.0, arrival=0.0,
+                    workload="train")]
+        cm = CostModel(ckpt_rebase_every=3)
+        fab = Fabric(chips_per_host=2, cost_model=cm)
+        ex = fab.run_trace(
+            jobs, workload_factory(cfg, ocfg, dcfg, train_steps=10),
+            checkpoint_interval=8.0, adapt_cadence=True)
+        rec = ex.live["train-a"]
+        assert rec["checkpoints"] >= 3
+        frac = cm.observed_delta_fraction()
+        assert frac is not None and 0.0 < frac < 1.0
+        # the interval was re-derived and recorded, and it tightened
+        # (observed deltas are cheaper than the configured full cost);
+        # tau = tau0 * sqrt(eff/eff0) with the fraction observed at the
+        # rebase window, so the implied effective cost sits between the
+        # all-delta floor and the configured full cost
+        assert "adapted_interval_s" in rec, sorted(rec)
+        tau = rec["adapted_interval_s"]
+        assert 0.0 < tau < 8.0
+        eff0 = cm.effective_checkpoint_cost_s()
+        implied = eff0 * (tau / 8.0) ** 2
+        assert cm.effective_checkpoint_cost_s(fraction=0.0) \\
+            <= implied <= eff0
+        print("adapt-cadence-ok", round(tau, 3))
+    """))

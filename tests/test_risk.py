@@ -1,0 +1,415 @@
+"""Risk-aware placement + shrink-before-rollback (DESIGN.md §13).
+
+Pillars:
+
+* default-off bit-identity — a ``CostModel`` with no ``risk_tau_s`` and
+  installed risk metadata never changes a decision (the risk-blind path
+  is pinned action-for-action under churn, central and sharded);
+* the risk term — short-lease and historically-flaky hosts are avoided
+  by risk-sensitive kinds, weight-0 kinds keep the exact risk-blind
+  placement, and the blast-group correlation counts one failure domain
+  once;
+* shrink-before-rollback — ``shrink_plan`` picks a shrink exactly when
+  a fit exists, the simulator reshards stranded gangs instead of
+  rolling them back (drain and hard-fail flavours), and a shrunk gang
+  regrows to its submitted width once capacity returns;
+* churn accounting properties — interleaved drain + hard-fail + join
+  streams never leak or double-count chips in the central or sharded
+  engine, with and without the risk/shrink machinery;
+* drain-deadline retry schedule — deterministic capped-exponential
+  backoff strictly inside the drain window.
+"""
+import numpy as np
+import pytest
+
+from repro.core import fleet as F
+from repro.core import simulator as S
+from repro.core.elastic import shrink_worlds
+from repro.core.fleet import (FleetController, FleetEvent,
+                              HazardEstimator, blast_groups,
+                              lease_expiries)
+from repro.core.placement import (CostModel, PlacementEngine,
+                                  ShardedPlacementEngine)
+
+
+# ---------------------------------------------------------------------------
+# default-off bit-identity
+# ---------------------------------------------------------------------------
+def test_risk_default_off_is_bit_identical_under_churn():
+    jobs = S.mixed_trace(50, seed=9, arrival_rate=0.3,
+                         priority_classes=[(0, 0.8), (5, 0.2)])
+    events = F.churn_schedule("spot-heavy", 16, 8, 150.0, seed=3,
+                              rate=0.03)
+    for sched, shards in (("central", None), ("sharded", 4)):
+        stock = S.Simulator(16, 8, "granular", migrate=True,
+                            preempt=True, sched=sched,
+                            shard_hosts=shards,
+                            checkpoint_interval=8.0).run(
+            list(jobs), fleet_events=events)
+        # an explicit default CostModel carries risk_tau_s=None: the
+        # engine must never build a RiskContext and every decision
+        # stays on the risk-blind path
+        off = S.Simulator(16, 8, "granular", migrate=True,
+                          preempt=True, sched=sched,
+                          shard_hosts=shards,
+                          cost_model=CostModel(),
+                          checkpoint_interval=8.0).run(
+            list(jobs), fleet_events=events)
+        assert off.actions == stock.actions
+        assert off.makespan == stock.makespan
+        assert off.shrinks == 0 and off.regrows == 0
+
+
+def test_risk_metadata_without_opt_in_changes_nothing():
+    # metadata installed but risk_tau_s unset: views carry risk=None
+    eng = PlacementEngine(4, 8)
+    eng.set_host_risk(lease_until_s=[5.0, np.inf, np.inf, np.inf],
+                      hazards=[9.0, 0.0, 0.0, 0.0],
+                      blast_groups=[0, 0, 2, 3])
+    assert eng._risk_context() is None
+    a = eng.allocate("a", 8)
+    assert a is not None            # placement unaffected by metadata
+
+
+# ---------------------------------------------------------------------------
+# the risk term
+# ---------------------------------------------------------------------------
+def _risk_engine(lease=None, hazards=None, groups=None, hosts=4,
+                 cph=8, policy="binpack", **cm_kwargs):
+    cm_kwargs.setdefault("risk_tau_s", 20.0)
+    eng = PlacementEngine(hosts, cph, policy=policy,
+                          cost_model=CostModel(**cm_kwargs))
+    eng.set_host_risk(lease_until_s=lease, hazards=hazards,
+                      blast_groups=groups)
+    return eng
+
+
+def test_short_lease_host_avoided():
+    # host 0's lease expires in 2s; an equal-capacity safe host exists
+    eng = _risk_engine(lease=[2.0, np.inf, np.inf, np.inf])
+    eng.risk_tick(0.0)
+    a = eng.allocate("gang", 8, kind="mpi-compute")
+    assert a is not None
+    assert all(h != 0 for h, _ in a.placement)
+
+
+def test_flaky_host_avoided_and_weight_zero_kind_ignores_risk():
+    hazards = [0.5, 0.0, 0.0, 0.0]
+    risky = _risk_engine(hazards=hazards)
+    a = risky.allocate("gang", 8, kind="mpi-compute")
+    assert all(h != 0 for h, _ in a.placement)
+    # a weight-0 kind takes the exact risk-blind placement (binpack
+    # ties break toward the highest index either way, so compare
+    # against a genuinely risk-blind engine)
+    blind = PlacementEngine(4, 8)
+    soaker = _risk_engine(hazards=hazards,
+                          risk_weights={"batch": 0.0})
+    assert soaker.allocate("g", 8, kind="batch").placement \
+        == blind.allocate("g", 8, kind="batch").placement
+
+
+def test_blast_group_correlation_counts_domain_once():
+    # hosts 0+1 share a failure domain at a high rate; hosts 2+3 are
+    # independent at a moderate rate.  A 16-chip gang must span two
+    # hosts: under the scored (locality) policy the correlated pair
+    # contributes max() once, so it is cheaper than two independent
+    # moderate hosts when 0.3 (one shared domain) < 0.2 + 0.2 (two)
+    eng = _risk_engine(hazards=[0.3, 0.3, 0.2, 0.2],
+                       groups=[0, 0, 2, 3], policy="locality")
+    a = eng.allocate("gang", 16, kind="mpi-compute")
+    assert {h for h, _ in a.placement} == {0, 1}
+    # without the grouping the same rates pick the independent pair
+    ung = _risk_engine(hazards=[0.3, 0.3, 0.2, 0.2],
+                       groups=[0, 1, 2, 3], policy="locality")
+    b = ung.allocate("gang", 16, kind="mpi-compute")
+    assert {h for h, _ in b.placement} == {2, 3}
+
+
+def test_risk_context_rates_combine_lease_and_hazard():
+    cm = CostModel(risk_tau_s=10.0, risk_lease_floor_s=1.0)
+    eng = PlacementEngine(3, 4, cost_model=cm)
+    eng.set_host_risk(lease_until_s=[4.0, np.inf, 0.5],
+                      hazards=[0.1, 0.2, 0.0])
+    eng.risk_tick(2.0)
+    ctx = eng._risk_context()
+    rates = ctx.rates()
+    # host 0: hazard + 1/(4-2); host 1: hazard only (inf lease -> 0);
+    # host 2: lease already past -> floored at 1/risk_lease_floor_s
+    assert rates[0] == pytest.approx(0.1 + 0.5)
+    assert rates[1] == pytest.approx(0.2)
+    assert rates[2] == pytest.approx(1.0)
+
+
+def test_lease_and_blast_metadata_from_schedule():
+    events = [FleetEvent(30.0, "reclaim", hosts=[1], drain_s=5.0),
+              FleetEvent(40.0, "fail", hosts=[2, 3])]
+    lease = lease_expiries(events, 5)
+    assert lease[1] == 30.0                     # reclaim = lease term
+    assert np.isinf(lease[2]) and np.isinf(lease[4])  # fails are not
+    groups = blast_groups(events, 5)
+    assert groups[2] == groups[3]               # co-failed -> one domain
+    assert len({groups[0], groups[1], groups[2], groups[4]}) == 4
+
+
+def test_hazard_estimator_learns_observed_failures():
+    est = HazardEstimator(4, prior_events=0.25)
+    r0 = est.rates(4, 10.0)
+    assert np.allclose(r0, 0.25 / 10.0)         # uniform prior
+    est.observe(FleetEvent(10.0, "fail", hosts=[1]))
+    est.observe(FleetEvent(20.0, "reclaim", hosts=[1], drain_s=5.0))
+    est.observe(FleetEvent(25.0, "join", capacities=[8]))  # not counted
+    r = est.rates(4, 40.0)
+    assert r[1] == pytest.approx(2.25 / 40.0)
+    assert r[0] == pytest.approx(0.25 / 40.0)
+    assert r[1] > r[0]
+    # fleet growth: new hosts appear at the prior
+    r5 = est.rates(5, 40.0)
+    assert r5[4] == pytest.approx(0.25 / 40.0)
+
+
+# ---------------------------------------------------------------------------
+# shrink-before-rollback
+# ---------------------------------------------------------------------------
+def test_shrink_worlds_ladder():
+    assert shrink_worlds(12) == [12, 8, 4]
+    assert shrink_worlds(8) == [8, 4, 2]
+    assert shrink_worlds(3) == [3, 2, 1]
+    assert shrink_worlds(1) == [1]
+    assert shrink_worlds(8, floor=1) == [8, 4, 2, 1]
+
+
+def test_shrink_plan_picks_shrink_exactly_when_a_fit_exists():
+    # 3 hosts x 4; a 8-chip gang spans two hosts, rest of the fleet
+    # is full.  Draining both its hosts leaves 0 safe free chips: only
+    # the gang's own safe chips (credit) can make a fit.
+    eng = PlacementEngine(3, 4)
+    g = eng.bind("g", [(0, 4), (1, 4)])
+    eng.allocate("full", 4)                      # host 2
+    eng.drain_hosts([0])
+    # no credit, no free safe chips -> no world fits
+    assert eng.shrink_plan(shrink_worlds(8)) is None
+    # crediting the gang's safe host-1 chips fits the 4-world exactly
+    keep = [(h, c) for h, c in g.placement if not eng.draining[h]]
+    pl = eng.shrink_plan(shrink_worlds(8), credit=keep)
+    assert pl is not None and sum(c for _, c in pl) == 4
+    assert all(h == 1 for h, _ in pl)
+    # a fit below the world floor is not taken: the ladder for 8 stops
+    # at 2 (floor = n // 4), so a single surviving chip cannot host it
+    eng2 = PlacementEngine(2, 8)
+    eng2.bind("g", [(0, 7), (1, 1)])
+    eng2.allocate("other", 7)                    # host 1 now full
+    eng2.drain_hosts([0])
+    keep2 = [(1, 1)]
+    assert shrink_worlds(8) == [8, 4, 2]
+    assert eng2.shrink_plan(shrink_worlds(8), credit=keep2) is None
+
+
+def test_simulator_shrinks_on_drain_instead_of_rollback():
+    # the gang spans both hosts; reclaiming host 1 leaves no room to
+    # evacuate at full width but half-width fits on host 0
+    jobs = [S.Job("g", "mpi-compute", 12, 480.0)]
+    events = [FleetEvent(10.0, "reclaim", hosts=[1], drain_s=5.0)]
+    blind = S.Simulator(2, 8, "granular", checkpoint_interval=5.0).run(
+        list(jobs), fleet_events=list(events))
+    assert blind.recoveries == 1                 # rollback without it
+    r = S.Simulator(2, 8, "granular", checkpoint_interval=5.0,
+                    shrink_recovery=True).run(list(jobs),
+                                              fleet_events=list(events))
+    assert r.shrinks == 1 and r.recoveries == 0
+    assert r.lost_work_s == 0.0                  # progress kept
+    sh = next(a for a in r.actions if a.kind == "shrink")
+    assert sh.payload["from"] == 12 and sh.payload["to"] == 8
+    assert all(h == 0 for h, _ in sh.payload["placement"])
+    assert len(r.finish_order) == 1
+
+
+def test_simulator_shrinks_on_hard_fail_with_survivors():
+    jobs = [S.Job("g", "mpi-compute", 12, 120.0)]
+    events = [FleetEvent(10.0, "fail", hosts=[0])]
+    r = S.Simulator(2, 8, "granular", checkpoint_interval=5.0,
+                    shrink_recovery=True).run(list(jobs),
+                                              fleet_events=list(events))
+    assert r.shrinks == 1 and r.recoveries == 0
+    sh = next(a for a in r.actions if a.kind == "shrink")
+    assert sh.payload["to"] == 8
+    # no survivors (the whole gang died) -> checkpoint rollback stays
+    whole = [S.Job("g", "mpi-compute", 8, 120.0)]
+    r2 = S.Simulator(2, 8, "granular", checkpoint_interval=5.0,
+                     shrink_recovery=True).run(
+        list(whole), fleet_events=[FleetEvent(10.0, "fail", hosts=[
+            S.Simulator(2, 8, "granular").run(
+                list(whole)).actions[0].payload["placement"][0][0]])])
+    assert r2.shrinks == 0 and r2.recoveries == 1
+
+
+def test_shrunk_gang_regrows_when_capacity_returns():
+    jobs = [S.Job("g", "mpi-compute", 12, 300.0)]
+    events = [FleetEvent(10.0, "fail", hosts=[0]),
+              FleetEvent(20.0, "join", capacities=[8])]
+    r = S.Simulator(2, 8, "granular", checkpoint_interval=5.0,
+                    shrink_recovery=True).run(list(jobs),
+                                              fleet_events=list(events))
+    assert r.shrinks == 1 and r.regrows == 1 and r.recoveries == 0
+    rg = next(a for a in r.actions if a.kind == "regrow")
+    assert rg.payload["from"] == 8 and rg.payload["to"] == 12
+    assert rg.payload["t"] >= 20.0
+    # the regrown gang finishes faster than one left shrunken: compare
+    # against the same trace without the join
+    stuck = S.Simulator(2, 8, "granular", checkpoint_interval=5.0,
+                        shrink_recovery=True).run(
+        list(jobs), fleet_events=[FleetEvent(10.0, "fail", hosts=[0])])
+    assert stuck.regrows == 0
+    assert r.makespan < stuck.makespan
+
+
+def test_rollback_after_shrink_requeues_full_width():
+    # shrink at the first fail, then the surviving host dies too: the
+    # recovery requeues the ORIGINAL job (full width) — shrink never
+    # sticks past a rollback
+    jobs = [S.Job("g", "mpi-compute", 12, 300.0)]
+    events = [FleetEvent(10.0, "fail", hosts=[0]),
+              FleetEvent(20.0, "fail", hosts=[1]),
+              FleetEvent(25.0, "join", capacities=[8, 8])]
+    r = S.Simulator(2, 8, "granular", checkpoint_interval=5.0,
+                    shrink_recovery=True).run(list(jobs),
+                                              fleet_events=list(events))
+    assert r.shrinks == 1 and r.recoveries == 1
+    resume = next(a for a in r.actions if a.kind == "resume")
+    assert sum(c for _, c in resume.payload["placement"]) == 12
+    assert len(r.finish_order) == 1
+
+
+def test_shrink_gated_to_granular_mode():
+    sim = S.Simulator(2, 8, "slices", slice_size=4,
+                      shrink_recovery=True)
+    assert sim.shrink_recovery is False
+    assert S.Simulator(2, 8, "granular",
+                       shrink_recovery=True).shrink_recovery is True
+
+
+# ---------------------------------------------------------------------------
+# churn accounting properties
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("sched", ["central", "sharded"])
+@pytest.mark.parametrize("trial", range(3))
+def test_interleaved_churn_never_leaks_or_double_counts(sched, trial):
+    # property-style: a random interleaving of drain + hard-fail + join
+    # + allocate/bind/release/shrink keeps the free-chip ledger exact at
+    # every step, in the central and sharded engines alike
+    rng = np.random.default_rng([17, trial])
+    if sched == "central":
+        eng = PlacementEngine(8, 4, cost_model=CostModel(risk_tau_s=8.0))
+    else:
+        eng = ShardedPlacementEngine(8, 4, hosts_per_shard=2,
+                                     cost_model=CostModel(
+                                         risk_tau_s=8.0))
+    eng.set_host_risk(hazards=np.zeros(8))
+    allocs = {}
+    for i in range(250):
+        u = rng.random()
+        if u < 0.30 and allocs:
+            jid = sorted(allocs)[int(rng.integers(len(allocs)))]
+            eng.release(allocs.pop(jid))
+        elif u < 0.38 and eng.alive_hosts() > 4:
+            cands = [h for h in range(eng.hosts)
+                     if eng.capacities[h] > 0 and not eng.draining[h]]
+            victim = int(cands[int(rng.integers(len(cands)))])
+            if u < 0.34:
+                for jid in eng.fail_hosts([victim]):
+                    allocs.pop(jid)
+            else:
+                eng.drain_hosts([victim])
+                # drain-flavour shrink for every stranded gang
+                _, stranded = eng.evacuation_plan([victim])
+                for jid in stranded:
+                    al = allocs[jid]
+                    keep = [(h, c) for h, c in al.placement
+                            if not eng.draining[h]]
+                    pl = eng.shrink_plan(shrink_worlds(al.n),
+                                         credit=keep)
+                    if pl is not None:
+                        allocs[jid] = eng.apply_migration(al, pl)
+        elif u < 0.44:
+            joined = eng.add_hosts([int(rng.integers(1, 5))])
+            assert all(not eng.draining[h] for h in joined)
+        else:
+            a = eng.allocate(f"j{i}", int(rng.integers(1, 9)))
+            if a is not None:
+                allocs[a.job_id] = a
+        # the ledger invariants, checked after EVERY operation
+        assert eng.idle_chips() == int(eng.free.sum())
+        assert (eng.free >= 0).all()
+        assert (eng.free <= eng.capacities).all()
+        assert (eng.free[eng.draining] == 0).all()
+        held = np.zeros(eng.hosts, dtype=np.int64)
+        for al in allocs.values():
+            for h, c in al.placement:
+                held[h] += c
+        assert (held + eng.free <= eng.capacities).all()
+        live = ~eng.draining
+        assert (held[live] + eng.free[live]
+                == eng.capacities[live]).all()
+        if sched == "sharded":
+            for s, (lo, hi) in enumerate(eng.shard_bounds):
+                assert eng._shard_idle[s] == eng.free[lo:hi].sum()
+    for a in list(allocs.values()):
+        eng.release(a)
+    assert eng.idle_chips() == eng.total_chips
+
+
+def test_simulated_interleaved_churn_conserves_jobs():
+    # end-to-end: drains, fails and joins interleaved on one trace;
+    # every job finishes exactly once, with and without risk + shrink
+    jobs = S.mixed_trace(40, seed=21, arrival_rate=0.4)
+    events = [FleetEvent(10.0, "reclaim", hosts=[3], drain_s=6.0),
+              FleetEvent(12.0, "fail", hosts=[7]),
+              FleetEvent(14.0, "join", capacities=[8]),
+              FleetEvent(18.0, "reclaim", hosts=[5, 6], drain_s=4.0),
+              FleetEvent(19.0, "fail", hosts=[0]),
+              FleetEvent(30.0, "join", capacities=[8, 8, 8])]
+    for cm, shrink in ((None, False),
+                       (CostModel(risk_tau_s=8.0), True)):
+        r = S.Simulator(8, 8, "granular", migrate=True,
+                        cost_model=cm, checkpoint_interval=8.0,
+                        shrink_recovery=shrink).run(
+            list(jobs), fleet_events=list(events))
+        assert sorted(r.finish_order) == sorted(j.job_id for j in jobs)
+        assert len(r.finish_order) == len(set(r.finish_order))
+
+
+# ---------------------------------------------------------------------------
+# drain-deadline retry schedule
+# ---------------------------------------------------------------------------
+def test_retry_times_deterministic_backoff_inside_window():
+    eng = PlacementEngine(4, 8)
+    ctl = FleetController(eng)
+    ev = FleetEvent(100.0, "reclaim", hosts=[1], drain_s=20.0)
+    times = ctl.retry_times(ev, now=100.0)
+    assert times == FleetController(PlacementEngine(4, 8)).retry_times(
+        ev, now=100.0)                           # deterministic
+    assert times and all(100.0 < t < 120.0 for t in times)
+    assert times == sorted(times)
+    gaps = np.diff([100.0] + times)
+    # capped exponential: gaps grow (up to jitter) then plateau at the
+    # cap; every gap stays within [base, cap * 1.25]
+    assert gaps[0] >= ctl.retry_base_s
+    assert max(gaps) <= ctl.retry_cap_s * 1.25 + 1e-9
+    # a zero-length window schedules nothing
+    assert ctl.retry_times(FleetEvent(5.0, "reclaim", hosts=[1],
+                                      drain_s=0.0), now=5.0) == []
+
+
+def test_retry_event_rescues_gang_mid_drain():
+    # capacity frees up mid-drain (a short job finishes): the retry
+    # pass evacuates the draining gang well before the deadline
+    jobs = [S.Job("short", "mpi-compute", 8, 10.0),
+            S.Job("long", "mpi-compute", 8, 400.0)]
+    r = S.Simulator(2, 8, "granular").run(
+        list(jobs), fleet_events=[FleetEvent(1.0, "reclaim",
+                                             hosts=[0],
+                                             drain_s=30.0)])
+    assert r.evacuations == 1 and r.recoveries == 0
+    ev = next(a for a in r.actions if a.kind == "evacuate")
+    # rescued at a retry (after the ~11s finish), not at the 31s
+    # deadline
+    assert ev.payload["t"] < 31.0
