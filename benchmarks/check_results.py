@@ -13,6 +13,19 @@ Two stronger checks ride on top (the delta data plane's perf gate):
   gitignored) must stay within 2x of their recorded value; a merge
   throughput collapse back toward the chunk-loop reference
   (~100x slower) fails loudly even at smoke tier.
+
+Schema-3 artifacts additionally carry telemetry sidecars (schema-2
+artifacts, lacking the keys, skip these checks — back-compat):
+
+* the ``telemetry_summary`` file must parse, and for scheduler-driven
+  benches (``TELEMETRY_REQUIRED``) must hold nonzero spans and a
+  populated ``placement.decision_latency_s`` histogram;
+* the ``trace`` file (smoke tier) must parse as Chrome trace-event
+  JSON (Perfetto-loadable: non-empty ``traceEvents``, each with
+  ``ph``/``name``);
+* ``*_perfetto.json`` exports must cover all five instrumented layers
+  and ``*_diff.json`` predicted-vs-live reports must show zero
+  divergence (bench_telemetry's acceptance artifacts).
 """
 from __future__ import annotations
 
@@ -47,8 +60,22 @@ REQUIRED_METRICS = {
                    "inflation_pct_aware", "improves")]
         + ["risk/correlated-rack-failure/shrink_recoveries",
            "risk/aware_identical_rerun", "risk/off_bit_identical"]),
+    "bench_telemetry": ("diff/zero_divergence", "trace/layers_present",
+                        "telemetry/spans_total",
+                        "telemetry/decision_latency_count"),
 }
 REGRESSION_FACTOR = 2.0
+
+# benches that drive the placement engine / simulator: their schema-3
+# telemetry summaries must show real recorded spans and a populated
+# decision-latency histogram (bench_telemetry runs in a subprocess and
+# asserts the same through its own metrics + sidecar artifacts)
+TELEMETRY_REQUIRED = ("bench_makespan", "bench_scaling",
+                      "bench_scheduler_scale", "bench_churn")
+
+# every layer bench_telemetry's exported Perfetto timeline must cover
+# (event ``cat`` = span/counter name prefix)
+REQUIRED_LAYERS = ("placement", "gang", "ckpt", "collective", "serve")
 
 # hard acceptance gates, full-tier (BENCH_*) artifacts only — smoke
 # sizes are too small for the Fig 9 schedule gaps to show:
@@ -91,7 +118,97 @@ ALL_TIER_GATES = {
         ("risk/aware_identical_rerun", 0.0),
         ("risk/off_bit_identical", 0.0),
     ),
+    # telemetry plane acceptance: the live fabric replays the simulator
+    # event-for-event while recording, and the exported timeline covers
+    # every instrumented layer — exact at smoke sizes (virtual clocks)
+    "bench_telemetry": (
+        ("diff/zero_divergence", 0.0),
+        ("trace/layers_present", len(REQUIRED_LAYERS) - 1),
+        ("telemetry/spans_total", 0.0),
+        ("telemetry/decision_latency_count", 0.0),
+    ),
 }
+
+
+def _chrome_trace_errors(path: str) -> list:
+    """Why ``path`` is not a loadable Chrome trace-event JSON (empty
+    list = it is)."""
+    try:
+        with open(path) as f:
+            trace = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"unreadable trace ({e})"]
+    events = trace.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return ["trace has no traceEvents"]
+    bad = [e for e in events
+           if not isinstance(e, dict) or "ph" not in e or "name" not in e]
+    if bad:
+        return [f"{len(bad)} events lack ph/name"]
+    return []
+
+
+def _telemetry_errors(payload: dict) -> list:
+    """Schema-3 sidecar checks for one artifact (schema-2 artifacts
+    carry neither key and pass vacuously)."""
+    errors = []
+    summary_path = payload.get("telemetry_summary")
+    if summary_path:
+        try:
+            with open(summary_path) as f:
+                summary = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            return [f"unreadable telemetry summary ({e})"]
+        if payload.get("bench") in TELEMETRY_REQUIRED:
+            if not summary.get("spans_total"):
+                errors.append("telemetry summary has zero spans")
+            hist = summary.get("histograms", {})
+            if not hist.get("placement.decision_latency_s",
+                            {}).get("count"):
+                errors.append("placement.decision_latency_s histogram "
+                              "missing or empty")
+    elif payload.get("schema", 2) >= 3:
+        errors.append("schema>=3 artifact lacks telemetry_summary")
+    trace_path = payload.get("trace")
+    if trace_path:
+        errors += _chrome_trace_errors(trace_path)
+    return errors
+
+
+def _sidecar_artifacts() -> list:
+    """bench_telemetry's own exports: the Perfetto timeline must cover
+    every instrumented layer, the diff report must show zero
+    predicted-vs-live divergence."""
+    problems = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR,
+                                              "*_perfetto.json"))):
+        name = os.path.basename(path)
+        errs = _chrome_trace_errors(path)
+        if not errs:
+            with open(path) as f:
+                cats = {e.get("cat") for e in
+                        json.load(f)["traceEvents"]}
+            missing = [l for l in REQUIRED_LAYERS if l not in cats]
+            if missing:
+                errs = [f"layers missing from timeline: {missing}"]
+        problems += [(name, e) for e in errs]
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR,
+                                              "*_diff.json"))):
+        name = os.path.basename(path)
+        try:
+            with open(path) as f:
+                diff = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            problems.append((name, f"unreadable diff report ({e})"))
+            continue
+        if diff.get("divergences") != 0:
+            problems.append(
+                (name, f"predicted-vs-live divergences = "
+                       f"{diff.get('divergences')} (first: "
+                       f"{diff.get('first_divergence')})"))
+        if not isinstance(diff.get("phase_error"), dict):
+            problems.append((name, "diff report lacks phase_error"))
+    return problems
 
 
 def _baselines() -> dict:
@@ -104,9 +221,15 @@ def _baselines() -> dict:
 
 
 def main() -> int:
-    paths = sorted(glob.glob(os.path.join(RESULTS_DIR, "BENCH_*.json"))
+    # telemetry sidecars share the BENCH_/SMOKE_ prefix but are not
+    # bench artifacts; they get their own checks below
+    sidecar_suffixes = ("_telemetry.json", "_trace.json",
+                        "_perfetto.json", "_diff.json")
+    paths = sorted(p for p in
+                   glob.glob(os.path.join(RESULTS_DIR, "BENCH_*.json"))
                    + glob.glob(os.path.join(RESULTS_DIR,
-                                            "SMOKE_*.json")))
+                                            "SMOKE_*.json"))
+                   if not p.endswith(sidecar_suffixes))
     if not paths:
         print("no BENCH_*/SMOKE_* artifacts found", file=sys.stderr)
         return 1
@@ -166,9 +289,19 @@ def main() -> int:
                   f"{'; '.join(gated)}", file=sys.stderr)
             bad += 1
             continue
+        tel_errors = _telemetry_errors(payload)
+        if tel_errors:
+            print(f"FAIL {name}: telemetry: {'; '.join(tel_errors)}",
+                  file=sys.stderr)
+            bad += 1
+            continue
         print(f"ok   {name}: {len(metrics)} metrics "
               f"(bench={payload.get('bench')}, "
+              f"schema={payload.get('schema', 2)}, "
               f"wall={payload.get('wall_s')}s)")
+    for name, problem in _sidecar_artifacts():
+        print(f"FAIL {name}: {problem}", file=sys.stderr)
+        bad += 1
     return 1 if bad else 0
 
 

@@ -5,13 +5,28 @@ one benchmark; results land in results/bench.csv plus one standardized
 ``results/BENCH_<name>.json`` per benchmark (schema below) so the perf
 trajectory is machine-readable across PRs:
 
-    {"bench": str, "schema": 2, "unix_time": float, "wall_s": float,
+    {"bench": str, "schema": 3, "unix_time": float, "wall_s": float,
      "git_sha": str, "fleet": {...},
+     "sections": {section: wall_s},
+     "telemetry_summary": path, "trace": path,   # schema >= 3
      "metrics": {name: {"value": num, "unit": str, "note": str}}}
 
 ``git_sha`` is the commit the numbers were measured at and ``fleet``
 the benchmark module's ``FLEET`` dict (hosts / chips-per-host /
 scheduler config), so an artifact is attributable without the CSV.
+
+Schema 3 additions (schema-2 artifacts stay readable — every consumer
+treats the new keys as optional):
+
+* each benchmark runs under a fresh ``core.telemetry`` recorder; its
+  metrics summary lands at ``results/<prefix>_<bench>_telemetry.json``
+  and — on ``--tiny`` (the CI bench-smoke step) — a Perfetto-loadable
+  Chrome trace at ``results/<prefix>_<bench>_trace.json``.  Full-tier
+  runs skip the trace file (a full bench_makespan timeline is tens of
+  MB of JSON) but keep the summary.
+* ``sections`` attributes the bench's wall time to metric-name prefixes
+  (the part before the first "/"): each reported metric charges the
+  time since the previous report to its section.
 
 ``--tiny`` runs every benchmark at smoke sizes (the CI bench-smoke
 step): artifacts then land as ``results/SMOKE_<name>.json`` so the
@@ -30,6 +45,8 @@ import subprocess
 import sys
 import time
 
+from repro.core import telemetry
+
 BENCHES = [
     "bench_makespan",         # Fig 10
     "bench_scaling",          # Fig 11
@@ -39,6 +56,7 @@ BENCHES = [
     "bench_scheduler_scale",  # Fig 11 fix: sharded + vectorized engine
     "bench_churn",            # fleet churn: reclaim/fail + Young/Daly
     "bench_serving",          # continuous batching + SLO autoscaling
+    "bench_telemetry",        # predicted-vs-live divergence + Perfetto
 ]
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results")
@@ -65,20 +83,27 @@ def git_sha() -> str:
 
 
 def write_bench_json(bench: str, metrics, wall_s: float,
-                     tiny: bool = False, fleet=None) -> str:
+                     tiny: bool = False, fleet=None, sections=None,
+                     telemetry_summary=None, trace=None) -> str:
     prefix = "SMOKE" if tiny else "BENCH"
     path = os.path.join(os.path.abspath(RESULTS_DIR),
                         f"{prefix}_{bench}.json")
     payload = {
         "bench": bench,
-        "schema": 2,
+        "schema": 3,
         "unix_time": time.time(),
         "wall_s": round(wall_s, 2),
         "git_sha": git_sha(),
         "fleet": dict(fleet or {}),
+        "sections": {k: round(v, 3)
+                     for k, v in sorted((sections or {}).items())},
         "metrics": {name: {"value": value, "unit": unit, "note": note}
                     for name, value, unit, note in metrics},
     }
+    if telemetry_summary:
+        payload["telemetry_summary"] = telemetry_summary
+    if trace:
+        payload["trace"] = trace
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
     return path
@@ -90,15 +115,23 @@ def main() -> None:
     ap.add_argument("--tiny", action="store_true",
                     help="smoke sizes; artifacts go to SMOKE_*.json")
     args = ap.parse_args()
-    os.makedirs(os.path.abspath(RESULTS_DIR), exist_ok=True)
+    results_dir = os.path.abspath(RESULTS_DIR)
+    os.makedirs(results_dir, exist_ok=True)
+    prefix = "SMOKE" if args.tiny else "BENCH"
     rows = []
     current = ""
     current_metrics = []
+    sections = {}
+    t_last = [0.0]
     # stdout is real CSV (notes may contain commas -> quoted), matching
     # the results/bench.csv writer exactly
     stdout_csv = csv.writer(sys.stdout)
 
     def report(name, value, unit="", note=""):
+        now = time.time()
+        section = str(name).split("/", 1)[0]
+        sections[section] = sections.get(section, 0.0) + (now - t_last[0])
+        t_last[0] = now
         rows.append((current, name, value, unit, note))
         current_metrics.append((name, value, unit, note))
         stdout_csv.writerow([current, name, value, unit, note])
@@ -107,17 +140,36 @@ def main() -> None:
     for mod_name in ([args.only] if args.only else BENCHES):
         current = mod_name
         current_metrics = []
+        sections = {}
         mod = importlib.import_module(f"benchmarks.{mod_name}")
         t0 = time.time()
-        if "tiny" in inspect.signature(mod.run).parameters:
-            mod.run(report, tiny=args.tiny)
-        else:
-            mod.run(report)
+        t_last[0] = t0
+        # fresh recorder per bench: its summary (and, at smoke tier,
+        # the Perfetto trace) lands next to the artifact
+        tel = telemetry.enable(telemetry.Telemetry())
+        try:
+            if "tiny" in inspect.signature(mod.run).parameters:
+                mod.run(report, tiny=args.tiny)
+            else:
+                mod.run(report)
+        finally:
+            telemetry.disable()
         wall = time.time() - t0
         rows.append((mod_name, "bench_wall", round(wall, 1), "s", ""))
+        summary_path = os.path.join(
+            results_dir, f"{prefix}_{mod_name}_telemetry.json")
+        tel.write_summary(summary_path)
+        trace_path = None
+        if args.tiny:
+            trace_path = os.path.join(
+                results_dir, f"{prefix}_{mod_name}_trace.json")
+            tel.write_chrome_trace(trace_path)
         path = write_bench_json(mod_name, current_metrics, wall,
                                 tiny=args.tiny,
-                                fleet=getattr(mod, "FLEET", None))
+                                fleet=getattr(mod, "FLEET", None),
+                                sections=sections,
+                                telemetry_summary=summary_path,
+                                trace=trace_path)
         assert current_metrics, f"{mod_name} reported no metrics"
         print(f"# wrote {path}")
     if not args.tiny:

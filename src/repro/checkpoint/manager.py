@@ -18,7 +18,7 @@ import threading
 import time
 from typing import Any, Dict, List, Optional
 
-from repro.core import diffsync, snapshot as snap_mod
+from repro.core import diffsync, snapshot as snap_mod, telemetry
 
 
 class CheckpointManager:
@@ -143,6 +143,17 @@ class CheckpointManager:
                 "full_bytes": snap.nbytes,
                 "device_to_host_s": copy_s}
         self.stats.append(stat)
+        tel = telemetry.get()
+        if tel.enabled:
+            tel.count(f"ckpt.save.{payload['kind']}")
+            tel.count("ckpt.save.bytes", nbytes)
+            tel.observe("ckpt.device_to_host_s", copy_s)
+            tel.gauge("ckpt.chain_len", self._chain_len)
+            p1 = time.perf_counter()
+            tel.span_at("ckpt.save", p1 - (time.time() - t0), p1,
+                        track=f"gang:{self.job_id}", clock="wall",
+                        step=step, kind=payload["kind"], bytes=nbytes,
+                        full_bytes=snap.nbytes)
         return stat
 
     def wait(self) -> None:
@@ -175,6 +186,7 @@ class CheckpointManager:
     def restore(self, step: Optional[int] = None, shardings=None):
         """Load state at ``step`` (default: latest).  Diff checkpoints are
         replayed on top of their base full checkpoint."""
+        t0 = time.perf_counter()
         self.wait()
         entries = self._manifest()
         if not entries:
@@ -219,4 +231,12 @@ class CheckpointManager:
         snap = snap_mod.Snapshot(self.job_id, payload["step"], state,
                                  fingerprint=payload["fingerprint"])
         restored = snap_mod.restore(snap, shardings)
+        tel = telemetry.get()
+        if tel.enabled:
+            t1 = time.perf_counter()
+            tel.count("ckpt.restores")
+            tel.observe("ckpt.restore_s", t1 - t0)
+            tel.span_at("ckpt.restore", t0, t1,
+                        track=f"gang:{self.job_id}", clock="wall",
+                        step=payload["step"], kind=payload["kind"])
         return restored, payload["step"]

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core import comms, compat
+from repro.core import comms, compat, telemetry
 from repro.core.compat import shard_map
 from repro.kernels.collective_codec import ops as codec_ops
 
@@ -447,11 +447,18 @@ class CollectiveTuner:
                             ) -> comms.Topology:
         """Re-derive the dispatch entries for a gang whose placement
         just changed (attach / migrate / evacuate / rescale)."""
+        tel = telemetry.get()
+        t0 = _time.perf_counter() if tel.enabled else 0.0
         topo = comms.Topology.from_placement(placement)
         self.gangs[job_id] = topo
         self.rederivations += 1
         for b in range(comms.MIN_BUCKET, comms.MAX_BUCKET + 1):
             self._derive(topo, b)
+        if tel.enabled:
+            tel.count("collective.rederivations")
+            tel.span_at("collective.rederive", t0, _time.perf_counter(),
+                        track="collectives", clock="wall", job=job_id,
+                        hosts=topo.hosts, chips=topo.chips)
         return topo
 
     def forget(self, job_id: str) -> None:
@@ -475,11 +482,16 @@ class CollectiveTuner:
         topo = self._topo(gang_or_placement)
         bucket = comms.size_bucket(nbytes)
         if allowed is not None and set(allowed) != set(self.modes):
-            return self._derive(topo, bucket, modes=tuple(allowed))[0]
-        entry = self.table.get((topo.key, bucket))
-        if entry is None:
-            entry = self._derive(topo, bucket)
-        return entry[0]
+            mode = self._derive(topo, bucket, modes=tuple(allowed))[0]
+        else:
+            entry = self.table.get((topo.key, bucket))
+            if entry is None:
+                entry = self._derive(topo, bucket)
+            mode = entry[0]
+        tel = telemetry.get()
+        if tel.enabled:
+            tel.count(f"collective.dispatch.{mode}")
+        return mode
 
     def predicted_time(self, gang_or_placement,
                        nbytes: Optional[int] = None) -> float:
@@ -503,6 +515,13 @@ class CollectiveTuner:
         self.measured.setdefault((topo.key, bucket), {})[mode] = \
             float(seconds)
         self._derive(topo, bucket)
+        tel = telemetry.get()
+        if tel.enabled:
+            tel.count("collective.probes")
+            tel.observe(f"collective.probe_s.{mode}", float(seconds))
+            tel.instant("collective.probe", track="collectives",
+                        mode=mode, bucket=bucket,
+                        seconds=float(seconds))
 
     def probe(self, mesh: Mesh, nbytes: int = comms.DEFAULT_NBYTES,
               modes: Optional[Sequence[str]] = None, reps: int = 2

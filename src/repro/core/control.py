@@ -27,11 +27,36 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.core import telemetry
+
+
+def _plain(value: Any) -> Any:
+    """Coerce numpy scalars/arrays (and tuples) to plain Python."""
+    if isinstance(value, dict):
+        return {str(k): _plain(v) for k, v in value.items()}
+    if isinstance(value, (list, tuple)):
+        return [_plain(v) for v in value]
+    item = getattr(value, "item", None)
+    if item is not None and getattr(value, "shape", None) == ():
+        return item()
+    tolist = getattr(value, "tolist", None)
+    if tolist is not None:
+        return _plain(tolist())
+    return value
+
 
 @dataclasses.dataclass
 class Action:
     kind: str                      # checkpoint | migrate | rescale | recover
     payload: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        """JSON-plain dict: payload values coerced to Python scalars."""
+        return {"kind": self.kind, "payload": _plain(self.payload)}
+
+    @classmethod
+    def from_dict(cls, data: Dict[str, Any]) -> "Action":
+        return cls(kind=data["kind"], payload=dict(data.get("payload", {})))
 
 
 class EwmaStragglerDetector:
@@ -44,20 +69,30 @@ class EwmaStragglerDetector:
         self.patience = patience
         self.ewma: Optional[float] = None
         self.strikes = 0
+        self.flagged = 0
 
     def observe(self, step_time: float) -> bool:
         if self.ewma is None:
             self.ewma = step_time
             return False
+        tel = telemetry.get()
         slow = step_time > self.factor * self.ewma
         # slow steps do not pollute the baseline estimate
         if not slow:
             self.ewma = (1 - self.alpha) * self.ewma + self.alpha * step_time
             self.strikes = 0
+            if tel.enabled:
+                tel.gauge("straggler.ewma_s", self.ewma)
             return False
         self.strikes += 1
         if self.strikes >= self.patience:
             self.strikes = 0
+            self.flagged += 1
+            if tel.enabled:
+                tel.count("straggler.flagged")
+                tel.gauge("straggler.ewma_s", self.ewma)
+                tel.instant("straggler.flag", track="control",
+                            ewma_s=self.ewma, step_time_s=step_time)
             return True
         return False
 
@@ -74,6 +109,7 @@ class ControlPointRunner:
         self.failure_probe = failure_probe
         self.elastic_probe = elastic_probe
         self.history: List[Action] = []
+        self.straggler_migrations = 0
 
     def on_step(self, step: int, step_time: float,
                 world_size: int) -> List[Action]:
@@ -86,6 +122,10 @@ class ControlPointRunner:
                 and step % self.checkpoint_every == 0:
             actions.append(Action("checkpoint", {"step": step}))
         if self.straggler.observe(step_time):
+            self.straggler_migrations += 1
+            tel = telemetry.get()
+            if tel.enabled:
+                tel.count("straggler.migrations")
             actions.append(Action("migrate", {"reason": "straggler",
                                               "step": step}))
         if self.elastic_probe is not None:

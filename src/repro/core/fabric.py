@@ -63,6 +63,7 @@ payload is any object with
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple, Union
 
@@ -73,6 +74,7 @@ from jax.sharding import Mesh
 from repro.core import collectives as coll
 from repro.core import control as ctl
 from repro.core import diffsync
+from repro.core import telemetry
 from repro.core import elastic as elastic_mod
 from repro.core import snapshot as snap_mod
 from repro.core.granule import GranuleGroup
@@ -135,6 +137,31 @@ class GangWorkload:
         raise NotImplementedError
 
 
+def _gang_span(name: str):
+    """Wall-clock lifecycle span around a GangHandle method — zero-cost
+    (plain call-through) under the default no-op telemetry recorder."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(self, *args, **kwargs):
+            tel = telemetry.get()
+            if not tel.enabled:
+                return fn(self, *args, **kwargs)
+            t0 = time.perf_counter()
+            try:
+                return fn(self, *args, **kwargs)
+            finally:
+                pl = (self.alloc.placement
+                      if self.alloc is not None else [])
+                tel.count(f"gang.{name}")
+                tel.span_at(f"gang.{name}", t0, time.perf_counter(),
+                            track=f"gang:{self.job_id}", clock="wall",
+                            job=self.job_id, kind=self.kind,
+                            chips=len(self.devices),
+                            hosts=len({h for h, _ in pl}))
+        return wrapper
+    return deco
+
+
 class GangHandle:
     """One gang's lifecycle on a shared ``Fabric``.
 
@@ -181,6 +208,7 @@ class GangHandle:
         return len(self.devices)
 
     # ---- attach / detach (device + group bookkeeping) ----------------------
+    @_gang_span("attach")
     def attach(self, alloc: Allocation,
                devices: Optional[Sequence[Any]] = None) -> None:
         """Bind this gang to an engine allocation: claim concrete devices
@@ -248,6 +276,7 @@ class GangHandle:
                                "epoch": self.group.epoch})
         return state
 
+    @_gang_span("migrate")
     def migrate(self, state: Any) -> Tuple[Any, bool]:
         """Barrier-point live migration (paper §3.3, Fig 8).
 
@@ -271,6 +300,7 @@ class GangHandle:
         state = self._move_to(state, new_devices, "migrate")
         return state, changed
 
+    @_gang_span("evacuate")
     def evacuate(self, state: Any,
                  new_placement: Sequence[Tuple[int, int]]) -> Any:
         """Apply a drain-evacuation plan (``evacuation_plan``): engine
@@ -285,6 +315,7 @@ class GangHandle:
         return self._move_to(state, new_devices, "evacuate")
 
     # ---- rescale -----------------------------------------------------------
+    @_gang_span("rescale")
     def rescale(self, state: Any, new_world: int) -> Any:
         """Grow/shrink to ``new_world`` chips: release this gang's chips
         to the shared pool and let the engine carve the new sub-mesh
@@ -329,6 +360,7 @@ class GangHandle:
                         and np.asarray(x).dtype == np.asarray(y).dtype
                         for x, y in zip(la, lb)))
 
+    @_gang_span("checkpoint")
     def checkpoint(self, state: Any, step: int) -> snap_mod.Snapshot:
         """Periodic checkpoint: snapshot the gang's state to host memory
         without releasing anything — the rollback point a hard host
@@ -341,6 +373,8 @@ class GangHandle:
         checkpoint, so the recurring cost scales with the bytes the gang
         actually dirtied.  ``fail`` replays base+deltas and proves the
         chain bit-exact against the recorded fingerprint."""
+        tel = telemetry.get()
+        t_ckpt = time.perf_counter() if tel.enabled else 0.0
         snap = snap_mod.take(self.job_id, step, state)
         prev = self.last_checkpoint
         rebase = (self._ckpt_base is None
@@ -362,12 +396,22 @@ class GangHandle:
         self.ckpt_stats.append({"step": step, "kind": ckpt_kind,
                                 "bytes": shipped,
                                 "full_bytes": snap.nbytes})
+        if tel.enabled:
+            tel.count(f"ckpt.{ckpt_kind}")
+            tel.count("ckpt.bytes_shipped", shipped)
+            tel.count("ckpt.bytes_full", snap.nbytes)
+            tel.gauge("ckpt.chain_len", len(self._ckpt_deltas))
+            tel.span_at("ckpt.save", t_ckpt, time.perf_counter(),
+                        track=f"gang:{self.job_id}", clock="wall",
+                        step=step, kind=ckpt_kind, bytes=shipped,
+                        full_bytes=snap.nbytes)
         self.epoch_log.append(
             {"kind": "checkpoint", "step": step,
              "fingerprint": snap.fingerprint,
              "ckpt_kind": ckpt_kind, "bytes": shipped})
         return snap
 
+    @_gang_span("fail")
     def fail(self, dead_hosts: Sequence[int]) -> snap_mod.Snapshot:
         """A host under this gang hard-failed: the live state is gone.
         Surviving devices return to the pool (dead/draining ones are
@@ -389,7 +433,10 @@ class GangHandle:
         # failure proves the delta checkpoints reconstruct the rollback
         # point bit-exactly (fingerprint check against the value
         # recorded when the checkpoint was taken)
+        tel = telemetry.get()
         if self._ckpt_base is not None and self._ckpt_deltas:
+            t_replay = time.perf_counter()
+            chain_len = len(self._ckpt_deltas)
             snap = self._ckpt_base
             for link in self._ckpt_deltas:
                 snap = snap_mod.apply_delta(snap, link["diffs"],
@@ -399,6 +446,11 @@ class GangHandle:
                         f"{self.job_id}: delta-chain replay diverged "
                         f"at step {link['step']}")
             self.snapshot = snap
+            if tel.enabled:
+                tel.count("ckpt.chain_replays")
+                tel.observe("ckpt.replay_verify_s",
+                            time.perf_counter() - t_replay)
+                tel.gauge("ckpt.replayed_chain_len", chain_len)
         else:
             self.snapshot = self.last_checkpoint
         # the chain is consumed: the post-recovery baseline checkpoint
@@ -411,6 +463,7 @@ class GangHandle:
         return self.snapshot
 
     # ---- preempt / resume ---------------------------------------------------
+    @_gang_span("preempt")
     def preempt(self, state: Any, step: int,
                 release_engine: bool = True) -> snap_mod.Snapshot:
         """Checkpoint + release: snapshot the gang's state to host
@@ -426,6 +479,7 @@ class GangHandle:
                                "fingerprint": self.snapshot.fingerprint})
         return self.snapshot
 
+    @_gang_span("resume")
     def resume(self, alloc: Optional[Allocation] = None,
                verify: bool = True) -> Tuple[Any, int]:
         """Re-place and restore the preempted gang bit-exactly.
@@ -465,6 +519,7 @@ class GangHandle:
         return self.group.size if self.group is not None else 0
 
     # ---- release -----------------------------------------------------------
+    @_gang_span("release")
     def release(self) -> None:
         """Return the gang's chips to the shared pool."""
         if self.status == "running":
@@ -821,6 +876,11 @@ class Fabric:
             # hand the steal-budget lifecycle back to direct callers
             # (the runner's event loop owned it during the trace)
             self.engine.external_budget_reset = False
+        tel = telemetry.get()
+        if tel.enabled:
+            # close item 2's loop: measured per-(host-kind, job-kind)
+            # step times land in the cost model's calibration store
+            tel.feed_cost_model(self.engine.cost_model)
         return TraceExecution(result=result, live=dict(runner.records),
                               wall_s=time.time() - t0)
 
@@ -923,7 +983,18 @@ class LiveTraceRunner(Simulator):
         wl = self.workloads[job_id]
         if wl.done:
             return
-        metrics = wl.run_step(self.handles[job_id])
+        handle = self.handles[job_id]
+        tel = telemetry.get()
+        if tel.enabled:
+            t0 = time.perf_counter()
+            metrics = wl.run_step(handle)
+            dt = time.perf_counter() - t0
+            hk = str(getattr(handle.devices[0], "device_kind", "cpu")
+                     if handle.devices else "cpu")
+            tel.step_time(hk, handle.kind or "train", dt)
+            tel.count("gang.steps")
+        else:
+            metrics = wl.run_step(handle)
         rec = self._record(job_id)
         rec["steps"] = wl.steps_done
         rec["metrics"] = metrics

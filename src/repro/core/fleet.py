@@ -58,6 +58,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.placement import Placement, PlacementEngine
 
 # Default drain window for spot reclaims (the cloud's two-minute warning,
@@ -138,6 +139,16 @@ class FleetController:
             out.evacuations, out.stranded = self.engine.evacuation_plan(
                 ev.hosts, kinds=kinds)
             out.deadline = now + ev.drain_s
+        tel = telemetry.get()
+        if tel.enabled:
+            tel.count(f"fleet.{ev.kind}")
+            tel.instant(f"fleet.{ev.kind}", t=now, track="fleet",
+                        clock="virtual",
+                        hosts=[int(h) for h in (ev.hosts or [])],
+                        joined=[int(h) for h in out.joined],
+                        failed=list(out.failed),
+                        evacuations=len(out.evacuations),
+                        stranded=list(out.stranded))
         return out
 
     def expire(self, ev: FleetEvent,

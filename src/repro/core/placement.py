@@ -98,11 +98,12 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import math
+import time
 from typing import (Dict, List, Mapping, Optional, Sequence, Tuple, Union)
 
 import numpy as np
 
-from repro.core import comms
+from repro.core import comms, telemetry
 
 Placement = List[Tuple[int, int]]          # [(host, n_chips)] sorted
 
@@ -273,12 +274,15 @@ class CostModel:
         # The fraction is *configured* (a deterministic parameter), so
         # predicted and live traces charge identically and Action logs
         # stay bit-equal; live-measured bytes land in ``ckpt_observed``
+        # and live-measured step times in ``step_observed``
         # via ``observe_checkpoint`` as statistics only, to calibrate
         # the next run's fraction — never consumed mid-trace.
         # None keeps the pre-delta behaviour: every checkpoint is full.
         self.ckpt_delta_fraction = ckpt_delta_fraction
         self.ckpt_rebase_every = max(1, int(ckpt_rebase_every))
         self.ckpt_observed: List[Tuple[int, int]] = []
+        self.step_observed: Dict[Tuple[str, Optional[str]],
+                                 List[float]] = {}
         # risk term (DESIGN.md §13): with ``risk_tau_s`` set (the gang
         # checkpoint cadence, opt-in like collective_bytes /
         # serve_slo_s), ``score``-consuming policies multiply candidates
@@ -338,6 +342,41 @@ class CostModel:
         if full <= 0:
             return None
         return sum(d for d, _ in self.ckpt_observed) / full
+
+    def observe_step(self, host_kind: str, job_kind: Optional[str],
+                     step_s: float, count: int = 1) -> None:
+        """Record measured wall step time for (host-kind, job-kind) —
+        the telemetry plane's calibration feed (ROADMAP item 2).
+        Statistics only, like ``observe_checkpoint``: predictions keep
+        using the configured tables so pinned traces stay bit-equal;
+        the *next* run may fit ``step_compute_s`` / speed factors from
+        ``observed_step_times``."""
+        key = (str(host_kind), job_kind if job_kind is None
+               else str(job_kind))
+        agg = self.step_observed.setdefault(key, [0, 0.0])
+        agg[0] += int(count)
+        agg[1] += float(step_s) * int(count)
+
+    def observed_step_times(self) -> Dict[Tuple[str, Optional[str]],
+                                          Tuple[int, float]]:
+        """(host_kind, job_kind) -> (count, mean measured seconds)."""
+        return {k: (int(v[0]), v[1] / v[0])
+                for k, v in self.step_observed.items() if v[0]}
+
+    def observed_step_time(self, host_kind: Optional[str] = None,
+                           job_kind: Optional[str] = None
+                           ) -> Optional[float]:
+        """Mean measured step time over matching observations (either
+        key may be None = any)."""
+        n, tot = 0, 0.0
+        for (hk, jk), (c, s) in self.step_observed.items():
+            if host_kind is not None and hk != host_kind:
+                continue
+            if job_kind is not None and jk != job_kind:
+                continue
+            n += c
+            tot += s
+        return (tot / n) if n else None
 
     def beta(self, kind: Optional[str] = None) -> float:
         """Per-job-kind cross-host penalty; ``default_beta`` when the
@@ -1648,10 +1687,56 @@ class PlacementEngine:
         self._policy_cache[key] = (policy, pol)
         return pol
 
+    # ---- telemetry ----------------------------------------------------------
+    def _record_decision(self, name: str, t0: float, *,
+                         n: Optional[int] = None,
+                         placed: Optional[bool] = None,
+                         policy: Union[str, PlacementPolicy, None] = None,
+                         kind: Optional[str] = None,
+                         plans: Optional[int] = None) -> None:
+        """Record one scheduling decision's span + latency histogram.
+        Only called from the public decision wrappers, and only when a
+        live telemetry recorder is installed."""
+        tel = telemetry.get()
+        t1 = time.perf_counter()
+        dt = t1 - t0
+        tel.count(f"placement.{name}")
+        tel.observe("placement.decision_latency_s", dt)
+        tel.observe(f"placement.{name}_latency_s", dt)
+        pol = policy if isinstance(policy, str) else (
+            "default" if policy is None else type(policy).__name__)
+        steal = getattr(self, "_steal_left", None)
+        budget = getattr(self, "steal_budget", 0)
+        attrs = {"policy": pol, "kind": kind,
+                 "engine": type(self).__name__,
+                 "hops": int(self.decision_hops),
+                 "candidates": int((self.free > 0).sum())}
+        if n is not None:
+            attrs["n"] = int(n)
+        if placed is not None:
+            attrs["placed"] = bool(placed)
+        if plans is not None:
+            attrs["plans"] = int(plans)
+        if budget and steal is not None and steal != float("inf"):
+            attrs["steal_spent"] = int(budget - steal)
+        tel.span_at(f"placement.{name}", t0, t1, track="sched",
+                    clock="wall", **attrs)
+
     # ---- reservation lifecycle ---------------------------------------------
     def reserve(self, n: int,
                 policy: Union[str, PlacementPolicy, None] = None,
                 kind: Optional[str] = None) -> Optional[Reservation]:
+        if not telemetry.get().enabled:
+            return self._reserve_impl(n, policy, kind=kind)
+        t0 = time.perf_counter()
+        res = self._reserve_impl(n, policy, kind=kind)
+        self._record_decision("reserve", t0, n=n, placed=res is not None,
+                              policy=policy, kind=kind)
+        return res
+
+    def _reserve_impl(self, n: int,
+                      policy: Union[str, PlacementPolicy, None] = None,
+                      kind: Optional[str] = None) -> Optional[Reservation]:
         if _VECTORIZED:
             if n > self._idle_chips:
                 # no policy can place n chips with fewer idle (every
@@ -1722,6 +1807,26 @@ class PlacementEngine:
                         policy: Union[str, PlacementPolicy, None] = None,
                         preempt: Optional[PreemptPolicy] = None,
                         kind: Optional[str] = None) -> Optional[List[str]]:
+        if not telemetry.get().enabled:
+            return self._preemption_impl(n, priority, priorities,
+                                         policy=policy, preempt=preempt,
+                                         kind=kind)
+        t0 = time.perf_counter()
+        plan = self._preemption_impl(n, priority, priorities,
+                                     policy=policy, preempt=preempt,
+                                     kind=kind)
+        self._record_decision("preemption_plan", t0, n=n,
+                              placed=plan is not None, policy=policy,
+                              kind=kind,
+                              plans=len(plan) if plan else 0)
+        return plan
+
+    def _preemption_impl(self, n: int, priority: int,
+                         priorities: Dict[str, int],
+                         policy: Union[str, PlacementPolicy, None] = None,
+                         preempt: Optional[PreemptPolicy] = None,
+                         kind: Optional[str] = None
+                         ) -> Optional[List[str]]:
         """Plan victims (see ``PreemptPolicy.plan``) against the live
         allocation table; the caller checkpoints + releases + requeues."""
         return (preempt or PreemptPolicy()).plan(self, n, priority,
@@ -1730,6 +1835,20 @@ class PlacementEngine:
 
     # ---- migration (defragmentation at barrier points) ------------------------
     def migration_plan(self, allocs: Sequence[Allocation],
+                       kinds: Optional[Mapping[str, str]] = None,
+                       remaining: Optional[Mapping[str, float]] = None
+                       ) -> List[Tuple[str, Placement]]:
+        if not telemetry.get().enabled:
+            return self._migration_impl(allocs, kinds=kinds,
+                                        remaining=remaining)
+        t0 = time.perf_counter()
+        plans = self._migration_impl(allocs, kinds=kinds,
+                                     remaining=remaining)
+        self._record_decision("migration_plan", t0, n=len(allocs),
+                              plans=len(plans))
+        return plans
+
+    def _migration_impl(self, allocs: Sequence[Allocation],
                        kinds: Optional[Mapping[str, str]] = None,
                        remaining: Optional[Mapping[str, float]] = None
                        ) -> List[Tuple[str, Placement]]:
@@ -1963,6 +2082,18 @@ class PlacementEngine:
     def evacuation_plan(self, hosts: Optional[Sequence[int]] = None,
                         kinds: Optional[Mapping[str, str]] = None
                         ) -> Tuple[List[Tuple[str, Placement]], List[str]]:
+        if not telemetry.get().enabled:
+            return self._evacuation_impl(hosts, kinds=kinds)
+        t0 = time.perf_counter()
+        plans, stranded = self._evacuation_impl(hosts, kinds=kinds)
+        self._record_decision("evacuation_plan", t0, plans=len(plans),
+                              n=len(stranded))
+        return plans, stranded
+
+    def _evacuation_impl(self, hosts: Optional[Sequence[int]] = None,
+                         kinds: Optional[Mapping[str, str]] = None
+                         ) -> Tuple[List[Tuple[str, Placement]],
+                                    List[str]]:
         """Plan moves off doomed hosts (``hosts``; default: everything
         draining) — the graceful-drain half of a lease reclaim.
 
@@ -2026,6 +2157,24 @@ class PlacementEngine:
                     policy: Union[str, PlacementPolicy, None] = None,
                     kind: Optional[str] = None
                     ) -> Optional[Placement]:
+        if not telemetry.get().enabled:
+            return self._shrink_impl(worlds, credit=credit, avoid=avoid,
+                                     policy=policy, kind=kind)
+        t0 = time.perf_counter()
+        p = self._shrink_impl(worlds, credit=credit, avoid=avoid,
+                              policy=policy, kind=kind)
+        self._record_decision("shrink_plan", t0,
+                              n=max(worlds) if len(worlds) else 0,
+                              placed=p is not None, policy=policy,
+                              kind=kind)
+        return p
+
+    def _shrink_impl(self, worlds: Sequence[int],
+                     credit: Sequence[Tuple[int, int]] = (),
+                     avoid: Sequence[int] = (),
+                     policy: Union[str, PlacementPolicy, None] = None,
+                     kind: Optional[str] = None
+                     ) -> Optional[Placement]:
         """Shrink-before-rollback (DESIGN.md §13): the largest world in
         ``worlds`` (descending; see ``elastic.shrink_worlds``) placeable
         on surviving capacity — draining hosts and ``avoid`` are
@@ -2314,9 +2463,9 @@ class ShardedPlacementEngine(PlacementEngine):
                            else ctx.sliced(lo, hi))
 
     # ---- placement ----------------------------------------------------------
-    def reserve(self, n: int,
-                policy: Union[str, PlacementPolicy, None] = None,
-                kind: Optional[str] = None) -> Optional[Reservation]:
+    def _reserve_impl(self, n: int,
+                      policy: Union[str, PlacementPolicy, None] = None,
+                      kind: Optional[str] = None) -> Optional[Reservation]:
         pol = self._resolve(policy)
         self.decision_hops = 0
         if not self.external_budget_reset:
@@ -2395,11 +2544,12 @@ class ShardedPlacementEngine(PlacementEngine):
         return sorted(parts), consults
 
     # ---- preemption ---------------------------------------------------------
-    def preemption_plan(self, n: int, priority: int,
-                        priorities: Dict[str, int],
-                        policy: Union[str, PlacementPolicy, None] = None,
-                        preempt: Optional[PreemptPolicy] = None,
-                        kind: Optional[str] = None) -> Optional[List[str]]:
+    def _preemption_impl(self, n: int, priority: int,
+                         priorities: Dict[str, int],
+                         policy: Union[str, PlacementPolicy, None] = None,
+                         preempt: Optional[PreemptPolicy] = None,
+                         kind: Optional[str] = None
+                         ) -> Optional[List[str]]:
         """Shard-local victim planning: each shard (by idle throughput)
         plans against its own gangs and fit-probes its own slice, so the
         arrival lands entirely inside the shard that evicts for it.
@@ -2424,15 +2574,15 @@ class ShardedPlacementEngine(PlacementEngine):
                 return plan
         if not self._spend_steal():     # escalation is a cross-shard steal
             return None
-        return super().preemption_plan(n, priority, priorities,
-                                       policy=policy, preempt=pp,
-                                       kind=kind)
+        return super()._preemption_impl(n, priority, priorities,
+                                        policy=policy, preempt=pp,
+                                        kind=kind)
 
     # ---- migration ----------------------------------------------------------
-    def migration_plan(self, allocs: Sequence[Allocation],
-                       kinds: Optional[Mapping[str, str]] = None,
-                       remaining: Optional[Mapping[str, float]] = None
-                       ) -> List[Tuple[str, Placement]]:
+    def _migration_impl(self, allocs: Sequence[Allocation],
+                        kinds: Optional[Mapping[str, str]] = None,
+                        remaining: Optional[Mapping[str, float]] = None
+                        ) -> List[Tuple[str, Placement]]:
         """Shard-local defragmentation: a gang inside one shard is
         re-planned against that shard's slice only (moves never leave
         the shard); a gang already spanning shards escalates to global

@@ -99,6 +99,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core import placement as placement_mod
+from repro.core import telemetry
 from repro.core.control import Action
 from repro.core.fleet import (FleetController, FleetEvent,
                               HazardEstimator, blast_groups,
@@ -221,6 +222,10 @@ class TraceResult:
     # restored to their submitted width once capacity returned
     shrinks: int = 0
     regrows: int = 0
+    # migrations the straggler detector triggered (Actions with
+    # payload reason="straggler") — 0 in pure simulation, which never
+    # models stragglers, so pinned traces stay bit-compatible
+    straggler_migrations: int = 0
 
     def makespans(self, jobs: Sequence[Job]) -> Dict[str, float]:
         """Per-job makespan (finish - arrival) for the jobs that finished."""
@@ -1085,16 +1090,32 @@ class Simulator:
             if had_queue and not queue and not pending_arrivals \
                     and drain_time == 0.0:
                 drain_time = now
-        return TraceResult(makespan=now, exec_times=exec_times,
-                           idle_samples=idle_samples, migrations=migrations,
-                           waited=waited, queue_drain_time=drain_time,
-                           cross_host_fractions=chis,
-                           preemptions=preemptions,
-                           finish_order=finish_order,
-                           finish_times=finish_times, actions=actions,
-                           recoveries=recoveries, lost_work_s=lost_work,
-                           evacuations=evacuations, shrinks=shrinks,
-                           regrows=regrows)
+        result = TraceResult(
+            makespan=now, exec_times=exec_times,
+            idle_samples=idle_samples, migrations=migrations,
+            waited=waited, queue_drain_time=drain_time,
+            cross_host_fractions=chis,
+            preemptions=preemptions,
+            finish_order=finish_order,
+            finish_times=finish_times, actions=actions,
+            recoveries=recoveries, lost_work_s=lost_work,
+            evacuations=evacuations, shrinks=shrinks,
+            regrows=regrows,
+            straggler_migrations=sum(
+                1 for a in actions if a.kind == "migrate"
+                and a.payload.get("reason") == "straggler"))
+        tel = telemetry.get()
+        if tel.enabled:
+            # render the whole virtual-clock schedule as spans/instants
+            # (same schema the live wall-clock spans use) and fold the
+            # headline aggregates into the metrics summary
+            tel.record_actions(actions, clock="virtual")
+            tel.count("sim.runs")
+            tel.count("sim.actions", len(actions))
+            tel.gauge("sim.makespan_s", now)
+            tel.gauge("sim.migrations", migrations)
+            tel.gauge("sim.preemptions", preemptions)
+        return result
 
 
 def run_baselines(jobs: List[Job], hosts: int, chips_per_host: int = 8,

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import ARCH_IDS, reduced_config
+from repro.core import telemetry
 from repro.models import transformer as tf
 from repro.runtime.admission import (ARRIVAL_REGIMES, request_stream,
                                      run_fixed_batch, run_open_loop)
@@ -76,7 +77,14 @@ def main():
     ap.add_argument("--target-p99-ms", type=float, default=500.0,
                     help="SLO: p99 per-token latency ceiling")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--emit-trace", metavar="PATH", default=None,
+                    help="record telemetry and write a Chrome trace-"
+                         "event JSON (Perfetto-loadable) to PATH; the "
+                         "metrics summary lands at PATH + "
+                         "'.summary.json'")
     args = ap.parse_args()
+
+    tel = (telemetry.enable() if args.emit_trace else telemetry.get())
 
     cfg = reduced_config(args.arch)
     key = jax.random.PRNGKey(args.seed)
@@ -138,6 +146,10 @@ def main():
         out["continuous_speedup"] = round(
             c["tokens_per_virtual_s"]
             / max(f["tokens_per_virtual_s"], 1e-9), 3)
+    if args.emit_trace:
+        tel.write_chrome_trace(args.emit_trace)
+        tel.write_summary(args.emit_trace + ".summary.json")
+        out["emit_trace"] = args.emit_trace
     print(json.dumps(out, indent=1))
 
 

@@ -34,6 +34,7 @@ import jax
 from repro.configs.registry import reduced_config
 from repro.core import fleet as fleet_mod
 from repro.core import simulator as sim
+from repro.core import telemetry
 from repro.core.fabric import Fabric
 from repro.core.placement import derive_capacities
 from repro.data.pipeline import DataConfig
@@ -111,7 +112,15 @@ def main():
                          "interval from measured delta bytes after each "
                          "rebase window (live only; Action logs then "
                          "diverge from the prediction by design)")
+    ap.add_argument("--emit-trace", metavar="PATH", default=None,
+                    help="record telemetry and write a Chrome trace-"
+                         "event JSON (Perfetto-loadable) to PATH; a "
+                         "metrics summary (with the predicted-vs-live "
+                         "diff_traces report) lands next to it at "
+                         "PATH + '.summary.json'")
     args = ap.parse_args()
+
+    tel = (telemetry.enable() if args.emit_trace else telemetry.get())
 
     all_devices = list(jax.devices())
     # churn regimes with joins draw from staged spares: generate the
@@ -217,6 +226,18 @@ def main():
         shrink_recovery=args.risk_aware,
         adapt_cadence=args.adapt_cadence)
     live = ex.result
+    diff = telemetry.diff_traces(predicted, live)
+    if args.emit_trace:
+        tel.write_chrome_trace(args.emit_trace)
+        summary = tel.summary()
+        summary["diff_traces"] = diff
+        summary["observed_step_times"] = {
+            f"{hk}/{jk}": {"count": n, "mean_s": mean}
+            for (hk, jk), (n, mean)
+            in sorted(cost_model.observed_step_times().items())}
+        with open(args.emit_trace + ".summary.json", "w") as f:
+            json.dump(telemetry._plain(summary), f, indent=1,
+                      sort_keys=True)
     print(json.dumps({
         "devices": len(fabric.devices),
         "hosts": fabric.engine.hosts,
@@ -245,6 +266,8 @@ def main():
         "predicted_order": predicted.finish_order,
         "live_order": live.finish_order,
         "order_matches": live.finish_order == predicted.finish_order,
+        "diff_divergences": diff["divergences"],
+        "emit_trace": args.emit_trace,
         "risk_aware": args.risk_aware,
         "adapt_cadence": args.adapt_cadence,
         "preemptions": live.preemptions,

@@ -29,6 +29,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import telemetry
 from repro.core.simulator import ARRIVAL_REGIMES, arrival_times
 from repro.runtime.serve_loop import Request
 
@@ -81,9 +82,18 @@ class AdmissionQueue:
     def push(self, req: Request) -> None:
         heapq.heappush(self._heap,
                        (req.priority, req.arrival, req.rid, req))
+        tel = telemetry.get()
+        if tel.enabled:
+            tel.count("serve.queued")
+            tel.gauge("serve.queue_depth", len(self._heap),
+                      t=req.arrival)
 
     def pop(self) -> Request:
-        return heapq.heappop(self._heap)[3]
+        req = heapq.heappop(self._heap)[3]
+        tel = telemetry.get()
+        if tel.enabled:
+            tel.gauge("serve.queue_depth", len(self._heap))
+        return req
 
     def peek(self) -> Optional[Request]:
         return self._heap[0][3] if self._heap else None
@@ -108,7 +118,11 @@ class LatencyWindow:
     def record(self, req: Request) -> None:
         if req.t_done is None or not req.out:
             return
-        self._samples.append((req.t_done - req.arrival) / len(req.out))
+        lat = (req.t_done - req.arrival) / len(req.out)
+        self._samples.append(lat)
+        tel = telemetry.get()
+        if tel.enabled:
+            tel.observe("serve.latency_per_token_s", lat)
         if len(self._samples) > self.window:
             del self._samples[:-self.window]
 

@@ -36,6 +36,7 @@ snapshot carries the exact lane contents, garbage included.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Sequence
 
 import jax
@@ -44,6 +45,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import MAMBA, MLSTM, SLSTM, ArchConfig
+from repro.core import telemetry
 from repro.core.fabric import GangHandle
 from repro.models import model as model_mod
 from repro.models import transformer as tf
@@ -458,6 +460,13 @@ class ContinuousServeLoop:
         self.stats.admitted += 1
         if now is not None:
             req.t_admit = now
+        tel = telemetry.get()
+        if tel.enabled:
+            tel.count("serve.admitted")
+            tel.gauge("serve.slot_occupancy", self.active / self.slots,
+                      t=now)
+            if now is not None:
+                tel.observe("serve.queue_wait_s", now - req.arrival)
         return slot
 
     def _free(self, slot: int) -> None:
@@ -477,11 +486,15 @@ class ContinuousServeLoop:
         act = [i for i in range(self.slots) if self._reqs[i] is not None]
         if not act:
             return 0
+        tel = telemetry.get()
+        t_step = time.perf_counter() if tel.enabled else 0.0
         cur = np.asarray(self._cur)
         for i in act:
             r = self._reqs[i]
             if not r.out and now is not None:
                 r.t_first = now
+                if tel.enabled:
+                    tel.observe("serve.ttft_s", now - r.arrival)
             r.out.append(int(cur[i]))
         pos = np.where(self._occ(), self._plen + self._t, 0)
         pos = jnp.asarray(pos[:, None].astype(np.int32))
@@ -491,9 +504,22 @@ class ContinuousServeLoop:
         for i in act:
             self._t[i] += 1
             if self._t[i] >= self._max_new[i]:
+                r = self._reqs[i]
                 if now is not None:
-                    self._reqs[i].t_done = now
+                    r.t_done = now
+                    if tel.enabled and r.t_first is not None and r.out:
+                        tel.observe("serve.per_token_s",
+                                    (now - r.t_first)
+                                    / max(1, len(r.out)))
                 self._free(i)
+        if tel.enabled:
+            tel.count("serve.decoded_tokens", len(act))
+            tel.gauge("serve.slot_occupancy", self.active / self.slots,
+                      t=now)
+            tel.span_at("serve.decode_step", t_step,
+                        time.perf_counter(), track="serve",
+                        clock="wall", lanes=len(act),
+                        occupancy=self.active / self.slots)
         self.stats.decoded_tokens += len(act)
         self.stats.steps += 1
         return len(act)

@@ -275,7 +275,7 @@ class FaabricTrainRuntime:
         self.ckpt.save(0, state, blocking=True)
         step = 0
         losses = {}
-        recoveries = rescales = migrations = 0
+        recoveries = rescales = migrations = straggler_migrations = 0
         while step < rt.total_steps:
             # ---- control point A: failure detection before the step ----
             if step in rt.inject_failures and recoveries < 8:
@@ -304,6 +304,8 @@ class FaabricTrainRuntime:
                 elif act.kind == "migrate":
                     state = self._migrate_gang(state)
                     migrations += 1
+                    if act.payload.get("reason") == "straggler":
+                        straggler_migrations += 1
                 elif act.kind == "rescale":
                     state, resid = self._rescale(state, resid,
                                                  act.payload["to"])
@@ -312,7 +314,9 @@ class FaabricTrainRuntime:
         self.ckpt.wait()
         return state, {"losses": [losses[s] for s in sorted(losses)],
                        "recoveries": recoveries, "rescales": rescales,
-                       "migrations": migrations, "log": self.log}
+                       "migrations": migrations,
+                       "straggler_migrations": straggler_migrations,
+                       "log": self.log}
 
     def release(self) -> None:
         """Return the gang's chips to the shared fabric."""
